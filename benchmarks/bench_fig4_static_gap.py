@@ -1,0 +1,76 @@
+"""Fig. 4 reproduction: dynamic-compiler performance vs static compilation.
+
+Paper: with the static fallback disabled and *static* inputs, DISC's
+dynamic path achieves 74.5%-91.4% (avg 85%) of the fully static compiler.
+Our static compiler is exact-shape jit of the raw function (XLA with full
+shape knowledge); the dynamic path is the bucket-padded masked executor.
+Each workload runs at fixed shapes that sit at the WORST point of a bucket
+(just above a boundary → maximal padding waste) and at a bucket-aligned
+shape, reporting both.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.core.bucketing import BucketPolicy
+from repro.core.runtime import DiscEngine
+
+from .workloads import WORKLOADS
+
+N = 30
+
+
+def _time(f, args, n=N):
+    f(*args)  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = f(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / n
+
+
+def main(csv: List[str]):
+    aligned, worst, healed = [], [], []
+    for name, maker in WORKLOADS.items():
+        fn, specs, gen = maker()
+        static_fn = jax.jit(fn)
+        eng = DiscEngine(fn, specs, name=name,
+                         policy=BucketPolicy(kind="pow2", granule=32))
+        # §4.4: an engine with static escalation heals hot worst-case shapes
+        eng_esc = DiscEngine(fn, specs, name=name + "_esc",
+                             policy=BucketPolicy(kind="pow2", granule=32),
+                             escalation_threshold=3)
+        for label, s, sink in (("aligned", 128, aligned),
+                               ("worst", 129, worst)):
+            args = gen(np.random.RandomState(0), s)
+            t_static = _time(static_fn, args)
+            t_dyn = _time(eng, args)
+            ratio = t_static / t_dyn
+            sink.append(ratio)
+            csv.append(f"fig4_{name}_{label},{t_dyn * 1e6:.1f},"
+                       f"static_us={t_static * 1e6:.1f}"
+                       f" dyn/static={ratio * 100:.1f}%")
+        args = gen(np.random.RandomState(0), 129)
+        t_static = _time(static_fn, args)
+        for _ in range(5):              # cross the escalation threshold so
+            eng_esc(*args)              # the exact compile lands in warmup
+        t_heal = _time(eng_esc, args)   # steady state: §4.4 exact path
+        healed.append(t_static / t_heal)
+        csv.append(f"fig4_{name}_worst_escalated,{t_heal * 1e6:.1f},"
+                   f"dyn/static={t_static / t_heal * 100:.1f}%"
+                   f" (hot shape -> §4.4 static specialization)")
+    csv.append(
+        f"fig4_avg,,aligned={np.mean(aligned) * 100:.1f}% "
+        f"worst-of-bucket={np.mean(worst) * 100:.1f}% "
+        f"worst+escalation={np.mean(healed) * 100:.1f}% "
+        f"(paper pure-dynamic: 85%, range 74.5-91.4%)")
+
+
+if __name__ == "__main__":
+    out: List[str] = []
+    main(out)
+    print("\n".join(out))

@@ -1,0 +1,45 @@
+"""Roofline table aggregation: reads reports/dryrun/*/*.json (produced by
+launch/dryrun.py) and emits the per-(arch x cell x mesh) roofline rows for
+EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List
+
+REPORTS = pathlib.Path(__file__).resolve().parents[1] / "reports" / "dryrun"
+
+
+def main(csv: List[str]):
+    if not REPORTS.exists():
+        csv.append("roofline,,(no dry-run reports; run launch/dryrun.py)")
+        return
+    rows = []
+    for mesh_dir in sorted(REPORTS.iterdir()):
+        for f in sorted(mesh_dir.glob("*.json")):
+            d = json.loads(f.read_text())
+            if d.get("status") != "ok":
+                csv.append(f"roofline_{mesh_dir.name}_{f.stem},,FAILED: "
+                           f"{d.get('error', '?')[:80]}")
+                continue
+            rows.append(d)
+            csv.append(
+                f"roofline_{mesh_dir.name}_{d['arch']}__{d['cell']},,"
+                f"t_comp={d['t_compute_s']:.3e}s"
+                f" t_mem={d['t_memory_s']:.3e}s"
+                f" t_coll={d['t_collective_s']:.3e}s"
+                f" dominant={d['dominant']}"
+                f" useful={d['useful_flops_ratio']:.2f}"
+                f" frac={d['roofline_fraction']:.3f}")
+    if rows:
+        n_ok = len(rows)
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        csv.append(f"roofline_summary,,cells_ok={n_ok}"
+                   f" worst={worst['arch']}x{worst['cell']}"
+                   f"@{worst['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    out: List[str] = []
+    main(out)
+    print("\n".join(out))

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Run:
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,table2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List
+
+from . import (bench_buffers, bench_compile_overhead, bench_fig3_frameworks,
+               bench_fig4_static_gap, bench_roofline, bench_table2_nimble,
+               bench_table3_kernels)
+
+SUITES = {
+    "fig3": bench_fig3_frameworks.main,
+    "table2": bench_table2_nimble.main,
+    "table3": bench_table3_kernels.main,
+    "fig4": bench_fig4_static_gap.main,
+    "compile": bench_compile_overhead.main,
+    "buffers": bench_buffers.main,
+    "roofline": bench_roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+
+    print("name,us_per_call,derived")
+    csv: List[str] = []
+    for name in names:
+        t0 = time.time()
+        try:
+            SUITES[name](csv)
+        except Exception as e:  # pragma: no cover
+            import traceback
+            traceback.print_exc()
+            csv.append(f"{name}_ERROR,,{e!r}")
+        csv.append(f"{name}_suite_seconds,,{time.time() - t0:.1f}")
+    print("\n".join(csv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""The six paper-style workloads (Table 1) as jax graphs with one dynamic
+dimension each — ASR, Seq2seq, TTS, BERT, Ad Ranking, Transformer.
+
+Each entry: (name, fn, specs builder, dynamic symbol, batch) matching the
+paper's framework/batch-size table as closely as a synthetic graph can.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.frontends import ArgSpec
+
+D = 64
+F = 4 * D
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def attention(q, k, v):
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / math.sqrt(q.shape[-1])
+    return jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(s, axis=-1), v)
+
+
+def encoder_layer(x, wq, wk, wv, wo, w1, b1, w2, b2, g1, bb1, g2, bb2):
+    h = layer_norm(x, g1, bb1)
+    q, k, v = h @ wq, h @ wk, h @ wv
+    x = x + attention(q, k, v) @ wo
+    h = layer_norm(x, g2, bb2)
+    return x + (jax.nn.gelu(h @ w1 + b1) @ w2 + b2)
+
+
+def _enc_params(rng, d=D, f=F):
+    ws = [rng.randn(d, d).astype(np.float32) * 0.1 for _ in range(4)]
+    return (*ws,
+            rng.randn(d, f).astype(np.float32) * 0.1,
+            np.zeros(f, np.float32),
+            rng.randn(f, d).astype(np.float32) * 0.1,
+            np.zeros(d, np.float32),
+            np.ones(d, np.float32), np.zeros(d, np.float32),
+            np.ones(d, np.float32), np.zeros(d, np.float32))
+
+
+def _enc_specs(batch_sym_or_int, d=D, f=F):
+    b = batch_sym_or_int
+    return [ArgSpec((b, "S", d))] + [
+        ArgSpec((d, d))] * 4 + [
+        ArgSpec((d, f)), ArgSpec((f,)), ArgSpec((f, d)), ArgSpec((d,)),
+        ArgSpec((d,)), ArgSpec((d,)), ArgSpec((d,)), ArgSpec((d,))]
+
+
+# --------------------------------------------------------------- workloads
+def make_transformer():
+    """Transformer (TF, batch 1): one encoder layer, dynamic seq."""
+    rng = np.random.RandomState(0)
+    params = _enc_params(rng)
+    fn = encoder_layer
+    specs = _enc_specs(1)
+
+    def gen(rng2, s):
+        return (rng2.randn(1, s, D).astype(np.float32), *params)
+
+    return fn, specs, gen
+
+
+def make_bert():
+    """BERT (PyTorch, batch 1): embeddings-add + two encoder layers."""
+    rng = np.random.RandomState(1)
+    p1 = _enc_params(rng)
+    p2 = _enc_params(rng)
+
+    def fn(x, pos, *ps):
+        a, b = ps[:13], ps[13:]
+        x = x + pos
+        x = encoder_layer(x, *a[:12])
+        x = encoder_layer(x, *b[:12])
+        return x.mean(axis=1)
+
+    specs = [ArgSpec((1, "S", D)), ArgSpec((1, "S", D))] + \
+        _enc_specs(1)[1:] + [ArgSpec((1, 1, D))] + _enc_specs(1)[1:] + \
+        [ArgSpec((1, 1, D))]
+
+    def gen(rng2, s):
+        return (rng2.randn(1, s, D).astype(np.float32),
+                rng2.randn(1, s, D).astype(np.float32),
+                *p1, np.zeros((1, 1, D), np.float32),
+                *p2, np.zeros((1, 1, D), np.float32))
+
+    return fn, specs, gen
+
+
+def make_seq2seq():
+    """Seq2seq (PyTorch, batch 64): decoder step attending to a dynamic-
+    length encoder memory."""
+    rng = np.random.RandomState(2)
+    wq = rng.randn(D, D).astype(np.float32) * 0.1
+    wu = rng.randn(2 * D, D).astype(np.float32) * 0.1
+    wr = rng.randn(2 * D, D).astype(np.float32) * 0.1
+
+    def fn(h, memory):
+        q = (h @ wq)[:, None, :]
+        ctx = attention(q, memory, memory)[:, 0]
+        z = jax.nn.sigmoid(jnp.concatenate([h, ctx], -1) @ wu)
+        r = jnp.tanh(jnp.concatenate([h, ctx], -1) @ wr)
+        return z * h + (1 - z) * r
+
+    specs = [ArgSpec((64, D)), ArgSpec((64, "S", D))]
+
+    def gen(rng2, s):
+        return (rng2.randn(64, D).astype(np.float32),
+                rng2.randn(64, s, D).astype(np.float32))
+
+    return fn, specs, gen
+
+
+def make_tts():
+    """TTS (TF, batch 1): mel-postnet-ish elementwise/reduce stack over a
+    dynamic frame axis."""
+    rng = np.random.RandomState(3)
+    w1 = rng.randn(80, 256).astype(np.float32) * 0.1
+    w2 = rng.randn(256, 80).astype(np.float32) * 0.1
+    g = np.ones(256, np.float32)
+    b = np.zeros(256, np.float32)
+
+    def fn(mel):
+        h = jnp.tanh(mel @ w1)
+        h = layer_norm(h, g, b)
+        res = jax.nn.sigmoid(h) * h
+        out = res @ w2
+        energy = jnp.sqrt((out * out).sum(axis=-1, keepdims=True) + 1e-6)
+        return mel + out / energy
+
+    specs = [ArgSpec((1, "S", 80))]
+
+    def gen(rng2, s):
+        return (rng2.randn(1, s, 80).astype(np.float32),)
+
+    return fn, specs, gen
+
+
+def make_ad_ranking():
+    """Ad Ranking (TF, batch 512): DCN-ish cross + MLP over a dynamic
+    candidate-set axis."""
+    rng = np.random.RandomState(4)
+    d = 32
+    wc = rng.randn(d, d).astype(np.float32) * 0.1
+    w1 = rng.randn(d, 64).astype(np.float32) * 0.1
+    w2 = rng.randn(64, 1).astype(np.float32) * 0.1
+
+    def fn(x):
+        x0 = x
+        xc = x0 * (x @ wc) + x          # cross layer
+        h = jax.nn.relu(xc @ w1)
+        score = (h @ w2)[..., 0]
+        return jax.nn.softmax(score, axis=-1)
+
+    specs = [ArgSpec((512, "S", d))]
+
+    def gen(rng2, s):
+        return (rng2.randn(512, s, d).astype(np.float32),)
+
+    return fn, specs, gen
+
+
+def make_asr():
+    """ASR (TF/PyTorch, batch 1): subsample + encoder layer over dynamic
+    frames."""
+    rng = np.random.RandomState(5)
+    win = rng.randn(80, D).astype(np.float32) * 0.1
+    params = _enc_params(rng)
+
+    def fn(frames, *ps):
+        x = jnp.tanh(frames @ win)
+        x = encoder_layer(x, *ps)
+        return jax.nn.log_softmax(x @ ps[0], axis=-1)  # CTC-head-ish
+
+    specs = [ArgSpec((1, "S", 80))] + _enc_specs(1)[1:]
+
+    def gen(rng2, s):
+        return (rng2.randn(1, s, 80).astype(np.float32), *params)
+
+    return fn, specs, gen
+
+
+WORKLOADS: Dict[str, Callable] = {
+    "transformer": make_transformer,
+    "bert": make_bert,
+    "seq2seq": make_seq2seq,
+    "tts": make_tts,
+    "ad_ranking": make_ad_ranking,
+    "asr": make_asr,
+}

@@ -1,0 +1,49 @@
+"""Quickstart: the DISC dynamic-shape pipeline in 40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Takes a jax function with dynamic dims, builds the DHLO graph + shape
+constraints, fuses, and serves varying shapes from a bucketed compile
+cache through generated host dispatch.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bucketing import BucketPolicy
+from repro.core.runtime import DiscEngine
+from repro.frontends import ArgSpec
+
+
+def model(x, w):
+    """A memory-intensive chain + matmul + softmax — the paper's target."""
+    h = jnp.tanh(x) * jax.nn.sigmoid(x) + x
+    return jax.nn.softmax(h @ w, axis=-1)
+
+
+def main():
+    engine = DiscEngine(
+        model,
+        [ArgSpec(("B", 64), name="x"), ArgSpec((64, 32), name="w")],
+        policy=BucketPolicy(kind="pow2", granule=16),
+    )
+    print("== fusion plan ==")
+    print(engine.plan.stats())
+    print("\n== generated host dispatch (compile-time codegen) ==")
+    print(engine.dispatch_source)
+
+    w = np.random.randn(64, 32).astype(np.float32)
+    rng = np.random.RandomState(0)
+    for batch in rng.randint(1, 200, size=25):
+        x = rng.randn(int(batch), 64).astype(np.float32)
+        out = engine(x, w)
+        ref = model(jnp.asarray(x), jnp.asarray(w))
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-6)
+
+    print("\n== 25 distinct shapes served ==")
+    print(engine.report()["cache"])
+    print("(compare: a static compiler would have compiled ~25 times)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Topology-agnostic checkpointing with atomic step directories.
+
+Design for 1000+ nodes (DESIGN §7):
+
+* **atomicity** — a step is written to ``step_<k>.tmp`` and renamed only
+  after the manifest + all leaves are durably written; a crashed writer
+  never corrupts the latest checkpoint;
+* **topology-agnostic** — leaves are saved as full logical arrays with
+  their tree paths; restore re-lays them out onto ANY mesh via the model's
+  PartitionSpec tree (elastic re-mesh: a 512-chip checkpoint restores on
+  256 chips or 16);
+* **journal** — ``journal.json`` records (step, data-cursor, wall time) so
+  the data pipeline resumes deterministically (data/pipeline.py contract);
+* async-friendly: ``save_checkpoint(..., blocking=False)`` returns after
+  staging to host memory; the writer thread persists in the background
+  (straggler-safe: the train loop never blocks on the filesystem).
+
+On a real cluster each host writes only the shards it owns (via
+``jax.experimental.multihost_utils``); in this single-process repo the
+process owns everything, which is the degenerate case of the same layout.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+_WRITERS: list = []
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(ckpt_dir, step: int, state, *, journal: Optional[Dict] = None,
+                    blocking: bool = True, keep: int = 3) -> pathlib.Path:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    flat = _flatten_with_paths(state)  # staged to host memory NOW
+
+    def _write():
+        tmp = ckpt_dir / f"step_{step}.tmp"
+        final = ckpt_dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir()
+        np.savez(tmp / "leaves.npz", **flat)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "n_leaves": len(flat),
+            "journal": journal or {},
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        _gc(ckpt_dir, keep)
+
+    if blocking:
+        _write()
+    else:
+        th = threading.Thread(target=_write, daemon=True)
+        th.start()
+        _WRITERS.append(th)
+    return ckpt_dir / f"step_{step}"
+
+
+def _gc(ckpt_dir: pathlib.Path, keep: int) -> None:
+    steps = sorted(
+        (int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+         if not p.name.endswith(".tmp")))
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s}", ignore_errors=True)
+
+
+def wait_for_writers() -> None:
+    for th in list(_WRITERS):
+        th.join()
+        _WRITERS.remove(th)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+             if not p.name.endswith(".tmp")
+             and (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir, state_like, *, step: Optional[int] = None,
+                       shardings=None) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``state_like``; optional sharding tree
+    re-lays leaves onto the current mesh (elastic restore)."""
+    wait_for_writers()
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = ckpt_dir / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    with np.load(d / "leaves.npz") as z:
+        flat = {k: z[k] for k in z.files}
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(state_like)
+    leaves = []
+    for path, like in paths:
+        key = "/".join(_path_str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key].astype(like.dtype) if hasattr(like, "dtype") else flat[key]
+        leaves.append(arr)
+    state = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), state, shardings)
+    return state, manifest["journal"]

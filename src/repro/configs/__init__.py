@@ -1,0 +1,27 @@
+"""Assigned-architecture configs (exact public-literature dimensions).
+
+Selectable via ``--arch <id>`` in the launchers; ``ARCH_IDS`` lists all 10
+assigned architectures plus the paper's own workload config.
+"""
+from importlib import import_module
+
+ARCH_IDS = [
+    "dbrx_132b",
+    "deepseek_v2_236b",
+    "minitron_4b",
+    "codeqwen15_7b",
+    "tinyllama_11b",
+    "granite_20b",
+    "rwkv6_3b",
+    "whisper_tiny",
+    "zamba2_7b",
+    "llava_next_34b",
+]
+
+ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def get_config(arch_id: str):
+    arch_id = ALIASES.get(arch_id, arch_id)
+    mod = import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG

@@ -1,0 +1,28 @@
+"""deepseek-v2-236b [moe] — 60L d_model=5120 128H (GQA kv=128) d_ff=1536
+vocab=102400, MoE 160 experts top-6, MLA kv_lora=512, 2 shared experts.
+[arXiv:2405.04434; hf]
+"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=128,
+    d_ff=1536,              # fine-grained expert width
+    vocab=102400,
+    n_experts=160,
+    top_k=6,
+    n_shared_experts=2,
+    d_expert=1536,
+    mla_kv_lora=512,
+    mla_rope_dim=64,
+    dtype="bf16",
+    act="silu",
+    norm="rmsnorm",
+    remat="full",
+    max_seq=32768,
+)

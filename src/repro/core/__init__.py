@@ -1,0 +1,10 @@
+"""DISC core — the paper's contribution as a composable JAX module."""
+from .symshape import SymDim, SymShape, fresh_symdim  # noqa: F401
+from .constraints import ShapeConstraintStore, ConstraintViolation  # noqa: F401
+from .dhlo import DGraph, DOp, DValue  # noqa: F401
+from .propagation import (  # noqa: F401
+    PropClass,
+    CostClass,
+    op_info,
+    collect_semantic_constraints,
+)

@@ -1,0 +1,73 @@
+"""Bucketing policies — the TPU-native realization of "compile once per
+fusion pattern" (DESIGN.md §2).
+
+XLA's static-shape contract means truly shape-polymorphic device code does
+not exist on TPU; DISC-JAX compiles **once per (pattern, bucket)** and makes
+each compiled artifact *exact* for every shape ≤ bucket by threading actual
+lengths as runtime scalars and masking (see ``runtime.py``).  Buckets bound
+the compile count at O(log max_shape) instead of O(#distinct shapes).
+
+Policies:
+
+* ``pow2``      — round up to granule·2^k (default; log-many buckets)
+* ``multiple``  — round up to a multiple of k (linear-many buckets, less
+  padding waste; good when shapes cluster)
+* ``exact``     — no bucketing: compile per concrete shape.  This *is* the
+  static-shape-compiler baseline (XLA behavior the paper critiques) and is
+  used as such in the benchmarks.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+__all__ = ["BucketPolicy", "pow2_bucket"]
+
+
+def pow2_bucket(n: int, granule: int = 1) -> int:
+    if n <= granule:
+        return granule
+    return granule * (1 << math.ceil(math.log2(n / granule)))
+
+
+@dataclass(frozen=True)
+class BucketPolicy:
+    kind: str = "pow2"          # "pow2" | "multiple" | "exact"
+    granule: int = 16           # pow2: smallest bucket; multiple: the multiple
+    # per-symbol overrides: symbol name -> (kind, granule)
+    overrides: Tuple[Tuple[str, Tuple[str, int]], ...] = ()
+
+    def _rule(self, symbol_name: str) -> Tuple[str, int]:
+        for name, rule in self.overrides:
+            if name == symbol_name:
+                return rule
+        return (self.kind, self.granule)
+
+    def bucket(self, symbol_name: str, value: int) -> int:
+        kind, g = self._rule(symbol_name)
+        if kind == "exact":
+            return value
+        if kind == "multiple":
+            return g * math.ceil(value / g)
+        if kind == "pow2":
+            return pow2_bucket(value, g)
+        raise ValueError(f"unknown bucket kind {kind}")
+
+    def max_buckets(self, symbol_name: str, max_value: int) -> int:
+        """Upper bound on #buckets a symbol can produce up to max_value."""
+        kind, g = self._rule(symbol_name)
+        if kind == "exact":
+            return max_value
+        if kind == "multiple":
+            return math.ceil(max_value / g)
+        return int(math.ceil(math.log2(max(max_value / g, 1)))) + 1
+
+    def padded_fraction(self, symbol_name: str, value: int) -> float:
+        """Fraction of wasted (padded) elements for a value — perf metric."""
+        b = self.bucket(symbol_name, value)
+        return (b - value) / b if b else 0.0
+
+
+EXACT = BucketPolicy(kind="exact")
+POW2 = BucketPolicy(kind="pow2", granule=16)

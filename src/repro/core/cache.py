@@ -1,0 +1,104 @@
+"""Compile cache — keyed on (pattern fingerprint, bucket signature).
+
+DISC §2: "these fusion engines will compile and generate kernel for every
+emerging shape, even though some of them share the same computation
+pattern" — the cache key here deliberately contains **no concrete shapes**,
+only the shape-free graph fingerprint and the bucket signature, so compile
+count is O(#buckets), not O(#shapes).
+
+Also implements §4.4's static/dynamic mix: signatures that stay hot are
+*escalated* to exact-shape static specializations (better codegen: no
+masking, no padding waste), bounded by an LRU budget.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+__all__ = ["CompileCache", "CacheStats"]
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    compile_seconds: float = 0.0
+    escalations: int = 0
+    evictions: int = 0
+
+    @property
+    def compiles(self) -> int:
+        return self.misses
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "compiles": self.compiles,
+            "compile_seconds": round(self.compile_seconds, 4),
+            "escalations": self.escalations,
+            "evictions": self.evictions,
+        }
+
+
+class CompileCache:
+    def __init__(self, fingerprint: str, max_entries: int = 256,
+                 escalation_threshold: Optional[int] = None) -> None:
+        self.fingerprint = fingerprint
+        self.max_entries = max_entries
+        self.escalation_threshold = escalation_threshold
+        self._entries: "OrderedDict[Tuple, Any]" = OrderedDict()
+        self._exact_hits: Dict[Tuple, int] = {}
+        self.stats = CacheStats()
+
+    # --------------------------------------------------------- bucketed --
+    def get_or_compile(self, bucket_sig: Tuple, compile_fn: Callable[[], Any]) -> Any:
+        key = ("bucket", self.fingerprint, bucket_sig)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.stats.hits += 1
+            self._entries.move_to_end(key)
+            return entry
+        self.stats.misses += 1
+        t0 = time.perf_counter()
+        entry = compile_fn()
+        self.stats.compile_seconds += time.perf_counter() - t0
+        self._entries[key] = entry
+        self._evict()
+        return entry
+
+    # ------------------------------------------------- static escalation --
+    def should_escalate(self, exact_sig: Tuple) -> bool:
+        """§4.4: route hot exact shapes to the static compiler."""
+        if self.escalation_threshold is None:
+            return False
+        n = self._exact_hits.get(exact_sig, 0) + 1
+        self._exact_hits[exact_sig] = n
+        return n >= self.escalation_threshold
+
+    def get_or_compile_exact(self, exact_sig: Tuple,
+                             compile_fn: Callable[[], Any]) -> Any:
+        key = ("exact", self.fingerprint, exact_sig)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.stats.hits += 1
+            self._entries.move_to_end(key)
+            return entry
+        self.stats.misses += 1
+        self.stats.escalations += 1
+        t0 = time.perf_counter()
+        entry = compile_fn()
+        self.stats.compile_seconds += time.perf_counter() - t0
+        self._entries[key] = entry
+        self._evict()
+        return entry
+
+    def _evict(self) -> None:
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._entries)

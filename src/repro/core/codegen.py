@@ -1,0 +1,493 @@
+"""Code generation: DHLO graph → device executables — DISC §4.3.
+
+Two executors are generated from one graph:
+
+* :func:`build_exact_executor` — runs the graph at the call's exact concrete
+  shapes.  Used by the static-fallback path (§4.4) and as the correctness
+  oracle.
+* :func:`build_padded_executor` — the dynamic-shape artifact: traced/jitted
+  once per *bucket signature*, it executes at padded shapes while taking the
+  **actual lengths as a runtime i32 operand** (`lens`).  Masking makes it
+  exact for every shape ≤ bucket:
+
+  - inputs are zero-padded on the host (runtime.py), so padded regions start
+    clean;
+  - every *position-mixing* op (reduce, dot contraction, reverse cumsum,
+    sort, arg-reduce) masks dynamic axes with the op's padding identity
+    (``propagation.OP_TABLE.pad_identity``) right before mixing;
+  - masks are canonical per symbolic dim: prefix masks ``iota < len`` for
+    input symbols, Kronecker products for reshape-merged dims (matching the
+    row-major garbage pattern of reshaped padded data), prefix masks for
+    concat-sum / slice-affine dims;
+  - ``concatenate`` along a dynamic axis is re-emitted as dynamic-update-
+    slices at *traced actual offsets*, keeping valid data prefix-contiguous.
+
+  This is the paper's "shape-adaptive" codegen: one artifact, any runtime
+  shape (≤ bucket), with launch-configuration decisions (here: mask/no-mask,
+  vectorized variants in the Pallas backend) resolved from runtime shape
+  scalars.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .dhlo import DGraph, DOp, DValue
+from .emit import emit_op
+from .propagation import op_info
+from .symshape import SymDim
+
+__all__ = ["build_exact_executor", "build_padded_executor", "dyn_symbols"]
+
+
+def dyn_symbols(graph: DGraph) -> List[SymDim]:
+    """Ordered list of *input* symbolic dims (canonical, deduped)."""
+    seen: Dict[int, SymDim] = {}
+    for p in graph.params:
+        for d in p.shape:
+            if isinstance(d, SymDim):
+                c = graph.store.canon_dim(d)
+                if isinstance(c, SymDim) and c.uid not in seen:
+                    seen[c.uid] = c
+    return list(seen.values())
+
+
+class _ShapeEnv:
+    """Evaluates symbolic dims at trace time (padded ints + traced actuals)."""
+
+    def __init__(self, graph: DGraph, padded: Dict[int, int],
+                 actual: Dict[int, Any]) -> None:
+        self.graph = graph
+        self.store = graph.store
+        self.exprs = getattr(graph, "dim_exprs", {})
+        self.padded = dict(padded)   # canonical uid -> python int
+        self.actual = dict(actual)   # canonical uid -> traced i32 (or int)
+        self._masks: Dict[Tuple[int, int], Any] = {}
+
+    def _canon(self, d):
+        c = self.store.canon_dim(d)
+        return c
+
+    def padded_dim(self, d) -> int:
+        if isinstance(d, int):
+            return d
+        c = self._canon(d)
+        if isinstance(c, int):
+            return c
+        if c.uid in self.padded:
+            return self.padded[c.uid]
+        expr = self.exprs.get(c.uid) or self.exprs.get(d.uid)
+        if expr is None:
+            raise KeyError(f"unbound dim {d!r}")
+        return int(self._eval(expr, self.padded))
+
+    def actual_dim(self, d):
+        if isinstance(d, int):
+            return d
+        c = self._canon(d)
+        if isinstance(c, int):
+            return c
+        if c.uid in self.actual:
+            return self.actual[c.uid]
+        expr = self.exprs.get(c.uid) or self.exprs.get(d.uid)
+        if expr is None:
+            raise KeyError(f"unbound dim {d!r}")
+        return self._eval(expr, self.actual)
+
+    def _eval(self, expr, env):
+        tag = expr[0]
+        if tag == "mul":
+            v = 1
+            for x in expr[1]:
+                v = v * (self._lookup(x, env))
+            return v
+        if tag == "sum":
+            v = 0
+            for x in expr[1]:
+                v = v + self._lookup(x, env)
+            return v
+        if tag == "affine":
+            _, base, a, b = expr
+            return a * self._lookup(base, env) + b
+        if tag == "div":
+            _, base, k = expr
+            return self._lookup(base, env) // k
+        raise ValueError(f"bad dim expr {expr}")
+
+    def _lookup(self, d, env):
+        if isinstance(d, int):
+            return d
+        c = self._canon(d)
+        if isinstance(c, int):
+            return c
+        if c.uid in env:
+            return env[c.uid]
+        expr = self.exprs.get(c.uid) or self.exprs.get(d.uid)
+        if expr is None:
+            raise KeyError(f"unbound dim {d!r}")
+        return self._eval(expr, env)
+
+    def is_dynamic(self, d) -> bool:
+        if isinstance(d, int):
+            return False
+        c = self._canon(d)
+        return isinstance(c, SymDim)
+
+    def padded_shape(self, shape) -> Tuple[int, ...]:
+        return tuple(self.padded_dim(d) for d in shape)
+
+    # ----------------------------------------------------------- masks --
+    def mask_for_dim(self, d) -> Optional[Any]:
+        """Canonical validity mask (bool[padded]) for a dynamic dim."""
+        if not self.is_dynamic(d):
+            return None
+        c = self._canon(d)
+        psize = self.padded_dim(c)
+        key = (c.uid, psize)
+        if key in self._masks:
+            return self._masks[key]
+        expr = self.exprs.get(c.uid)
+        if expr is not None and expr[0] == "mul":
+            # reshape-merged dim: Kronecker product of factor masks matches
+            # the row-major garbage pattern of reshaped padded data
+            factors = expr[1]
+            m = None
+            for f in factors:
+                fp = self.padded_dim(f) if not isinstance(f, int) else f
+                fm = self.mask_for_dim(f) if not isinstance(f, int) else None
+                if fm is None:
+                    fm = jnp.ones((fp,), dtype=bool)
+                m = fm if m is None else (m[:, None] & fm[None, :]).reshape(-1)
+            mask = m
+        else:
+            actual = self.actual_dim(c)
+            mask = lax.broadcasted_iota(jnp.int32, (psize,), 0) < actual
+        self._masks[key] = mask
+        return mask
+
+    def mask_axes(self, x, shape, axes, fill) -> Any:
+        """Apply canonical masks along ``axes`` of value with symbolic shape."""
+        for ax in axes:
+            m = self.mask_for_dim(shape[ax])
+            if m is None:
+                continue
+            bshape = [1] * x.ndim
+            bshape[ax] = m.shape[0]
+            x = jnp.where(m.reshape(bshape), x, jnp.asarray(fill, x.dtype))
+        return x
+
+
+def _emit_masked(op: DOp, inputs, out_shapes, env: _ShapeEnv):
+    """emit_op + dynamic-axis masking for position-mixing ops."""
+    code = op.opcode
+    info = op_info(code)
+
+    if code.startswith("reduce_") or code in ("argmax", "argmin"):
+        axes = op.attrs.get("axes", ())
+        src = op.inputs[0]
+        dyn_axes = [a for a in axes if env.is_dynamic(src.shape[a])]
+        if dyn_axes:
+            fill = info.pad_identity if info.pad_identity is not None else 0.0
+            x = env.mask_axes(inputs[0], src.shape, dyn_axes, fill)
+            inputs = [x] + list(inputs[1:])
+        return emit_op(op, inputs, out_shapes)
+
+    if code == "dot_general":
+        (lc, rc), (lb, rb) = op.attrs["dimension_numbers"]
+        lhs_v, rhs_v = op.inputs[0], op.inputs[1]
+        dyn_lc = [a for a in lc if env.is_dynamic(lhs_v.shape[a])]
+        if dyn_lc:
+            lhs = env.mask_axes(inputs[0], lhs_v.shape, dyn_lc, 0.0)
+            inputs = [lhs, inputs[1]]
+        return emit_op(op, inputs, out_shapes)
+
+    if code in ("cumsum", "cumprod", "cummax"):
+        params = op.attrs.get("_params", {})
+        axis = params.get("axis", 0)
+        src = op.inputs[0]
+        if params.get("reverse", False) and env.is_dynamic(src.shape[axis]):
+            fill = {"cumsum": 0.0, "cumprod": 1.0, "cummax": -np.inf}[code]
+            x = env.mask_axes(inputs[0], src.shape, [axis], fill)
+            inputs = [x]
+        return emit_op(op, inputs, out_shapes)
+
+    if code == "sort":
+        params = op.attrs.get("_params", {})
+        dim = params.get("dimension", -1)
+        src = op.inputs[0]
+        d = dim if dim >= 0 else src.rank + dim
+        if env.is_dynamic(src.shape[d]):
+            x = env.mask_axes(inputs[0], src.shape, [d], np.inf)
+            inputs = [x]
+        return emit_op(op, inputs, out_shapes)
+
+    if code == "concatenate":
+        axis = op.attrs["dimension"]
+        out_v = op.outputs[0]
+        if env.is_dynamic(out_v.shape[axis]) and len(op.inputs) > 1:
+            # dynamic-axis concat: DUS at traced actual offsets keeps valid
+            # data prefix-contiguous (canonical for the sum-derived dim)
+            out = jnp.zeros(out_shapes[0], dtype=out_v.dtype)
+            offset = jnp.asarray(0, jnp.int32)
+            for v, x in zip(op.inputs, inputs):
+                starts = [offset if ax == axis else 0 for ax in range(x.ndim)]
+                out = lax.dynamic_update_slice(out, x, starts)
+                alen = env.actual_dim(v.shape[axis])
+                offset = offset + jnp.asarray(alen, jnp.int32)
+            return [out]
+        return emit_op(op, inputs, out_shapes)
+
+    if code == "pad":
+        cfg = op.attrs["padding_config"]
+        src = op.inputs[0]
+        for ax, (lo, hi, interior) in enumerate(cfg):
+            if env.is_dynamic(src.shape[ax]) and (hi > 0 or interior > 0):
+                raise NotImplementedError(
+                    "hi/interior pad along a dynamic axis is not "
+                    "bucket-paddable; pre-pad on the host instead")
+        return emit_op(op, inputs, out_shapes)
+
+    return emit_op(op, inputs, out_shapes)
+
+
+# opcodes whose emission is shape-oblivious on a flattened block — the
+# eligibility set for the Pallas fused-elementwise backend (§4.3)
+_PALLAS_ELIGIBLE = {
+    "add", "sub", "mul", "div", "max", "min", "pow", "neg", "exp", "exp2",
+    "expm1", "log", "log1p", "tanh", "logistic", "sqrt", "rsqrt", "abs",
+    "sign", "floor", "ceil", "round", "erf", "sin", "cos", "square",
+    "integer_pow", "select", "convert", "stop_gradient", "copy",
+    "eq", "ne", "lt", "gt", "le", "ge", "and", "or", "not",
+}
+
+_REDUCE_KINDS = {"reduce_sum": "sum", "reduce_max": "max",
+                 "reduce_min": "min", "reduce_prod": "prod"}
+
+
+def _no_escaping_intermediates(graph: DGraph, cluster) -> bool:
+    """Only the root output may be consumed outside the cluster (a single
+    fused kernel materializes exactly one result)."""
+    member_ids = {op.oid for op in cluster.ops}
+    root_out = cluster.ops[-1].outputs[0].vid
+    users = graph.users()
+    out_ids = {o.vid for o in graph.outputs}
+    for op in cluster.ops:
+        for o in op.outputs:
+            if o.vid == root_out:
+                continue
+            if o.vid in out_ids:
+                return False
+            for user in users.get(o.vid, ()):
+                if user.oid not in member_ids:
+                    return False
+    return True
+
+
+def _pallas_loop_eligible(graph: DGraph, cluster) -> bool:
+    """kLoop cluster executable as ONE flattened masked Pallas kernel:
+    every op shape-oblivious elementwise, every non-scalar value the same
+    shape class (scalars are closure-captured)."""
+    if cluster.kind != "loop" or len(cluster.ops) < 2:
+        return False
+    store = graph.store
+    ref = cluster.ops[-1].outputs[0].shape
+    for op in cluster.ops:
+        if op.opcode not in _PALLAS_ELIGIBLE:
+            return False
+        for v in list(op.inputs) + list(op.outputs):
+            if v.rank == 0:
+                continue
+            if len(v.shape) != len(ref) or not store.shapes_equal(v.shape, ref):
+                return False
+    return _no_escaping_intermediates(graph, cluster)
+
+
+def _pallas_input_eligible(graph: DGraph, cluster) -> bool:
+    """kInput cluster: shape-oblivious producers + one last-axis reduce root."""
+    if cluster.kind != "input" or len(cluster.ops) < 2:
+        return False
+    root = cluster.ops[-1]
+    if root.opcode not in _REDUCE_KINDS:
+        return False
+    axes = root.attrs.get("axes", ())
+    src = root.inputs[0]
+    if tuple(axes) != (src.rank - 1,):
+        return False
+    store = graph.store
+    ref = src.shape
+    for op in cluster.ops[:-1]:
+        if op.opcode not in _PALLAS_ELIGIBLE:
+            return False
+        for v in list(op.inputs) + list(op.outputs):
+            if v.rank == 0:
+                continue
+            if len(v.shape) != len(ref) or not store.shapes_equal(v.shape, ref):
+                return False
+    return _no_escaping_intermediates(graph, cluster)
+
+
+def _cluster_expr(cluster, input_vids, scalar_consts, *, skip_root=False):
+    """Build the unrolled expression closure a Pallas kernel body executes.
+
+    The per-op emission happens at kernel TRACE time — zero runtime
+    interpretation, exactly the paper's compile-time codegen property."""
+    ops = cluster.ops[:-1] if skip_root else cluster.ops
+    last = cluster.ops[-1]
+
+    def expr(*blocks):
+        local: Dict[int, Any] = dict(zip(input_vids, blocks))
+        local.update(scalar_consts)
+
+        def rd(v):
+            if v.vid in local:
+                return local[v.vid]
+            assert v.literal is not None, f"unbound {v!r}"
+            return jnp.asarray(v.literal)
+
+        out = None
+        for op in ops:
+            res = emit_op(op, [rd(v) for v in op.inputs], [None])
+            for o, val in zip(op.outputs, res):
+                local[o.vid] = val
+            out = res[0]
+        if skip_root:
+            return local[last.inputs[0].vid]
+        return out
+
+    return expr
+
+
+def _run_pallas_cluster(graph: DGraph, cluster, read, env: _ShapeEnv,
+                        masked: bool):
+    """Execute an eligible cluster through the fused Pallas kernels."""
+    from ..kernels.fused_elementwise.ops import fused_elementwise
+    from ..kernels.fused_reduce.ops import fused_reduce
+
+    produced = {o.vid for op in cluster.ops for o in op.outputs}
+    # boundary inputs: non-literal values consumed but not produced inside
+    seen = []
+    for op in cluster.ops:
+        for v in op.inputs:
+            if v.vid not in produced and v.literal is None and \
+                    v.vid not in [s for s, _ in seen]:
+                seen.append((v.vid, v))
+    tensor_ids, scalar_consts = [], {}
+    tensors = []
+    for vid, v in seen:
+        arr = read(v)
+        if v.rank == 0:
+            scalar_consts[vid] = arr
+        else:
+            tensor_ids.append(vid)
+            tensors.append(arr)
+
+    root = cluster.ops[-1]
+    out_v = root.outputs[0]
+
+    if cluster.kind == "loop":
+        expr = _cluster_expr(cluster, tensor_ids, scalar_consts)
+        # pointwise garbage stays confined to the padded region (which is
+        # NOT a flat prefix under multi-dim padding) — downstream mixing
+        # ops apply their own canonical masks, so no in-kernel mask here
+        n_valid = int(np.prod(env.padded_shape(out_v.shape), dtype=np.int64))
+        outs = fused_elementwise(expr, tensors, n_valid, [out_v.dtype])
+        return {out_v.vid: outs[0].reshape(env.padded_shape(out_v.shape))}
+
+    # kInput: masked last-axis reduce root
+    expr = _cluster_expr(cluster, tensor_ids, scalar_consts, skip_root=True)
+    src = root.inputs[0]
+    last_dim = src.shape[-1]
+    if masked and env.is_dynamic(last_dim):
+        n_cols = env.actual_dim(last_dim)
+    else:
+        n_cols = env.padded_dim(last_dim)
+    kind = _REDUCE_KINDS[root.opcode]
+    out = fused_reduce(expr, tensors, n_cols, kind)
+    return {out_v.vid: out.reshape(env.padded_shape(out_v.shape))}
+
+
+def _run_graph(graph: DGraph, arrays, env: _ShapeEnv, masked: bool,
+               plan=None, backend: str = "xla"):
+    vals: Dict[int, Any] = {}
+    for p, a in zip(graph.params, arrays):
+        vals[p.vid] = a
+
+    def read(v: DValue):
+        if v.vid in vals:
+            return vals[v.vid]
+        if v.literal is not None:
+            return jnp.asarray(v.literal)
+        raise KeyError(f"undefined value {v!r}")
+
+    def run_op(op):
+        ins = [read(v) for v in op.inputs] + [read(v) for v in op.shape_operands]
+        out_shapes = [env.padded_shape(o.shape) for o in op.outputs]
+        if masked:
+            outs = _emit_masked(op, ins, out_shapes, env)
+        else:
+            outs = emit_op(op, ins, out_shapes)
+        for o, val in zip(op.outputs, outs):
+            vals[o.vid] = val
+
+    if backend == "pallas" and plan is not None:
+        for cluster in plan.clusters:
+            if _pallas_loop_eligible(graph, cluster) or \
+                    _pallas_input_eligible(graph, cluster):
+                try:
+                    vals.update(_run_pallas_cluster(graph, cluster, read,
+                                                    env, masked))
+                    continue
+                except Exception:
+                    pass  # conservative fallback to the XLA path
+            for op in cluster.ops:
+                run_op(op)
+    else:
+        for op in graph.toposorted():
+            run_op(op)
+    return [read(o) for o in graph.outputs]
+
+
+def build_exact_executor(graph: DGraph, plan=None,
+                         backend: str = "xla") -> Callable:
+    """Executor running at exact concrete shapes (static-fallback path)."""
+    syms = dyn_symbols(graph)
+
+    def run(*arrays):
+        bindings: Dict[int, int] = {}
+        for p, a in zip(graph.params, arrays):
+            for d, size in zip(p.shape, a.shape):
+                if isinstance(d, SymDim):
+                    c = graph.store.canon_dim(d)
+                    if isinstance(c, SymDim):
+                        bindings[c.uid] = int(size)
+        env = _ShapeEnv(graph, padded=bindings, actual=dict(bindings))
+        return _run_graph(graph, arrays, env, masked=False, plan=plan,
+                          backend=backend)
+
+    return run
+
+
+def build_padded_executor(graph: DGraph, padded_bindings: Dict[int, int],
+                          sym_order: Sequence[SymDim], plan=None,
+                          backend: str = "xla") -> Callable:
+    """Executor for one bucket signature: ``run(lens_i32, *padded_arrays)``.
+
+    ``padded_bindings`` maps canonical symbol uid -> padded size (static for
+    this artifact); ``lens_i32`` carries the actual sizes at runtime in
+    ``sym_order`` — the artifact is exact for any actuals ≤ the bucket.
+    With ``backend="pallas"``, eligible fusion clusters execute through the
+    fused Pallas kernels (§4.3 codegen), the rest through XLA.
+    """
+    uids = [s.uid for s in sym_order]
+
+    def run(lens, *arrays):
+        actual = {uid: lens[i] for i, uid in enumerate(uids)}
+        env = _ShapeEnv(graph, padded=padded_bindings, actual=actual)
+        return _run_graph(graph, arrays, env, masked=True, plan=plan,
+                          backend=backend)
+
+    return run

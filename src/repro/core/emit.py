@@ -1,0 +1,158 @@
+"""Per-op JAX emission rules — the device-side code generation table.
+
+Each DHLO opcode maps to a rule ``(op, inputs, out_shapes) -> outputs`` that
+re-derives any shape-bearing parameters from the op's *symbolic* output
+shapes evaluated at the current concrete sizes — the DHLO property that the
+computation is re-emittable at any runtime shape.  Rules are pure jnp/lax
+and run either under ``jax.jit`` tracing (compiled path) or eagerly (the
+NimbleVM interpreted baseline).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .dhlo import DOp
+
+__all__ = ["emit_op", "HAS_RULE"]
+
+_UNARY = {
+    "neg": jnp.negative, "sign": jnp.sign, "floor": jnp.floor,
+    "ceil": jnp.ceil, "round": jnp.round, "exp": jnp.exp, "exp2": jnp.exp2,
+    "expm1": jnp.expm1, "log": jnp.log, "log1p": jnp.log1p,
+    "tanh": jnp.tanh, "logistic": jax.nn.sigmoid, "sqrt": jnp.sqrt,
+    "rsqrt": lax.rsqrt, "cbrt": jnp.cbrt, "abs": jnp.abs, "erf": lax.erf,
+    "erfc": lax.erfc, "erf_inv": lax.erf_inv, "sin": jnp.sin,
+    "cos": jnp.cos, "tan": jnp.tan, "asin": jnp.arcsin, "acos": jnp.arccos,
+    "atan": jnp.arctan, "sinh": jnp.sinh, "cosh": jnp.cosh,
+    "not": jnp.logical_not, "is_finite": jnp.isfinite,
+    "stop_gradient": lax.stop_gradient, "copy": lambda x: x,
+    "square": jnp.square,
+}
+
+_BINARY = {
+    "add": jnp.add, "sub": jnp.subtract, "mul": jnp.multiply,
+    "div": jnp.divide, "rem": jnp.remainder, "pow": jnp.power,
+    "max": jnp.maximum, "min": jnp.minimum, "atan2": jnp.arctan2,
+    "and": jnp.bitwise_and, "or": jnp.bitwise_or, "xor": jnp.bitwise_xor,
+    "eq": jnp.equal, "ne": jnp.not_equal, "lt": jnp.less,
+    "gt": jnp.greater, "le": jnp.less_equal, "ge": jnp.greater_equal,
+    "nextafter": jnp.nextafter,
+    "shift_left": jnp.left_shift, "shift_right_logical": jnp.right_shift,
+    "shift_right_arithmetic": jnp.right_shift,
+}
+
+_REDUCE = {
+    "reduce_sum": jnp.sum, "reduce_max": jnp.max, "reduce_min": jnp.min,
+    "reduce_prod": jnp.prod, "reduce_and": jnp.all, "reduce_or": jnp.any,
+}
+
+
+def emit_op(op: DOp, inputs: Sequence[jnp.ndarray],
+            out_shapes: Sequence[Tuple[int, ...]]) -> List[jnp.ndarray]:
+    """Execute/trace one DHLO op at concrete shapes ``out_shapes``."""
+    code = op.opcode
+    if code in _UNARY:
+        return [_UNARY[code](inputs[0])]
+    if code in _BINARY:
+        return [_BINARY[code](inputs[0], inputs[1])]
+    if code in _REDUCE:
+        axes = op.attrs.get("axes", ())
+        return [_REDUCE[code](inputs[0], axis=tuple(axes))]
+    if code == "integer_pow":
+        y = op.attrs.get("_params", {}).get("y", 2)
+        return [lax.integer_pow(inputs[0], y)]
+    if code == "select":
+        return [lax.select_n(*inputs)]
+    if code == "clamp":
+        return [lax.clamp(*inputs)]
+    if code == "convert":
+        return [lax.convert_element_type(inputs[0], op.attrs["new_dtype"])]
+    if code == "broadcast_in_dim":
+        bdims = op.attrs["broadcast_dimensions"]
+        return [lax.broadcast_in_dim(inputs[0], out_shapes[0], bdims)]
+    if code == "reshape":
+        return [jnp.reshape(inputs[0], out_shapes[0])]
+    if code == "transpose":
+        return [jnp.transpose(inputs[0], op.attrs["permutation"])]
+    if code == "rev":
+        dims = op.attrs.get("_params", {}).get("dimensions", ())
+        return [lax.rev(inputs[0], tuple(dims))]
+    if code in ("argmax", "argmin"):
+        axes = op.attrs.get("axes", (0,))
+        fn = jnp.argmax if code == "argmax" else jnp.argmin
+        out = fn(inputs[0], axis=axes[0])
+        return [out.astype(op.outputs[0].dtype)]
+    if code in ("cumsum", "cumprod", "cummax"):
+        params = op.attrs.get("_params", {})
+        prim = op.attrs.get("_prim")
+        return [prim.bind(inputs[0], **params)]
+    if code == "dot_general":
+        params = op.attrs.get("_params", {})
+        return [lax.dot_general(
+            inputs[0], inputs[1], op.attrs["dimension_numbers"],
+            precision=params.get("precision"),
+            preferred_element_type=params.get("preferred_element_type"),
+        )]
+    if code == "dslice":
+        starts = inputs[1:] if not op.shape_operands else None
+        return [lax.dynamic_slice(inputs[0], list(inputs[1:]), out_shapes[0])]
+    if code == "dynamic_update_slice":
+        return [lax.dynamic_update_slice(inputs[0], inputs[1], list(inputs[2:]))]
+    if code == "slice":
+        starts = op.attrs["start_indices"]
+        strides = op.attrs.get("strides") or (1,) * len(starts)
+        limits = tuple(s + o * st for s, o, st in
+                       zip(starts, out_shapes[0], strides))
+        return [lax.slice(inputs[0], starts, limits, strides)]
+    if code == "concatenate":
+        return [lax.concatenate(list(inputs), op.attrs["dimension"])]
+    if code == "pad":
+        cfg = op.attrs["padding_config"]
+        return [lax.pad(inputs[0], inputs[1], cfg)]
+    if code == "iota":
+        dt = op.outputs[0].dtype
+        return [lax.broadcasted_iota(dt, out_shapes[0],
+                                     op.attrs.get("dimension", 0))]
+    if code == "sort":
+        params = op.attrs.get("_params", {})
+        dim = params.get("dimension", -1)
+        return [lax.sort(inputs[0], dimension=dim)]
+    # ---- opaque fallback: rebind the original primitive --------------
+    prim = op.attrs.get("_prim")
+    params = op.attrs.get("_params", {})
+    if prim is None:
+        raise NotImplementedError(f"no emission rule for {code}")
+    _check_opaque_safety(op, inputs, out_shapes)
+    out = prim.bind(*inputs, **params)
+    return list(out) if prim.multiple_results else [out]
+
+
+# param keys that carry shape info; if present AND the traced output shape
+# differs from the current one, re-binding stale params would be wrong
+_SHAPEY_PARAM_KEYS = ("shape", "new_sizes", "slice_sizes", "sizes",
+                      "padding_config", "limit_indices", "broadcast_sizes")
+
+
+def _check_opaque_safety(op: DOp, inputs, out_shapes) -> None:
+    params = op.attrs.get("_params", {})
+    if any(k in params for k in _SHAPEY_PARAM_KEYS):
+        traced = tuple(tuple(int(x) for x in o.concrete_shape())
+                       for o in op.outputs)
+        if tuple(tuple(s) for s in out_shapes) != traced:
+            raise NotImplementedError(
+                f"opaque op {op.opcode} has shape-bearing params and was "
+                f"asked to run at a different shape; add an emission rule")
+
+
+HAS_RULE = (set(_UNARY) | set(_BINARY) | set(_REDUCE) |
+            {"integer_pow", "select", "clamp", "convert", "broadcast_in_dim",
+             "reshape", "transpose", "rev", "argmax", "argmin", "cumsum",
+             "cumprod", "cummax", "dot_general", "dslice",
+             "dynamic_update_slice", "slice", "concatenate", "pad", "iota",
+             "sort"})

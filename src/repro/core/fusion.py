@@ -1,0 +1,252 @@
+"""Shape-class fusion planner — DISC §4.3.
+
+    "A common fusion strategy is to allow memory bound ops with the same
+     number of elements to be fused together.  However, the tensor shapes to
+     process are not known at compile time for dynamic shape scenarios."
+
+The planner never looks at concrete sizes.  Fusion legality between a
+producer/consumer pair of *memory-intensive* ops is decided from the two
+shape hints of the paper:
+
+* **shape propagation** — the per-op-class transfer rules
+  (``propagation.OP_TABLE``) let shape equality flow through elementwise
+  chains, transposes, reshapes;
+* **shape constraints** — tensor-size equality / dim equality from the
+  :class:`ShapeConstraintStore`, including frontend-injected hints (e.g.
+  ``split`` outputs), which enlarge fusion scope beyond what local
+  propagation can prove.
+
+Cluster kinds mirror the paper's codegen templates: ``kLoop`` (classical
+loop fusion, elementwise root) and ``kInput`` (input fusion with a reduce
+op as the root).  Compute-intensive ops (``dot_general``/``conv``) are
+never fused into loops — they go to the static-shape library (§4.5).
+"""
+from __future__ import annotations
+
+import itertools
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .dhlo import DGraph, DOp, DValue
+from .propagation import CostClass, PropClass, op_info
+
+__all__ = ["Cluster", "FusionPlan", "plan_fusion"]
+
+
+@dataclass
+class Cluster:
+    cid: int
+    kind: str  # "loop" | "input" | "compute" | "opaque"
+    ops: List[DOp] = field(default_factory=list)
+
+    @property
+    def root(self) -> DOp:
+        return self.ops[-1]
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<Cluster {self.cid} {self.kind}: {[o.opcode for o in self.ops]}>"
+
+
+@dataclass
+class FusionPlan:
+    graph: DGraph
+    clusters: List[Cluster]
+    op_to_cluster: Dict[int, int]
+
+    @property
+    def n_kernels(self) -> int:
+        """Number of launched kernels after fusion (paper Table 3 metric)."""
+        return len(self.clusters)
+
+    @property
+    def n_memory_kernels(self) -> int:
+        return sum(1 for c in self.clusters if c.kind in ("loop", "input"))
+
+    def stats(self) -> Dict[str, int]:
+        mem_ops = sum(
+            1 for op in self.graph.ops if op_info(op.opcode).cost is CostClass.MEMORY
+        )
+        return {
+            "total_ops": len(self.graph.ops),
+            "memory_ops": mem_ops,
+            "kernels_after_fusion": self.n_kernels,
+            "memory_kernels_after_fusion": self.n_memory_kernels,
+            "largest_cluster": max((len(c.ops) for c in self.clusters), default=0),
+        }
+
+
+# fusable propagation classes for loop fusion members
+_LOOP_FUSABLE = {
+    PropClass.ELEMENTWISE,
+    PropClass.BROADCAST,
+    PropClass.RESHAPE,
+    PropClass.TRANSPOSE,
+    PropClass.SLICE,
+    PropClass.CONCAT,
+    PropClass.IOTA,
+    PropClass.UPDATE,
+}
+
+
+class _ClusterSet:
+    """Union-find over op ids with per-cluster successor tracking for the
+    cycle check (merging A→B is illegal if A reaches B via a third cluster)."""
+
+    def __init__(self, graph: DGraph) -> None:
+        self.graph = graph
+        self.parent: Dict[int, int] = {op.oid: op.oid for op in graph.ops}
+        self.members: Dict[int, List[DOp]] = {op.oid: [op] for op in graph.ops}
+        # op-level edges
+        self.succs: Dict[int, Set[int]] = defaultdict(set)
+        producer = {}
+        for op in graph.ops:
+            for o in op.outputs:
+                producer[o.vid] = op.oid
+        for op in graph.ops:
+            for v in op.all_operands():
+                if v.vid in producer:
+                    self.succs[producer[v.vid]].add(op.oid)
+
+    def find(self, oid: int) -> int:
+        p = self.parent[oid]
+        if p != oid:
+            p = self.find(p)
+            self.parent[oid] = p
+        return p
+
+    def cluster_succs(self, root: int) -> Set[int]:
+        out: Set[int] = set()
+        for op in self.members[root]:
+            for s in self.succs[op.oid]:
+                rs = self.find(s)
+                if rs != root:
+                    out.add(rs)
+        return out
+
+    def would_cycle(self, a: int, b: int) -> bool:
+        """True if merging clusters a,b creates a cycle: a path a→…→b (or
+        b→…→a) through a third cluster."""
+        for start, goal in ((a, b), (b, a)):
+            stack = [s for s in self.cluster_succs(start) if s != goal]
+            seen: Set[int] = set(stack)
+            while stack:
+                cur = stack.pop()
+                if cur == goal:
+                    return True
+                for s in self.cluster_succs(cur):
+                    if s not in seen and s != start:
+                        seen.add(s)
+                        stack.append(s)
+        return False
+
+    def merge(self, a: int, b: int) -> int:
+        ra, rb = self.find(a), self.find(b)
+        if ra == rb:
+            return ra
+        # keep topological order of members by op id (construction order)
+        merged = sorted(self.members[ra] + self.members[rb], key=lambda o: o.oid)
+        self.parent[rb] = ra
+        self.members[ra] = merged
+        del self.members[rb]
+        return ra
+
+
+def _is_tiny(graph: DGraph, v: DValue) -> bool:
+    """Scalar/small constants broadcast implicitly inside a fused loop."""
+    e = graph.store.size_expr(v.vid)
+    return e is not None and e.is_static() and e.coeff <= 4096
+
+
+def _broadcast_compatible(graph: DGraph, pshape, cshape) -> bool:
+    """Producer shape feeds consumer via implicit broadcast (§4.3: "whether
+    an implicit broadcast is necessary") — per-dim equal or producer dim 1."""
+    if len(pshape) == 0:
+        return True
+    if len(pshape) != len(cshape):
+        return False
+    store = graph.store
+    for dp, dc in zip(pshape, cshape):
+        if isinstance(dp, int) and dp == 1:
+            continue
+        if not store.dims_equal(dp, dc):
+            return False
+    return True
+
+
+def plan_fusion(graph: DGraph) -> FusionPlan:
+    store = graph.store
+    cs = _ClusterSet(graph)
+    kinds: Dict[int, str] = {}
+
+    for op in graph.ops:
+        info = op_info(op.opcode)
+        if info.cost is CostClass.COMPUTE:
+            kinds[op.oid] = "compute"
+        elif info.cost is CostClass.SHAPE:
+            kinds[op.oid] = "opaque"
+        elif info.prop in _LOOP_FUSABLE:
+            kinds[op.oid] = "loop"
+        elif info.prop is PropClass.REDUCE:
+            kinds[op.oid] = "input"
+        else:
+            kinds[op.oid] = "opaque"
+
+    producer = {}
+    for op in graph.ops:
+        for o in op.outputs:
+            producer[o.vid] = op
+
+    def out_value(op: DOp) -> DValue:
+        return op.outputs[0]
+
+    def fusable_edge(p: DOp, c: DOp) -> bool:
+        """Shape-hint legality of fusing producer p into consumer c."""
+        kp, kc = kinds[cs.find(p.oid)], kinds[cs.find(c.oid)]
+        if kp in ("compute", "opaque") or kc in ("compute", "opaque"):
+            return False
+        if kp == "input":
+            # a reduce is a cluster *root*: nothing fuses after it within
+            # the cluster (paper: input fusion with reduce as the root)
+            return False
+        pv = out_value(p)
+        if kc == "input":
+            # kInput: producers fuse if they share the reduce's INPUT size
+            red_in = c.inputs[0]
+            return (store.sizes_equal(pv.vid, red_in.vid)
+                    or _broadcast_compatible(graph, pv.shape, red_in.shape)
+                    or _is_tiny(graph, pv))
+        # kLoop: same element count (the paper's classic rule), proven via
+        # constraints — or implicit broadcast into the consumer's shape
+        cv = out_value(c)
+        return (store.sizes_equal(pv.vid, cv.vid)
+                or _broadcast_compatible(graph, pv.shape, cv.shape)
+                or _is_tiny(graph, pv))
+
+    for op in graph.ops:  # topological
+        for v in op.inputs:
+            p = producer.get(v.vid)
+            if p is None:
+                continue
+            ra, rb = cs.find(p.oid), cs.find(op.oid)
+            if ra == rb:
+                continue
+            if not fusable_edge(p, op):
+                continue
+            if cs.would_cycle(ra, rb):
+                continue
+            new_kind = "input" if "input" in (kinds[ra], kinds[rb]) else "loop"
+            root = cs.merge(ra, rb)
+            kinds[root] = new_kind
+
+    clusters: List[Cluster] = []
+    op_to_cluster: Dict[int, int] = {}
+    cid_iter = itertools.count()
+    roots = sorted(cs.members.keys(), key=lambda r: cs.members[r][0].oid)
+    for root in roots:
+        cid = next(cid_iter)
+        cl = Cluster(cid=cid, kind=kinds[root], ops=cs.members[root])
+        clusters.append(cl)
+        for m in cl.ops:
+            op_to_cluster[m.oid] = cid
+    return FusionPlan(graph=graph, clusters=clusters, op_to_cluster=op_to_cluster)

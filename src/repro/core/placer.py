@@ -1,0 +1,87 @@
+"""Host/device placement of shape calculation vs tensor compute — DISC §4.2.1.
+
+    "DISC separates shape computation and data processing during
+     compilation ... The placer component places shape calculation logic on
+     host side and tensor computation kernels on device side."
+
+Placement rule (as in the paper / Nimble): the backward closure of values
+feeding **shape operands** (dslice starts, etc.) that is cheap integer math
+is *shape calculation* → host; everything else is tensor compute → device.
+The generated dispatcher (``runtime.py``) executes host-placed ops with
+numpy inside the compiled host flow; device ops are traced into the jitted
+executable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Set
+
+import numpy as np
+
+from .dhlo import DGraph, DOp
+from .propagation import CostClass, op_info
+
+__all__ = ["Placement", "place"]
+
+_HOST_BYTES_LIMIT = 1024  # shape math is tiny by definition
+
+
+@dataclass
+class Placement:
+    host_ops: List[DOp]
+    device_ops: List[DOp]
+    host_value_ids: Set[int]
+
+    def report(self) -> Dict[str, int]:
+        return {"host_ops": len(self.host_ops), "device_ops": len(self.device_ops)}
+
+
+def _is_small_int(v) -> bool:
+    if not np.issubdtype(np.dtype(v.dtype), np.integer):
+        return False
+    n = 1
+    for d in v.shape:
+        if not isinstance(d, int):
+            return False
+        n *= d
+    return n * np.dtype(v.dtype).itemsize <= _HOST_BYTES_LIMIT
+
+
+def place(graph: DGraph) -> Placement:
+    producer: Dict[int, DOp] = {}
+    for op in graph.ops:
+        for o in op.outputs:
+            producer[o.vid] = op
+
+    # roots: values used as shape operands + outputs of SHAPE-cost ops
+    roots: List[DOp] = []
+    for op in graph.ops:
+        for v in op.shape_operands:
+            p = producer.get(v.vid)
+            if p is not None:
+                roots.append(p)
+        if op_info(op.opcode).cost is CostClass.SHAPE:
+            roots.append(op)
+
+    host: Set[int] = set()
+    stack = list(roots)
+    while stack:
+        op = stack.pop()
+        if op.oid in host:
+            continue
+        # only small integer computations move to host
+        if not all(_is_small_int(o) for o in op.outputs):
+            continue
+        if op_info(op.opcode).cost is CostClass.COMPUTE:
+            continue
+        host.add(op.oid)
+        for v in op.inputs:
+            p = producer.get(v.vid)
+            if p is not None:
+                stack.append(p)
+
+    host_ops = [op for op in graph.ops if op.oid in host]
+    device_ops = [op for op in graph.ops if op.oid not in host]
+    host_vals = {o.vid for op in host_ops for o in op.outputs}
+    return Placement(host_ops=host_ops, device_ops=device_ops,
+                     host_value_ids=host_vals)

@@ -1,0 +1,206 @@
+"""Per-op shape-propagation table — DISC §4.3 "shape hints collection".
+
+    "DISC maintains a table to indicate the propagation property of each op.
+     Some ops may have the same shape propagation property, like Add and Sub.
+     We classify ops according to their shape propagation properties in the
+     table to avoid repeated enumeration."
+
+Every DHLO opcode is registered once with:
+
+* ``prop``  — its *shape propagation class* (how shapes relate between its
+  operands and results).  Fusion and constraint collection dispatch on the
+  class, never on individual opcodes.
+* ``cost``  — compute-intensive (GEMM/conv — routed to the static-shape
+  library, §4.5) vs memory-intensive (fusion targets) vs shape-calculation
+  (host-placed, §4.2.1).
+* ``pad_identity`` — the value with which a *padded* tail must be filled so
+  bucketed execution is exact for ops that mix positions (reductions).
+
+``collect_semantic_constraints`` is the paper's first constraint source:
+walking the graph once and asserting the constraints implied by each op's
+semantics into the graph's :class:`ShapeConstraintStore`.
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from .dhlo import DGraph, DOp
+from .symshape import SymDim
+
+__all__ = [
+    "PropClass",
+    "CostClass",
+    "OpInfo",
+    "OP_TABLE",
+    "op_info",
+    "collect_semantic_constraints",
+]
+
+
+class PropClass(enum.Enum):
+    ELEMENTWISE = "elementwise"          # all non-scalar operands/results same shape
+    BROADCAST = "broadcast"              # dims map via broadcast_dimensions
+    RESHAPE = "reshape"                  # tensor-size preserving, dims remixed
+    TRANSPOSE = "transpose"              # size preserving + dim permutation
+    REDUCE = "reduce"                    # kept dims equal input dims
+    SLICE = "slice"                      # output dims from sizes (static or operand)
+    CONCAT = "concat"                    # non-concat dims equal
+    DOT = "dot"                          # batch/contracting equality
+    GATHER = "gather"                    # indexed
+    UPDATE = "update"                    # dynamic_update_slice: result == operand shape
+    IOTA = "iota"
+    OPAQUE = "opaque"
+
+
+class CostClass(enum.Enum):
+    MEMORY = "memory"      # fusion targets (paper's focus)
+    COMPUTE = "compute"    # GEMM/conv: library calls, never fused into loops
+    SHAPE = "shape"        # scalar/index math: host-placed
+
+
+@dataclass(frozen=True)
+class OpInfo:
+    prop: PropClass
+    cost: CostClass = CostClass.MEMORY
+    pad_identity: Optional[float] = None  # fill value making padded reduce exact
+
+
+_E = PropClass.ELEMENTWISE
+_M = CostClass.MEMORY
+
+OP_TABLE: Dict[str, OpInfo] = {}
+
+
+def _reg(names, info: OpInfo) -> None:
+    for n in names:
+        OP_TABLE[n] = info
+
+
+# one table row per *propagation class*, exactly as the paper describes
+_reg(
+    [
+        "add", "sub", "mul", "div", "rem", "pow", "max", "min", "and", "or",
+        "xor", "shift_left", "shift_right_logical", "shift_right_arithmetic",
+        "atan2", "nextafter",
+        "lt", "gt", "le", "ge", "eq", "ne",
+    ],
+    OpInfo(_E, _M),
+)
+_reg(
+    [
+        "neg", "exp", "expm1", "log", "log1p", "tanh", "logistic", "sqrt",
+        "rsqrt", "cbrt", "abs", "sign", "floor", "ceil", "round", "erf",
+        "erfc", "erf_inv", "sin", "cos", "tan", "asin", "acos", "atan",
+        "sinh", "cosh", "exp2", "not", "is_finite", "integer_pow",
+        "stop_gradient", "copy", "real", "imag", "square",
+    ],
+    OpInfo(_E, _M),
+)
+_reg(["select"], OpInfo(_E, _M))
+_reg(["convert"], OpInfo(_E, _M))
+_reg(["broadcast_in_dim"], OpInfo(PropClass.BROADCAST, _M))
+_reg(["reshape"], OpInfo(PropClass.RESHAPE, _M))
+_reg(["transpose"], OpInfo(PropClass.TRANSPOSE, _M))
+_reg(["rev"], OpInfo(PropClass.TRANSPOSE, _M))
+_reg(["reduce_sum"], OpInfo(PropClass.REDUCE, _M, pad_identity=0.0))
+_reg(["reduce_max", "argmax"], OpInfo(PropClass.REDUCE, _M, pad_identity=-math.inf))
+_reg(["reduce_min", "argmin"], OpInfo(PropClass.REDUCE, _M, pad_identity=math.inf))
+_reg(["reduce_prod"], OpInfo(PropClass.REDUCE, _M, pad_identity=1.0))
+_reg(["reduce_and"], OpInfo(PropClass.REDUCE, _M, pad_identity=1.0))
+_reg(["reduce_or"], OpInfo(PropClass.REDUCE, _M, pad_identity=0.0))
+_reg(["cumsum", "cummax", "cumprod"], OpInfo(PropClass.ELEMENTWISE, _M, pad_identity=0.0))
+_reg(["dot_general"], OpInfo(PropClass.DOT, CostClass.COMPUTE))
+_reg(["conv"], OpInfo(PropClass.OPAQUE, CostClass.COMPUTE))
+_reg(["slice"], OpInfo(PropClass.SLICE, _M))
+_reg(["dslice"], OpInfo(PropClass.SLICE, _M))          # DHLO dynamic slice
+_reg(["dynamic_update_slice"], OpInfo(PropClass.UPDATE, _M))
+_reg(["concatenate"], OpInfo(PropClass.CONCAT, _M))
+_reg(["pad"], OpInfo(PropClass.SLICE, _M))
+_reg(["iota"], OpInfo(PropClass.IOTA, _M))
+_reg(["gather", "take"], OpInfo(PropClass.GATHER, _M))
+_reg(["scatter_add"], OpInfo(PropClass.UPDATE, _M))
+_reg(["sort"], OpInfo(PropClass.ELEMENTWISE, _M))
+# shape-calculation ops (host-placed by the placer, §4.2.1)
+_reg(["shape_of", "dim_size", "index_add", "index_mul"], OpInfo(PropClass.OPAQUE, CostClass.SHAPE))
+
+
+def op_info(opcode: str) -> OpInfo:
+    try:
+        return OP_TABLE[opcode]
+    except KeyError:
+        return OpInfo(PropClass.OPAQUE, CostClass.MEMORY)
+
+
+# --------------------------------------------------------------------------
+# Constraint source #1: op semantics (§4.2.1 "captured by the DHLO op
+# semantic" — e.g. Transpose preserves tensor size; Add operands share shape)
+# --------------------------------------------------------------------------
+
+def collect_semantic_constraints(graph: DGraph) -> None:
+    store = graph.store
+    for op in graph.ops:
+        info = op_info(op.opcode)
+        p = info.prop
+        if p is PropClass.ELEMENTWISE:
+            # elementwise: non-scalar operands/results share a shape, except
+            # size-1 dims (jax keeps implicit rank-equal broadcast in binary
+            # primitives — a broadcast dim carries no equality information)
+            shapes = [v.shape for v in op.inputs if v.rank > 0]
+            shapes += [v.shape for v in op.outputs if v.rank > 0]
+            for a, b in zip(shapes, shapes[1:]):
+                if len(a) != len(b):
+                    continue
+                for da, db in zip(a, b):
+                    if (isinstance(da, int) and da == 1) or \
+                       (isinstance(db, int) and db == 1):
+                        continue
+                    store.assert_dim_eq(da, db)
+        elif p is PropClass.BROADCAST:
+            bdims = op.attrs.get("broadcast_dimensions", ())
+            (out,) = op.outputs
+            src = op.inputs[0]
+            for in_ax, out_ax in enumerate(bdims):
+                d = src.shape[in_ax]
+                if not (isinstance(d, int) and d == 1):
+                    store.assert_dim_eq(d, out.shape[out_ax])
+        elif p in (PropClass.RESHAPE, PropClass.TRANSPOSE):
+            (out,) = op.outputs
+            src = op.inputs[0]
+            store.assert_size_eq(src.vid, out.vid)
+            if p is PropClass.TRANSPOSE and "permutation" in op.attrs:
+                perm = op.attrs["permutation"]
+                for out_ax, in_ax in enumerate(perm):
+                    store.assert_dim_eq(src.shape[in_ax], out.shape[out_ax])
+            if op.opcode == "rev":
+                store.assert_shape_eq(src.shape, out.shape)
+        elif p is PropClass.REDUCE:
+            (out,) = op.outputs
+            src = op.inputs[0]
+            axes = set(op.attrs.get("axes", ()))
+            kept = [i for i in range(src.rank) if i not in axes]
+            if out.rank == len(kept):  # keepdims=False form
+                for o_ax, i_ax in enumerate(kept):
+                    store.assert_dim_eq(src.shape[i_ax], out.shape[o_ax])
+        elif p is PropClass.CONCAT:
+            (out,) = op.outputs
+            axis = op.attrs.get("dimension", 0)
+            for src in op.inputs:
+                for ax in range(src.rank):
+                    if ax != axis:
+                        store.assert_dim_eq(src.shape[ax], out.shape[ax])
+        elif p is PropClass.UPDATE:
+            (out,) = op.outputs
+            store.assert_shape_eq(op.inputs[0].shape, out.shape)
+        elif p is PropClass.DOT:
+            (out,) = op.outputs
+            lhs, rhs = op.inputs[0], op.inputs[1]
+            dnums = op.attrs.get("dimension_numbers")
+            if dnums is not None:
+                (lc, rc), (lb, rb) = dnums
+                for a, b in zip(lc, rc):
+                    store.assert_dim_eq(lhs.shape[a], rhs.shape[b])
+                for a, b in zip(lb, rb):
+                    store.assert_dim_eq(lhs.shape[a], rhs.shape[b])

@@ -1,0 +1,97 @@
+"""NimbleVM — the interpreted-runtime baseline (paper §5.2 comparison).
+
+Nimble "pre-builds runtime control as a VM ... the VM approach brings
+interpretation overhead".  This module is a faithful stand-in: a per-call
+interpreter over the DHLO graph that
+
+* walks the op list in Python for **every** invocation,
+* re-derives every shape with the interpreted ``eval_dim`` oracle,
+* dispatches each op individually and synchronizes after each dispatch
+  (modeling one kernel launch per op — no fusion),
+* manages intermediate buffers through the liveness plan + cached arena.
+
+DISC's generated dispatcher (``runtime.py``) does none of this per call —
+the delta between the two is exactly the paper's Table-2 "CPU time" claim,
+measured in ``benchmarks/bench_table2_nimble.py``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .buffers import CachedArena, liveness, plan_buffers
+from .codegen import _ShapeEnv  # exact-shape env reuse
+from .dhlo import DGraph, DValue
+from .emit import emit_op
+from .symshape import SymDim
+
+__all__ = ["NimbleVM"]
+
+
+@dataclass
+class VMStats:
+    calls: int = 0
+    op_dispatches: int = 0
+    interp_seconds: float = 0.0
+
+
+class NimbleVM:
+    """Per-op interpreter over a DHLO graph (the Nimble-style baseline)."""
+
+    def __init__(self, graph: DGraph, sync_per_op: bool = True) -> None:
+        self.graph = graph
+        self.sync_per_op = sync_per_op
+        self.buffer_plan = plan_buffers(graph)
+        self.arena = CachedArena()
+        self.stats = VMStats()
+
+    def __call__(self, *arrays):
+        t0 = time.perf_counter()
+        g = self.graph
+        # interpret shape bindings
+        bindings: Dict[int, int] = {}
+        for p, a in zip(g.params, arrays):
+            for d, size in zip(p.shape, a.shape):
+                if isinstance(d, SymDim):
+                    c = g.store.canon_dim(d)
+                    if isinstance(c, SymDim):
+                        bindings[c.uid] = int(size)
+        env = _ShapeEnv(g, padded=bindings, actual=dict(bindings))
+
+        spans = liveness(g)
+        vals: Dict[int, Any] = {p.vid: jnp.asarray(a)
+                                for p, a in zip(g.params, arrays)}
+
+        def read(v: DValue):
+            if v.vid in vals:
+                return vals[v.vid]
+            assert v.literal is not None, f"undefined {v!r}"
+            return jnp.asarray(v.literal)
+
+        out_ids = {o.vid for o in g.outputs}
+        for i, op in enumerate(g.ops):
+            ins = [read(v) for v in op.inputs]
+            ins += [read(v) for v in op.shape_operands]
+            out_shapes = [env.padded_shape(o.shape) for o in op.outputs]
+            outs = emit_op(op, ins, out_shapes)
+            if self.sync_per_op:
+                for o in outs:
+                    jax.block_until_ready(o)  # one "kernel launch" per op
+            self.stats.op_dispatches += 1
+            for o, val in zip(op.outputs, outs):
+                vals[o.vid] = val
+            # interpreted dealloc: free values whose last use just passed
+            dead = [vid for vid, (_, last) in spans.items()
+                    if last == i and vid not in out_ids]
+            for vid in dead:
+                vals.pop(vid, None)
+
+        result = [read(o) for o in g.outputs]
+        self.stats.calls += 1
+        self.stats.interp_seconds += time.perf_counter() - t0
+        return result

@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLMStream, VarLenRequestStream, pack_sequences  # noqa: F401

@@ -1,0 +1,1 @@
+from .jaxpr_frontend import ArgSpec, bridge  # noqa: F401

@@ -1,0 +1,470 @@
+"""Computation-graph bridging: jaxpr → DHLO — DISC §3 / §4.1 / §4.4.
+
+DISC lowers TensorFlow/PyTorch graphs into its hub IR (DHLO), collecting
+shape-constraint information *during* bridging.  Our host "framework" is JAX
+itself: any jax-traceable function is bridged by
+
+    graph, specs = bridge(fn, [ArgSpec(("B", "S", 512), jnp.float32), ...])
+
+Symbolic dims are declared by naming them in :class:`ArgSpec` shapes.  The
+bridge traces the function once at *representative* concrete sizes (distinct
+primes per symbol), walks the jaxpr, and rebuilds symbolic output shapes per
+primitive via the propagation rules — never by trusting concrete values alone
+except where a rule explicitly resymbolizes (reshape/broadcast/iota), where
+representative-prime matching recovers symbol structure.
+
+DHLO fidelity notes:
+
+* ``lax.dynamic_slice`` maps to the DHLO ``dslice`` op with its start indices
+  as **shape operands** — JAX's dynamic_slice *is* the paper's Figure-2
+  ``DSliceOp`` (tensor operands instead of constant attributes).
+* derived dims (reshape merges, concat sums, pad affine maps) are recorded in
+  ``graph.dim_exprs`` so the host-side *shape calculation* code (§4.2.1) can
+  be generated at compile time (see ``core/placer.py`` / ``core/runtime.py``).
+* every eqn also records its raw jax primitive + params in ``attrs`` so any
+  backend can faithfully re-emit the computation (the hub-IR property that
+  lets multiple backends hang off DHLO).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.extend import core as jcore
+
+from ..core.dhlo import DGraph, DOp, DValue
+from ..core.propagation import collect_semantic_constraints
+from ..core.symshape import Dim, SymDim, SymShape, dim_value, fresh_symdim
+
+__all__ = ["ArgSpec", "bridge", "eval_dim"]
+
+
+@dataclass(frozen=True)
+class ArgSpec:
+    """Shape spec with named symbolic dims, e.g. ``(("B", "S", 512), f32)``."""
+
+    shape: Tuple[Union[int, str], ...]
+    dtype: Any = jnp.float32
+    name: str = ""
+
+
+# representative primes for symbols — chosen to avoid common static dims
+_REPS = [37, 41, 43, 47, 53, 59, 61, 67, 71, 73, 79, 83, 89, 97, 101, 103]
+
+
+# ------------------------------------------------------------------ dims --
+
+def eval_dim(graph: DGraph, d: Dim, bindings: Dict[int, int]) -> int:
+    """Evaluate a (possibly derived) dim given input-symbol bindings.
+
+    This is the *specification* of the host-side shape calculation; the
+    runtime generates straight-line code equivalent to it (§4.2 'generated
+    runtime flow'), this interpreter is kept as the oracle.
+    """
+    if isinstance(d, int):
+        return d
+    if d.uid in bindings:
+        return bindings[d.uid]
+    expr = getattr(graph, "dim_exprs", {}).get(d.uid)
+    if expr is None:
+        raise KeyError(f"unbound symbolic dim {d!r}")
+    tag = expr[0]
+    if tag == "mul":
+        v = 1
+        for x in expr[1]:
+            v *= eval_dim(graph, x, bindings)
+        return v
+    if tag == "sum":
+        return sum(eval_dim(graph, x, bindings) for x in expr[1])
+    if tag == "affine":  # a*d + b
+        _, base, a, b = expr
+        return a * eval_dim(graph, base, bindings) + b
+    if tag == "div":  # exact division
+        _, base, k = expr
+        v = eval_dim(graph, base, bindings)
+        return v // k
+    raise ValueError(f"unknown dim expr {expr}")
+
+
+class _Bridge:
+    def __init__(self, name: str) -> None:
+        self.graph = DGraph(name=name)
+        self.graph.dim_exprs = {}
+        self.env: Dict[Any, DValue] = {}
+        self.symbols: Dict[str, SymDim] = {}
+        # representative value -> SymDim, for resymbolization
+        self.rep_to_dim: Dict[int, SymDim] = {}
+        self._rep_iter = itertools.count()
+
+    # ------------------------------------------------------------ symbols
+    def symbol(self, name: str) -> SymDim:
+        if name not in self.symbols:
+            idx = next(self._rep_iter)
+            rep = _REPS[idx % len(_REPS)] + 131 * (idx // len(_REPS))
+            d = fresh_symdim(name, rep=rep)
+            self.symbols[name] = d
+            self.rep_to_dim[d.rep] = d
+        return self.symbols[name]
+
+    def derived(self, name: str, rep: int, expr: Tuple) -> SymDim:
+        d = fresh_symdim(name, rep=rep)
+        self.graph.dim_exprs[d.uid] = expr
+        self.rep_to_dim.setdefault(rep, d)
+        return d
+
+    def resymbolize(self, size: int, local_dims: Sequence[Dim]) -> Dim:
+        """Map a concrete traced size back to symbolic structure."""
+        # 1. exact match against this op's input dims (shape propagation)
+        for d in local_dims:
+            if isinstance(d, SymDim) and d.rep == size:
+                return d
+        # 2. exact match against any known symbol
+        if size in self.rep_to_dim:
+            return self.rep_to_dim[size]
+        # 3. product of two known local symbolic dims (reshape merge)
+        syms = [d for d in local_dims if isinstance(d, SymDim)]
+        for i, a in enumerate(syms):
+            for b in syms[i:]:
+                if a.rep * b.rep == size:
+                    return self.derived(
+                        f"{a.name}*{b.name}", size, ("mul", (a, b))
+                    )
+            # symbol * static factor (e.g. merge of (S, 128) -> S*128)
+            if size % a.rep == 0:
+                k = size // a.rep
+                return self.derived(f"{a.name}*{k}", size, ("mul", (a, k)))
+        # 4. genuinely static
+        return int(size)
+
+    # -------------------------------------------------------------- values
+    def read(self, atom) -> DValue:
+        if isinstance(atom, jcore.Literal):
+            arr = np.asarray(atom.val)
+            return self.graph.add_const(arr)
+        return self.env[atom]
+
+    def write(self, var, val: DValue) -> None:
+        self.env[var] = val
+
+
+# generic elementwise/unary primitive name passthroughs (jax name -> dhlo name)
+_DIRECT = {
+    "add": "add", "sub": "sub", "mul": "mul", "div": "div", "rem": "rem",
+    "pow": "pow", "max": "max", "min": "min", "and": "and", "or": "or",
+    "xor": "xor", "atan2": "atan2", "nextafter": "nextafter",
+    "eq": "eq", "ne": "ne", "lt": "lt", "gt": "gt", "le": "le", "ge": "ge",
+    "neg": "neg", "sign": "sign", "floor": "floor", "ceil": "ceil",
+    "round": "round", "exp": "exp", "exp2": "exp2", "expm1": "expm1",
+    "log": "log", "log1p": "log1p", "tanh": "tanh", "logistic": "logistic",
+    "sqrt": "sqrt", "rsqrt": "rsqrt", "cbrt": "cbrt", "abs": "abs",
+    "erf": "erf", "erfc": "erfc", "erf_inv": "erf_inv", "sin": "sin",
+    "cos": "cos", "tan": "tan", "asin": "asin", "acos": "acos",
+    "atan": "atan", "sinh": "sinh", "cosh": "cosh", "not": "not",
+    "is_finite": "is_finite", "integer_pow": "integer_pow",
+    "stop_gradient": "stop_gradient", "copy": "copy", "square": "square",
+    "select_n": "select", "shift_left": "shift_left",
+    "shift_right_logical": "shift_right_logical",
+    "shift_right_arithmetic": "shift_right_arithmetic",
+    "clamp": "clamp", "sort": "sort", "cumsum": "cumsum",
+    "cummax": "cummax", "cumprod": "cumprod", "rev": "rev",
+}
+
+_REDUCES = {
+    "reduce_sum": "reduce_sum", "reduce_max": "reduce_max",
+    "reduce_min": "reduce_min", "reduce_prod": "reduce_prod",
+    "reduce_and": "reduce_and", "reduce_or": "reduce_or",
+    "argmax": "argmax", "argmin": "argmin",
+}
+
+_INLINE = {"pjit", "jit", "closed_call", "custom_jvp_call",
+           "custom_vjp_call", "remat", "checkpoint",
+           "custom_vjp_call_jaxpr", "core_call"}
+
+
+def _sym_out_shape_ew(b: _Bridge, in_vals: List[DValue], aval) -> SymShape:
+    """Elementwise result: shape of the highest-rank symbolic operand."""
+    for v in in_vals:
+        if v.rank == len(aval.shape) and tuple(dim_value(d) for d in v.shape) == tuple(aval.shape):
+            return v.shape
+    local = [d for v in in_vals for d in v.shape]
+    return tuple(b.resymbolize(s, local) for s in aval.shape)
+
+
+def _bridge_eqn(b: _Bridge, eqn) -> None:
+    prim = eqn.primitive
+    name = prim.name
+    params = dict(eqn.params)
+
+    if name in _INLINE:
+        sub = params.get("jaxpr") or params.get("call_jaxpr") or params.get("fun_jaxpr")
+        if sub is not None:
+            closed = sub if isinstance(sub, jcore.ClosedJaxpr) else jcore.ClosedJaxpr(sub, ())
+            inner = closed.jaxpr
+            for var, outer_atom in zip(inner.invars, eqn.invars):
+                b.write(var, b.read(outer_atom))
+            for cvar, cval in zip(inner.constvars, closed.consts):
+                b.write(cvar, b.graph.add_const(np.asarray(cval)))
+            for inner_eqn in inner.eqns:
+                _bridge_eqn(b, inner_eqn)
+            for outer_var, inner_atom in zip(eqn.outvars, inner.outvars):
+                b.write(outer_var, b.read(inner_atom))
+            return
+
+    in_vals = [b.read(a) for a in eqn.invars]
+    g = b.graph
+    attrs: Dict[str, Any] = {"_prim": prim, "_params": params}
+
+    def emit(opcode, inputs, out_shapes, shape_operands=(), extra_attrs=None):
+        a = dict(attrs)
+        if extra_attrs:
+            a.update(extra_attrs)
+        out_dtypes = [v.aval.dtype for v in eqn.outvars]
+        op = g.add_op(opcode, inputs, out_shapes, out_dtypes,
+                      shape_operands=shape_operands, attrs=a)
+        for var, val in zip(eqn.outvars, op.outputs):
+            b.write(var, val)
+        return op
+
+    if name in _DIRECT:
+        out_shapes = [_sym_out_shape_ew(b, in_vals, v.aval) for v in eqn.outvars]
+        emit(_DIRECT[name], in_vals, out_shapes)
+        return
+
+    if name == "convert_element_type":
+        emit("convert", in_vals, [in_vals[0].shape],
+             extra_attrs={"new_dtype": params.get("new_dtype")})
+        return
+
+    if name in _REDUCES:
+        axes = tuple(params.get("axes", ()))
+        src = in_vals[0]
+        kept = tuple(d for i, d in enumerate(src.shape) if i not in set(axes))
+        emit(_REDUCES[name], in_vals, [kept], extra_attrs={"axes": axes})
+        return
+
+    if name == "broadcast_in_dim":
+        shape = tuple(params["shape"])
+        bdims = tuple(params["broadcast_dimensions"])
+        src = in_vals[0]
+        out_shape: List[Dim] = []
+        for out_ax, size in enumerate(shape):
+            if out_ax in bdims:
+                in_ax = bdims.index(out_ax)
+                d = src.shape[in_ax]
+                out_shape.append(d if not (isinstance(d, int) and d == 1 and size != 1)
+                                 else b.resymbolize(size, list(src.shape)))
+            else:
+                out_shape.append(b.resymbolize(size, list(src.shape)))
+        emit("broadcast_in_dim", in_vals, [tuple(out_shape)],
+             extra_attrs={"broadcast_dimensions": bdims})
+        return
+
+    if name == "reshape":
+        new_sizes = tuple(params["new_sizes"])
+        src = in_vals[0]
+        out_shape = tuple(b.resymbolize(s, list(src.shape)) for s in new_sizes)
+        emit("reshape", in_vals, [out_shape])
+        return
+
+    if name == "squeeze":
+        dims = set(params.get("dimensions", ()))
+        src = in_vals[0]
+        out_shape = tuple(d for i, d in enumerate(src.shape) if i not in dims)
+        emit("reshape", in_vals, [out_shape])
+        return
+
+    if name == "expand_dims":
+        dims = sorted(params.get("dimensions", ()))
+        src = in_vals[0]
+        out_shape = list(src.shape)
+        for ax in dims:
+            out_shape.insert(ax, 1)
+        emit("reshape", in_vals, [tuple(out_shape)])
+        return
+
+    if name == "transpose":
+        perm = tuple(params["permutation"])
+        src = in_vals[0]
+        out_shape = tuple(src.shape[i] for i in perm)
+        emit("transpose", in_vals, [out_shape], extra_attrs={"permutation": perm})
+        return
+
+    if name == "dot_general":
+        dnums = params["dimension_numbers"]
+        (lc, rc), (lb, rb) = dnums
+        lhs, rhs = in_vals[0], in_vals[1]
+        batch = [lhs.shape[i] for i in lb]
+        lfree = [d for i, d in enumerate(lhs.shape) if i not in set(lc) | set(lb)]
+        rfree = [d for i, d in enumerate(rhs.shape) if i not in set(rc) | set(rb)]
+        out_shape = tuple(batch + lfree + rfree)
+        emit("dot_general", in_vals, [out_shape],
+             extra_attrs={"dimension_numbers": ((tuple(lc), tuple(rc)), (tuple(lb), tuple(rb)))})
+        return
+
+    if name == "dynamic_slice":
+        # DHLO DSliceOp: start indices are tensor operands, not attrs (Fig. 2)
+        operand = in_vals[0]
+        starts = in_vals[1:]
+        sizes = tuple(params["slice_sizes"])
+        out_shape = tuple(b.resymbolize(s, list(operand.shape)) for s in sizes)
+        emit("dslice", [operand], [out_shape], shape_operands=starts,
+             extra_attrs={"slice_sizes": sizes})
+        return
+
+    if name == "dynamic_update_slice":
+        operand, update = in_vals[0], in_vals[1]
+        starts = in_vals[2:]
+        emit("dynamic_update_slice", [operand, update], [operand.shape],
+             shape_operands=starts)
+        return
+
+    if name == "slice":
+        starts = tuple(params["start_indices"])
+        limits = tuple(params["limit_indices"])
+        strides = tuple(params["strides"] or (1,) * len(starts))
+        src = in_vals[0]
+        out_shape: List[Dim] = []
+        for ax, (s, l, st) in enumerate(zip(starts, limits, strides)):
+            d = src.shape[ax]
+            if isinstance(d, SymDim) and st == 1 and l == d.rep:
+                if s == 0:
+                    out_shape.append(d)
+                else:
+                    out_shape.append(b.derived(f"{d.name}-{s}", d.rep - s,
+                                               ("affine", d, 1, -s)))
+            else:
+                out_shape.append(-(-(l - s) // st))
+        emit("slice", in_vals, [tuple(out_shape)],
+             extra_attrs={"start_indices": starts, "limit_indices": limits,
+                          "strides": strides})
+        return
+
+    if name == "split":
+        # High-level split: lowered to multiple *independent* DHLO slice ops
+        # (mirroring TF.SplitOp -> DHLO.SliceOp in the paper), with the
+        # "all outputs same shape" hint injected during bridging (§4.2.1).
+        axis = int(params["axis"])
+        sizes = [int(s) for s in params["sizes"]]
+        src = in_vals[0]
+        outs: List[DValue] = []
+        offset = 0
+        even = len(set(sizes)) == 1
+        for out_var, size in zip(eqn.outvars, sizes):
+            starts = tuple(offset if ax == axis else 0 for ax in range(src.rank))
+            limits = tuple(
+                (offset + size) if ax == axis else dim_value(src.shape[ax])
+                for ax in range(src.rank)
+            )
+            out_shape = tuple(
+                size if ax == axis else src.shape[ax] for ax in range(src.rank)
+            )
+            op = g.add_op(
+                "slice", [src], [out_shape], [out_var.aval.dtype],
+                attrs={**attrs, "start_indices": starts,
+                       "limit_indices": limits,
+                       "strides": (1,) * src.rank},
+            )
+            b.write(out_var, op.outputs[0])
+            outs.append(op.outputs[0])
+            offset += size
+        if even:
+            for o in outs[1:]:
+                g.store.assert_shape_eq(outs[0].shape, o.shape)
+                g.store.assert_size_eq(outs[0].vid, o.vid)
+        return
+
+    if name == "concatenate":
+        axis = int(params["dimension"])
+        parts = [v.shape[axis] for v in in_vals]
+        if all(isinstance(p, int) for p in parts):
+            cat: Dim = sum(parts)  # type: ignore[assignment]
+        else:
+            rep = sum(dim_value(p) for p in parts)
+            cat = b.derived("+".join(getattr(p, "name", str(p)) for p in parts),
+                            rep, ("sum", tuple(parts)))
+        out_shape = tuple(cat if ax == axis else in_vals[0].shape[ax]
+                          for ax in range(in_vals[0].rank))
+        emit("concatenate", in_vals, [out_shape], extra_attrs={"dimension": axis})
+        return
+
+    if name == "pad":
+        cfg = tuple(params["padding_config"])
+        src = in_vals[0]
+        out_shape = []
+        for d, (lo, hi, interior) in zip(src.shape, cfg):
+            if isinstance(d, SymDim):
+                if interior == 0:
+                    out_shape.append(
+                        b.derived(f"{d.name}+{lo + hi}", d.rep + lo + hi,
+                                  ("affine", d, 1, lo + hi)))
+                else:
+                    scale = 1 + interior
+                    off = lo + hi - interior
+                    out_shape.append(
+                        b.derived(f"{d.name}*{scale}", scale * d.rep + off,
+                                  ("affine", d, scale, off)))
+            else:
+                out_shape.append(d + lo + hi + max(d - 1, 0) * interior)
+        emit("pad", in_vals, [tuple(out_shape)], extra_attrs={"padding_config": cfg})
+        return
+
+    if name == "iota":
+        shape = tuple(params["shape"])
+        out_shape = tuple(b.resymbolize(s, []) for s in shape)
+        emit("iota", in_vals, [out_shape],
+             extra_attrs={"dimension": params.get("dimension", 0),
+                          "iota_dtype": params.get("dtype")})
+        return
+
+    # ---- generic fallback: keep the primitive; resymbolize outputs ----
+    # call-like primitives must be inlined above — binding a rep-traced
+    # inner jaxpr at a different bucket shape would be silently wrong
+    for pk in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if pk in params and name not in ("scan", "while", "cond"):
+            raise NotImplementedError(
+                f"call-like primitive {name!r} with {pk} was not inlined — "
+                f"add it to _INLINE in jaxpr_frontend.py")
+    local = [d for v in in_vals for d in v.shape]
+    out_shapes = [tuple(b.resymbolize(s, local) for s in v.aval.shape)
+                  for v in eqn.outvars]
+    out_dtypes = [v.aval.dtype for v in eqn.outvars]
+    op = g.add_op(name, in_vals, out_shapes, out_dtypes, attrs=attrs)
+    for var, val in zip(eqn.outvars, op.outputs):
+        b.write(var, val)
+
+
+def bridge(fn: Callable, arg_specs: Sequence[ArgSpec], *, name: str = "graph",
+           collect_hints: bool = True) -> Tuple[DGraph, List[ArgSpec]]:
+    """Lower ``fn`` to a DHLO graph, collecting shape constraints (§4.2.1)."""
+    b = _Bridge(name)
+    sym_shapes: List[SymShape] = []
+    for spec in arg_specs:
+        dims: List[Dim] = []
+        for s in spec.shape:
+            dims.append(b.symbol(s) if isinstance(s, str) else int(s))
+        sym_shapes.append(tuple(dims))
+
+    concrete = [jax.ShapeDtypeStruct(tuple(dim_value(d) for d in sh), spec.dtype)
+                for sh, spec in zip(sym_shapes, arg_specs)]
+    closed = jax.make_jaxpr(fn)(*concrete)
+
+    for spec, sh, var in zip(arg_specs, sym_shapes, closed.jaxpr.invars):
+        v = b.graph.add_param(sh, spec.dtype, name=spec.name)
+        b.write(var, v)
+    for cvar, cval in zip(closed.jaxpr.constvars, closed.consts):
+        b.write(cvar, b.graph.add_const(np.asarray(cval)))
+    for eqn in closed.jaxpr.eqns:
+        _bridge_eqn(b, eqn)
+    b.graph.set_outputs([b.read(a) for a in closed.jaxpr.outvars])
+
+    # constraint source #1: op semantics
+    collect_semantic_constraints(b.graph)
+    # constraint source #2: high-level-op structure hints
+    if collect_hints:
+        from .hints import collect_frontend_hints
+        collect_frontend_hints(b.graph)
+    return b.graph, list(arg_specs)

@@ -1,0 +1,1 @@
+from .supervisor import Supervisor, HeartbeatMonitor, ElasticPlan  # noqa: F401

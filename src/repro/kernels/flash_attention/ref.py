@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: masked multi-head attention with per-batch kv lengths."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, lens, *, causal=True, scale=None):
+    """q: (B,H,Sq,D); k,v: (B,Hkv,Sk,D); lens: (B,) valid kv lengths."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = h // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    k_idx = jnp.arange(sk)[None, None, None, :]
+    mask = k_idx < lens[:, None, None, None]
+    if causal:
+        q_idx = jnp.arange(sq)[None, None, :, None]
+        mask = jnp.logical_and(mask, k_idx <= q_idx)
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(mask, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p / l, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

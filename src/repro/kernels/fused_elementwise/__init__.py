@@ -1,0 +1,1 @@
+from .ops import fused_elementwise  # noqa: F401

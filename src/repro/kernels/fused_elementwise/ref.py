@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused elementwise kernel."""
+from __future__ import annotations
+
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_elementwise_ref(expr: Callable, inputs: Sequence[jax.Array],
+                          n_valid, out_dtypes: Sequence) -> List[jax.Array]:
+    ys = expr(*inputs)
+    if not isinstance(ys, (tuple, list)):
+        ys = (ys,)
+    total = inputs[0].shape[0]
+    mask = jnp.arange(total) < n_valid
+    return [jnp.where(mask, y, jnp.zeros_like(y)).astype(dt)
+            for y, dt in zip(ys, out_dtypes)]

@@ -1,0 +1,41 @@
+"""jit wrapper + row-block version selection for the kInput kernel."""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .fused_reduce import fused_reduce_kernel
+
+ROW_VERSIONS = (8, 64, 256)
+_VMEM_BUDGET = 4 * 1024 * 1024  # bytes per operand tile we allow
+
+
+def select_row_block(r: int, c: int, itemsize: int = 4) -> int:
+    fits = [b for b in ROW_VERSIONS
+            if r % b == 0 and b * c * itemsize <= _VMEM_BUDGET]
+    if not fits:
+        return 0
+    pipelined = [b for b in fits if r // b >= 2]
+    return max(pipelined) if pipelined else max(fits)
+
+
+def fused_reduce(expr: Callable, inputs: Sequence[jax.Array], n_valid_cols,
+                 kind: str = "sum", *, interpret: bool = True) -> jax.Array:
+    """(..., C) inputs reduced over the last axis with dynamic valid cols."""
+    lead = inputs[0].shape[:-1]
+    c = inputs[0].shape[-1]
+    flat = [x.reshape(-1, c) for x in inputs]
+    r = flat[0].shape[0]
+    block_r = select_row_block(r, c, jnp.dtype(flat[0].dtype).itemsize)
+    if block_r == 0:
+        b = ROW_VERSIONS[0]
+        pad = (-r) % b
+        flat = [jnp.pad(x, ((0, pad), (0, 0))) for x in flat]
+        out = fused_reduce_kernel(expr, flat, n_valid_cols, kind,
+                                  block_r=b, interpret=interpret)
+        return out[:r].reshape(lead)
+    out = fused_reduce_kernel(expr, flat, n_valid_cols, kind,
+                              block_r=block_r, interpret=interpret)
+    return out.reshape(lead)

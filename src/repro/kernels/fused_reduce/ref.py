@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused reduce (kInput) kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .fused_reduce import REDUCE_IDENTITY
+
+_REDUCERS = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min, "prod": jnp.prod}
+
+
+def fused_reduce_ref(expr, inputs, n_valid_cols, kind: str):
+    y = expr(*inputs)
+    c = y.shape[1]
+    mask = jnp.arange(c)[None, :] < n_valid_cols
+    y = jnp.where(mask, y, jnp.asarray(REDUCE_IDENTITY[kind], y.dtype))
+    return _REDUCERS[kind](y, axis=1)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for fused LayerNorm."""
+import jax.numpy as jnp
+
+
+def layernorm_ref(x, g, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    xc = xf - mu
+    var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    y = xc / jnp.sqrt(var + eps) * g.astype(jnp.float32) + b.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,1 @@
+from .ops import mamba2_scan  # noqa: F401

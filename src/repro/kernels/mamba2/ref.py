@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the Mamba-2 SSD scan (sequential form)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba2_ref(x, a, b, c):
+    """x: (B,H,T,P); a: (B,H,T,1); b,c: (B,H,T,N)."""
+    n = b.shape[-1]
+    p = x.shape[-1]
+
+    def scan_head(x_h, a_h, b_h, c_h):
+        def step(h, inp):
+            xt, at, bt, ct = inp
+            h = at * h + jnp.outer(bt, xt)
+            return h, ct @ h
+        h0 = jnp.zeros((n, p), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (x_h.astype(jnp.float32),
+                                        a_h.astype(jnp.float32),
+                                        b_h.astype(jnp.float32),
+                                        c_h.astype(jnp.float32)))
+        return ys
+
+    out = jax.vmap(jax.vmap(scan_head))(x, a, b, c)
+    return out.astype(x.dtype)

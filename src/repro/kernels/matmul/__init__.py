@@ -1,0 +1,1 @@
+from .ops import matmul, select_gemm_version, GEMM_LIBRARY  # noqa: F401

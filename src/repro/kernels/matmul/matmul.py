@@ -1,0 +1,63 @@
+"""Blocked MXU matmul — the static-shape kernel library body (DISC §4.5).
+
+    "we implement an interface to choose the best kernel from a library
+     according to different runtime shapes.  The library contains both
+     vendor libraries ... and pre-generated kernels that has been
+     hand-tuned for each shape."
+
+This file is the *pre-generated kernel*: a classic 3-level blocked GEMM
+(grid (M/bm, N/bn, K/bk), f32 VMEM accumulator persisting across the
+sequential K dimension, MXU-aligned 128-multiple blocks).  ``ops.py``
+holds the library: a version table of hand-picked block shapes plus the
+runtime-shape selection interface; the "vendor library" entry is XLA's
+native dot (jnp.dot).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["matmul_kernel"]
+
+
+def _body(a_ref, b_ref, o_ref, acc_ref):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_kernel(a: jax.Array, b: jax.Array, *, block_m: int = 128,
+                  block_k: int = 128, block_n: int = 128,
+                  interpret: bool = True) -> jax.Array:
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % block_m == 0 and k % block_k == 0 and n % block_n == 0
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        _body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,56 @@
+"""The static-shape kernel library + runtime selection — DISC §4.5.
+
+``GEMM_LIBRARY`` maps a named version to block shapes "hand-tuned" for a
+shape regime; :func:`select_gemm_version` is the runtime-shape selection
+interface.  Unaligned/small shapes route to the vendor entry (XLA dot) —
+exactly the paper's vendor-library/pre-generated-kernel mix.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul_kernel
+
+# name -> (block_m, block_k, block_n): tuned per shape regime
+GEMM_LIBRARY = {
+    "square_big": (256, 128, 256),   # large square-ish GEMMs
+    "balanced": (128, 128, 128),     # default MXU tile
+    "skinny_m": (8, 128, 128),       # small-M (decode-style GEMV-ish)
+    "skinny_n": (128, 128, 8),       # small-N
+    "deep_k": (128, 512, 128),       # reduction-dominated
+}
+
+
+def select_gemm_version(m: int, k: int, n: int) -> Optional[str]:
+    """Pick a library kernel for a runtime shape; None -> vendor (XLA)."""
+    def fits(name):
+        bm, bk, bn = GEMM_LIBRARY[name]
+        return m % bm == 0 and k % bk == 0 and n % bn == 0
+
+    if m >= 1024 and n >= 1024 and fits("square_big"):
+        return "square_big"
+    if m <= 32 and fits("skinny_m"):
+        return "skinny_m"
+    if n <= 32 and fits("skinny_n"):
+        return "skinny_n"
+    if k >= 4 * max(m, n) and fits("deep_k"):
+        return "deep_k"
+    if fits("balanced"):
+        return "balanced"
+    return None  # vendor library (XLA dot)
+
+
+def matmul(a: jax.Array, b: jax.Array, *, version: Optional[str] = None,
+           interpret: bool = True) -> jax.Array:
+    m, k = a.shape
+    _, n = b.shape
+    if version is None:
+        version = select_gemm_version(m, k, n)
+    if version is None:
+        return jnp.dot(a, b)  # vendor entry
+    bm, bk, bn = GEMM_LIBRARY[version]
+    return matmul_kernel(a, b, block_m=bm, block_k=bk, block_n=bn,
+                         interpret=interpret)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jnp.reciprocal(jnp.sqrt(ms + eps)) * w.astype(jnp.float32)
+            ).astype(x.dtype)

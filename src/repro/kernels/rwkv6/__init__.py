@@ -1,0 +1,1 @@
+from .ops import rwkv6_scan  # noqa: F401

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(r, k, v, w, u):
+    """r,k,w: (B,H,T,K); v: (B,H,T,V); u: (H,K)."""
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def scan_head(r_h, k_h, v_h, w_h, u_h):
+        def step(s, inp):
+            rt, kt, vt, wt = inp
+            kv = jnp.outer(kt, vt)
+            yt = rt @ (s + u_h[:, None] * kv)
+            s = wt[:, None] * s + kv
+            return s, yt
+        s0 = jnp.zeros((dk, dv), jnp.float32)
+        _, ys = jax.lax.scan(step, s0, (r_h, k_h, v_h, w_h))
+        return ys
+
+    out = jax.vmap(  # over B
+        jax.vmap(scan_head, in_axes=(0, 0, 0, 0, 0)),  # over H
+        in_axes=(0, 0, 0, 0, None),
+    )(rf, kf, vf, wf, uf)
+    return out.astype(r.dtype)

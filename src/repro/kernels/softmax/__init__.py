@@ -1,0 +1,1 @@
+from .ops import masked_softmax  # noqa: F401

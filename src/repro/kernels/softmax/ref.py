@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for masked softmax."""
+import jax.numpy as jnp
+
+
+def masked_softmax_ref(x, n_valid):
+    r, c = x.shape
+    mask = jnp.arange(c)[None, :] < n_valid
+    xm = jnp.where(mask, x, -jnp.inf)
+    m = jnp.max(xm, axis=1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.where(mask, jnp.exp(xm - m), 0.0)
+    s = jnp.sum(e, axis=1, keepdims=True)
+    s = jnp.where(s == 0, 1.0, s)
+    return e / s

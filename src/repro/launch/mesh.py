@@ -1,0 +1,33 @@
+"""Production mesh construction (multi-pod dry-run contract).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "MESH_AXES"]
+
+MESH_AXES = {"single": ("data", "model"), "multi": ("pod", "data", "model")}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh.
+
+    ``pod`` composes with ``data`` for gradient reduction (hierarchical:
+    reduce-scatter intra-pod, all-reduce inter-pod is XLA's decomposition
+    given the axis ordering).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run via "
+            f"launch/dryrun.py which forces XLA_FLAGS host device count")
+    import numpy as np
+    return jax.sharding.Mesh(np.array(devices).reshape(shape), axes)

@@ -1,0 +1,91 @@
+"""Assigned input-shape cells and per-arch applicability (DESIGN §4).
+
+Shape cells (LM transformers: seq_len x global_batch):
+  train_4k    : seq 4,096   batch 256  -> train_step
+  prefill_32k : seq 32,768  batch 32   -> prefill (forward)
+  decode_32k  : seq 32,768  batch 128  -> serve_step (1 new token, KV=seq)
+  long_500k   : seq 524,288 batch 1    -> serve_step; sub-quadratic only
+
+``long_500k`` runs only for SSM/hybrid archs (rwkv6-3b, zamba2-7b); the
+8 full-attention archs skip it (recorded skip).  whisper-tiny is enc-dec:
+decode cells run against its decoder with the static 1500-frame encoder
+memory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, get_config
+from ..models.common import ArchConfig
+
+__all__ = ["ShapeCell", "SHAPE_CELLS", "cells_for_arch", "input_specs",
+           "all_cells"]
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPE_CELLS = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+_SUBQUADRATIC = {"rwkv6_3b", "zamba2_7b"}
+
+
+def cells_for_arch(arch_id: str) -> List[str]:
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch_id in _SUBQUADRATIC:
+        cells.append("long_500k")
+    return cells
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    return [(a, c) for a in ARCH_IDS for c in cells_for_arch(a)]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of one cell.
+
+    Weak-type-correct, shardable, no device allocation.  Modality frontends
+    are stubs: whisper gets precomputed frame embeddings, llava gets anyres
+    patch embeddings (image tokens count toward seq_len).
+    """
+    b, s = cell.global_batch, cell.seq_len
+    act_dt = jnp.bfloat16 if cfg.dtype == "bf16" else jnp.float32
+    if cell.kind in ("train", "prefill"):
+        batch = {}
+        s_text = s
+        if cfg.family == "vlm":
+            n_img = min(cfg.max_image_tokens, s // 2)
+            n_img = (n_img // 576) * 576 or 576   # whole anyres tiles
+            s_text = s - n_img
+            batch["image_embeds"] = _sds((b, n_img, cfg.d_model), act_dt)
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((b, cfg.encoder_len, cfg.d_model), act_dt)
+        batch["tokens"] = _sds((b, s_text), jnp.int32)
+        if cell.kind == "train":
+            batch["labels"] = _sds((b, s_text), jnp.int32)
+            batch["mask"] = _sds((b, s_text), jnp.float32)
+        return batch
+    # decode: one new token against a cache filled to seq_len
+    batch = {"tokens": _sds((b, 1), jnp.int32),
+             "lens": _sds((b,), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["enc_out"] = _sds((b, cfg.encoder_len, cfg.d_model), act_dt)
+    return batch

@@ -1,0 +1,3 @@
+"""Model zoo: the 10 assigned architectures as composable pure-JAX models."""
+from .common import ArchConfig  # noqa: F401
+from .registry import get_model, MODEL_FAMILIES  # noqa: F401

@@ -1,0 +1,79 @@
+"""Model registry: family -> (init/specs/forward/loss/cache/decode) bundle."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from . import rwkv, transformer, whisper, zamba
+from .common import ArchConfig
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable            # (rng) -> params
+    specs: Callable           # () -> PartitionSpec tree (congruent to params)
+    forward: Callable         # (params, batch) -> logits
+    loss: Callable            # (params, batch) -> scalar
+    init_cache: Callable      # (batch, max_len) -> cache
+    cache_specs: Callable     # () -> PartitionSpec tree
+    decode_step: Callable     # (params, cache, tokens, lens, **kw) -> (logits, cache)
+
+
+def _lm_bundle(mod, cfg: ArchConfig) -> Model:
+    def fwd(params, batch):
+        return mod.forward(cfg, params, batch["tokens"],
+                           lens=batch.get("lens"),
+                           extra_embeds=batch.get("image_embeds"))
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: mod.init(cfg, rng),
+        specs=lambda: mod.specs(cfg),
+        forward=fwd,
+        loss=lambda params, batch: mod.loss_fn(cfg, params, batch),
+        init_cache=lambda b, s: mod.init_cache(cfg, b, s),
+        cache_specs=lambda: mod.cache_specs(cfg),
+        decode_step=lambda params, cache, tokens, lens, **kw:
+            mod.decode_step(cfg, params, cache, tokens, lens, **kw),
+    )
+
+
+def _whisper_bundle(cfg: ArchConfig) -> Model:
+    def fwd(params, batch):
+        return whisper.forward(cfg, params, batch["tokens"],
+                               frames=batch["frames"],
+                               lens=batch.get("lens"))
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: whisper.init(cfg, rng),
+        specs=lambda: whisper.specs(cfg),
+        forward=fwd,
+        loss=lambda params, batch: whisper.loss_fn(cfg, params, batch),
+        init_cache=lambda b, s: whisper.init_cache(cfg, b, s),
+        cache_specs=lambda: whisper.cache_specs(cfg),
+        decode_step=lambda params, cache, tokens, lens, **kw:
+            whisper.decode_step(cfg, params, cache, tokens, lens, **kw),
+    )
+
+
+MODEL_FAMILIES = {
+    "dense": lambda cfg: _lm_bundle(transformer, cfg),
+    "moe": lambda cfg: _lm_bundle(transformer, cfg),
+    "vlm": lambda cfg: _lm_bundle(transformer, cfg),
+    "ssm": lambda cfg: _lm_bundle(rwkv, cfg),
+    "hybrid": lambda cfg: _lm_bundle(zamba, cfg),
+    "encdec": _whisper_bundle,
+}
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    try:
+        return MODEL_FAMILIES[cfg.family](cfg)
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r}")

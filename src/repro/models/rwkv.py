@@ -1,0 +1,139 @@
+"""RWKV-6 (Finch) language model — attention-free SSM family.
+
+Block = time-mix (WKV recurrence with data-dependent decay) + channel-mix.
+State is O(1) in sequence length → runs the ``long_500k`` cell
+(DESIGN §4).  DISC applicability note: no attention-length bucketing
+exists (no KV cache); dynamic-shape handling applies to the elementwise-
+heavy time/channel mixing (DESIGN §4 Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..dist.context import maybe_shard
+from . import layers as L
+from .common import ArchConfig, cross_entropy_loss, param_init
+
+Params = Dict[str, Any]
+
+
+def _chanmix_init(rng, cfg: ArchConfig) -> Params:
+    dt = jnp.bfloat16 if cfg.dtype == "bf16" else jnp.float32
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {"w_k": param_init(k1, (cfg.d_model, cfg.d_ff), dt),
+            "w_v": param_init(k2, (cfg.d_ff, cfg.d_model), dt),
+            "w_r": param_init(k3, (cfg.d_model, cfg.d_model), dt),
+            "mix": param_init(jax.random.fold_in(rng, 7), (2, cfg.d_model),
+                              jnp.float32, scale=0.1)}
+
+
+def _chanmix_specs(cfg: ArchConfig) -> Params:
+    return {"w_k": P("data", "model"), "w_v": P("model", "data"),
+            "w_r": P("data", "model"), "mix": P(None, None)}
+
+
+def _chanmix_apply(cfg: ArchConfig, p: Params, x, x_prev=None):
+    if x_prev is None:
+        xp = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        xp = x_prev[:, None]
+    mix = jax.nn.sigmoid(p["mix"]).astype(x.dtype)
+    xk = x * mix[0] + xp * (1 - mix[0])
+    xr = x * mix[1] + xp * (1 - mix[1])
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    k = maybe_shard(k, L.A_BSF)
+    r = jax.nn.sigmoid(xr @ p["w_r"])
+    return maybe_shard(r * (k @ p["w_v"]), L.A_BSD)
+
+
+def block_init(rng, cfg: ArchConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    return {"ln1": L.norm_init(k1, cfg), "tmix": L.rwkv6_init(k2, cfg),
+            "ln2": L.norm_init(k3, cfg), "cmix": _chanmix_init(k4, cfg)}
+
+
+def block_specs(cfg: ArchConfig) -> Params:
+    return {"ln1": L.norm_specs(cfg), "tmix": L.rwkv6_specs(cfg),
+            "ln2": L.norm_specs(cfg), "cmix": _chanmix_specs(cfg)}
+
+
+def init(cfg: ArchConfig, rng) -> Params:
+    dt = jnp.bfloat16 if cfg.dtype == "bf16" else jnp.float32
+    k_e, k_b, k_h, k_n = jax.random.split(rng, 4)
+    blocks = jax.vmap(lambda k: block_init(k, cfg))(
+        jax.random.split(k_b, cfg.n_layers))
+    return {"embed": param_init(k_e, (cfg.vocab, cfg.d_model), dt, scale=0.02),
+            "blocks": blocks,
+            "ln_f": L.norm_init(k_n, cfg),
+            "head": param_init(k_h, (cfg.d_model, cfg.vocab), dt)}
+
+
+def specs(cfg: ArchConfig) -> Params:
+    blocks = jax.tree.map(lambda s: P(*((None,) + tuple(s))),
+                          block_specs(cfg), is_leaf=lambda s: isinstance(s, P))
+    return {"embed": P("model", "data"), "blocks": blocks,
+            "ln_f": L.norm_specs(cfg), "head": P("data", "model")}
+
+
+def forward(cfg: ArchConfig, params: Params, tokens, *, lens=None,
+            extra_embeds=None) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = maybe_shard(x, L.A_BSD)
+
+    def body(h, bp):
+        a, _ = L.rwkv6_apply(cfg, bp["tmix"],
+                             L.norm_apply(cfg, bp["ln1"], h))
+        h = h + a
+        h = h + _chanmix_apply(cfg, bp["cmix"],
+                               L.norm_apply(cfg, bp["ln2"], h))
+        return h, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    return maybe_shard(x @ params["head"], P(("pod", "data"), None, "model"))
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch):
+    logits = forward(cfg, params, batch["tokens"])
+    return cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    one = lambda: {"tmix": L.rwkv6_cache_init(cfg, batch),
+                   "cmix_x": jnp.zeros((batch, cfg.d_model),
+                                       jnp.bfloat16 if cfg.dtype == "bf16"
+                                       else jnp.float32)}
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[one() for _ in range(cfg.n_layers)])
+
+
+def cache_specs(cfg: ArchConfig) -> Params:
+    one = {"tmix": L.rwkv6_cache_specs(cfg),
+           "cmix_x": P(("pod", "data"), None)}
+    return jax.tree.map(lambda s: P(*((None,) + tuple(s))), one,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params, tokens,
+                lens) -> Tuple[jax.Array, Params]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(h, xs):
+        bp, c = xs
+        a, tmix_c = L.rwkv6_apply(cfg, bp["tmix"],
+                                  L.norm_apply(cfg, bp["ln1"], h),
+                                  cache=c["tmix"])
+        h = h + a
+        h2 = L.norm_apply(cfg, bp["ln2"], h)
+        h = h + _chanmix_apply(cfg, bp["cmix"], h2, x_prev=c["cmix_x"])
+        return h, {"tmix": tmix_c, "cmix_x": h2[:, -1]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    return x @ params["head"], new_cache

@@ -1,0 +1,162 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend is a STUB).
+
+Per the assignment, ``input_specs()`` supplies *precomputed frame
+embeddings* (B, encoder_len, D) — the mel-spectrogram conv stem is out of
+scope.  Encoder is static-shape (1500 frames): under DISC this sub-graph
+takes the §4.4 static-fallback path; the decoder is the dynamic part.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..dist.context import maybe_shard
+from . import layers as L
+from .common import ArchConfig, cross_entropy_loss, param_init
+
+Params = Dict[str, Any]
+
+
+def _enc_block_init(rng, cfg: ArchConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    return {"ln1": L.norm_init(k1, cfg), "attn": L.attn_init(k2, cfg),
+            "ln2": L.norm_init(k3, cfg), "mlp": L.mlp_init(k4, cfg)}
+
+
+def _dec_block_init(rng, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(rng, 6)
+    return {"ln1": L.norm_init(ks[0], cfg), "self": L.attn_init(ks[1], cfg),
+            "ln2": L.norm_init(ks[2], cfg), "cross": L.attn_init(ks[3], cfg),
+            "ln3": L.norm_init(ks[4], cfg), "mlp": L.mlp_init(ks[5], cfg)}
+
+
+def _enc_block_specs(cfg):
+    return {"ln1": L.norm_specs(cfg), "attn": L.attn_specs(cfg),
+            "ln2": L.norm_specs(cfg), "mlp": L.mlp_specs(cfg)}
+
+
+def _dec_block_specs(cfg):
+    return {"ln1": L.norm_specs(cfg), "self": L.attn_specs(cfg),
+            "ln2": L.norm_specs(cfg), "cross": L.attn_specs(cfg),
+            "ln3": L.norm_specs(cfg), "mlp": L.mlp_specs(cfg)}
+
+
+def init(cfg: ArchConfig, rng) -> Params:
+    dt = jnp.bfloat16 if cfg.dtype == "bf16" else jnp.float32
+    ks = jax.random.split(rng, 6)
+    enc = jax.vmap(lambda k: _enc_block_init(k, cfg))(
+        jax.random.split(ks[0], cfg.n_encoder_layers))
+    dec = jax.vmap(lambda k: _dec_block_init(k, cfg))(
+        jax.random.split(ks[1], cfg.n_layers))
+    return {
+        "embed": param_init(ks[2], (cfg.vocab, cfg.d_model), dt, scale=0.02),
+        "enc_pos": param_init(ks[3], (cfg.encoder_len, cfg.d_model), dt,
+                              scale=0.02),
+        "encoder": enc, "decoder": dec,
+        "ln_enc": L.norm_init(ks[4], cfg),
+        "ln_f": L.norm_init(ks[5], cfg),
+        "head": param_init(jax.random.fold_in(rng, 9),
+                           (cfg.d_model, cfg.vocab), dt),
+    }
+
+
+def specs(cfg: ArchConfig) -> Params:
+    stack = lambda s: jax.tree.map(lambda q: P(*((None,) + tuple(q))), s,
+                                   is_leaf=lambda q: isinstance(q, P))
+    return {
+        "embed": P("model", "data"),
+        "enc_pos": P(None, "data"),
+        "encoder": stack(_enc_block_specs(cfg)),
+        "decoder": stack(_dec_block_specs(cfg)),
+        "ln_enc": L.norm_specs(cfg),
+        "ln_f": L.norm_specs(cfg),
+        "head": P("data", "model"),
+    }
+
+
+def encode(cfg: ArchConfig, params: Params, frames) -> jax.Array:
+    """frames: precomputed conv-stub embeddings (B, encoder_len, D)."""
+    x = frames + params["enc_pos"][None]
+    x = maybe_shard(x, L.A_BSD)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+
+    def body(h, bp):
+        a, _ = L.attn_apply(cfg, bp["attn"],
+                            L.norm_apply(cfg, bp["ln1"], h),
+                            positions=positions, causal=False)
+        h = h + a
+        h = h + L.mlp_apply(cfg, bp["mlp"], L.norm_apply(cfg, bp["ln2"], h))
+        return h, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.norm_apply(cfg, params["ln_enc"], x)
+
+
+def _decoder_blocks(cfg, params, x, enc_out, *, positions, lens, caches=None):
+    def body(h, xs):
+        if caches is None:
+            bp, c = xs, None
+        else:
+            bp, c = xs
+        a, c2 = L.attn_apply(cfg, bp["self"],
+                             L.norm_apply(cfg, bp["ln1"], h),
+                             positions=positions, lens=lens, cache=c)
+        h = h + a
+        ca, _ = L.attn_apply(cfg, bp["cross"],
+                             L.norm_apply(cfg, bp["ln2"], h),
+                             positions=positions, kv_source=enc_out,
+                             causal=False)
+        h = h + ca
+        h = h + L.mlp_apply(cfg, bp["mlp"], L.norm_apply(cfg, bp["ln3"], h))
+        return h, c2
+
+    if cfg.remat != "none" and caches is None:
+        body = jax.checkpoint(body)
+    xs = params["decoder"] if caches is None else (params["decoder"], caches)
+    return jax.lax.scan(body, x, xs)
+
+
+def forward(cfg: ArchConfig, params: Params, tokens, *, frames,
+            lens=None) -> jax.Array:
+    enc_out = encode(cfg, params, frames)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = maybe_shard(x, L.A_BSD)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, _ = _decoder_blocks(cfg, params, x, enc_out, positions=positions,
+                           lens=lens)
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    return maybe_shard(x @ params["head"], P(("pod", "data"), None, "model"))
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch):
+    logits = forward(cfg, params, batch["tokens"], frames=batch["frames"])
+    return cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    one = lambda: L.attn_cache_init(cfg, batch, max_len)
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[one() for _ in range(cfg.n_layers)])
+
+
+def cache_specs(cfg: ArchConfig) -> Params:
+    return jax.tree.map(lambda s: P(*((None,) + tuple(s))),
+                        L.attn_cache_specs(cfg),
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params, tokens,
+                lens, *, enc_out) -> Tuple[jax.Array, Params]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = lens[:, None]
+    x, new_cache = _decoder_blocks(cfg, params, x, enc_out,
+                                   positions=positions, lens=lens,
+                                   caches=cache)
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    return x @ params["head"], new_cache

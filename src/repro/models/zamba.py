@@ -1,0 +1,188 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block.
+
+The single attention block's weights are reused every
+``cfg.shared_attn_every`` Mamba blocks, with a small per-invocation LoRA
+delta (the Zamba2 trick for cheap depth-specialization).  Mamba blocks are
+scanned in groups; the shared block applications are a short Python loop
+(#invocations ≈ L/6, HLO stays small).  State is O(1) in sequence length →
+runs ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..dist.context import maybe_shard
+from . import layers as L
+from .common import ArchConfig, cross_entropy_loss, param_init
+
+Params = Dict[str, Any]
+_LORA_RANK = 8
+
+
+def _mamba_block_init(rng, cfg: ArchConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    return {"ln1": L.norm_init(k1, cfg), "mix": L.mamba2_init(k2, cfg),
+            "ln2": L.norm_init(k3, cfg),
+            "mlp": L.mlp_init(k4, cfg, d_ff=cfg.d_ff // 2)}
+
+
+def _mamba_block_specs(cfg: ArchConfig) -> Params:
+    return {"ln1": L.norm_specs(cfg), "mix": L.mamba2_specs(cfg),
+            "ln2": L.norm_specs(cfg), "mlp": L.mlp_specs(cfg)}
+
+
+def _n_invocations(cfg: ArchConfig) -> int:
+    return max(cfg.n_layers // max(cfg.shared_attn_every, 1), 1)
+
+
+def init(cfg: ArchConfig, rng) -> Params:
+    dt = jnp.bfloat16 if cfg.dtype == "bf16" else jnp.float32
+    keys = jax.random.split(rng, 8)
+    blocks = jax.vmap(lambda k: _mamba_block_init(k, cfg))(
+        jax.random.split(keys[0], cfg.n_layers))
+    n_inv = _n_invocations(cfg)
+    h_hd = cfg.n_heads * cfg.hd
+    lora = {
+        "a_q": param_init(keys[1], (n_inv, cfg.d_model, _LORA_RANK), dt),
+        "b_q": jnp.zeros((n_inv, _LORA_RANK, h_hd), dt),
+    }
+    return {
+        "embed": param_init(keys[2], (cfg.vocab, cfg.d_model), dt, scale=0.02),
+        "blocks": blocks,
+        "shared_attn": L.attn_init(keys[3], cfg),
+        "shared_ln": L.norm_init(keys[4], cfg),
+        "lora": lora,
+        "ln_f": L.norm_init(keys[5], cfg),
+        "head": param_init(keys[6], (cfg.d_model, cfg.vocab), dt),
+    }
+
+
+def specs(cfg: ArchConfig) -> Params:
+    blocks = jax.tree.map(lambda s: P(*((None,) + tuple(s))),
+                          _mamba_block_specs(cfg),
+                          is_leaf=lambda s: isinstance(s, P))
+    return {
+        "embed": P("model", "data"),
+        "blocks": blocks,
+        "shared_attn": L.attn_specs(cfg),
+        "shared_ln": L.norm_specs(cfg),
+        "lora": {"a_q": P(None, "data", None), "b_q": P(None, None, "model")},
+        "ln_f": L.norm_specs(cfg),
+        "head": P("data", "model"),
+    }
+
+
+def _mamba_group(cfg: ArchConfig, group_params, x, caches=None):
+    def body(h, xs):
+        if caches is None:
+            bp, c = xs, None
+        else:
+            bp, c = xs
+        a, c2 = L.mamba2_apply(cfg, bp["mix"],
+                               L.norm_apply(cfg, bp["ln1"], h), cache=c)
+        h = h + a
+        h = h + L.mlp_apply(cfg, bp["mlp"], L.norm_apply(cfg, bp["ln2"], h))
+        return h, c2
+
+    if cfg.remat != "none" and caches is None:
+        body = jax.checkpoint(body)
+    xs = group_params if caches is None else (group_params, caches)
+    return jax.lax.scan(body, x, xs)
+
+
+def _shared_attn(cfg: ArchConfig, params, inv: int, x, *, positions, lens,
+                 cache=None):
+    p = dict(params["shared_attn"])
+    # per-invocation LoRA delta on the query projection
+    delta = params["lora"]["a_q"][inv] @ params["lora"]["b_q"][inv]
+    p["wq"] = p["wq"] + delta
+    h = L.norm_apply(cfg, params["shared_ln"], x)
+    a, new_cache = L.attn_apply(cfg, p, h, positions=positions, lens=lens,
+                                cache=cache)
+    return x + a, new_cache
+
+
+def _group_sizes(cfg: ArchConfig):
+    every = max(cfg.shared_attn_every, 1)
+    n_inv = _n_invocations(cfg)
+    sizes = []
+    done = 0
+    for i in range(n_inv):
+        size = min(every, cfg.n_layers - done)
+        sizes.append(size)
+        done += size
+    if done < cfg.n_layers:
+        sizes[-1] += cfg.n_layers - done
+    return sizes
+
+
+def forward(cfg: ArchConfig, params: Params, tokens, *, lens=None,
+            extra_embeds=None) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = maybe_shard(x, L.A_BSD)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    off = 0
+    for inv, size in enumerate(_group_sizes(cfg)):
+        gp = jax.tree.map(lambda a: a[off:off + size], params["blocks"])
+        x, _ = _mamba_group(cfg, gp, x)
+        x, _ = _shared_attn(cfg, params, inv, x, positions=positions,
+                            lens=lens)
+        off += size
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    return maybe_shard(x @ params["head"], P(("pod", "data"), None, "model"))
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch):
+    logits = forward(cfg, params, batch["tokens"])
+    return cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    n_inv = _n_invocations(cfg)
+    mamba = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[L.mamba2_cache_init(cfg, batch) for _ in range(cfg.n_layers)])
+    attn = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[L.attn_cache_init(cfg, batch, max_len) for _ in range(n_inv)])
+    return {"mamba": mamba, "attn": attn}
+
+
+def cache_specs(cfg: ArchConfig) -> Params:
+    mamba = jax.tree.map(lambda s: P(*((None,) + tuple(s))),
+                         L.mamba2_cache_specs(cfg),
+                         is_leaf=lambda s: isinstance(s, P))
+    attn = jax.tree.map(lambda s: P(*((None,) + tuple(s))),
+                        L.attn_cache_specs(cfg),
+                        is_leaf=lambda s: isinstance(s, P))
+    return {"mamba": mamba, "attn": attn}
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params, tokens,
+                lens) -> Tuple[jax.Array, Params]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = lens[:, None]
+    new_mamba, new_attn = [], []
+    off = 0
+    for inv, size in enumerate(_group_sizes(cfg)):
+        gp = jax.tree.map(lambda a: a[off:off + size], params["blocks"])
+        gc = jax.tree.map(lambda a: a[off:off + size], cache["mamba"])
+        x, c2 = _mamba_group(cfg, gp, x, caches=gc)
+        new_mamba.append(c2)
+        ac = jax.tree.map(lambda a: a[inv], cache["attn"])
+        x, ac2 = _shared_attn(cfg, params, inv, x, positions=positions,
+                              lens=lens, cache=ac)
+        new_attn.append(ac2)
+        off += size
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    logits = x @ params["head"]
+    new_cache = {
+        "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_mamba),
+        "attn": jax.tree.map(lambda *xs: jnp.stack(xs), *new_attn),
+    }
+    return logits, new_cache

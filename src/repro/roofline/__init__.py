@@ -1,0 +1,1 @@
+from .analysis import RooflineTerms, analyze_compiled, HW  # noqa: F401

@@ -1,0 +1,296 @@
+"""Trip-count-aware cost analysis over optimized (post-SPMD) HLO text.
+
+XLA's built-in ``HloCostAnalysis`` (surfaced via ``compiled.cost_analysis``)
+counts a ``while`` body exactly ONCE — a scan-over-layers model therefore
+under-reports FLOPs/bytes/collectives by ~n_layers x chunk-loops.  This
+module re-walks the HLO call graph multiplying nested costs by the
+``known_trip_count`` backend config, giving per-device totals that are
+accurate for scanned programs:
+
+* FLOPs: ``dot`` = 2·|out|·K (K = contracted extent); elementwise = |out|;
+  ``reduce`` = |in|.
+* Bytes: counted at *fusion boundaries* only (operands + results of
+  top-level ops) — fused-internal traffic is free, approximating HBM
+  traffic the way HloCostAnalysis does.
+* Collectives: operand bytes per kind, multiplied through enclosing loops
+  (a collective inside the layer scan runs n_layers times).
+
+All numbers are PER DEVICE (the module is the SPMD-partitioned per-shard
+program); callers multiply by chip count for global terms.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloCost", "analyze_hlo_text"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+    "u16": 2, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8,
+    "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1,
+    "f8e5m2": 1, "u2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OPLINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_info(type_str: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """Total bytes + list of (dtype, dims) arrays in a (possibly tuple) type."""
+    arrays = []
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",")] if dims.strip() else []
+        n = 1
+        for x in d:
+            n *= x
+        total += n * _DTYPE_BYTES[dt]
+        arrays.append((dt, d))
+    return total, arrays
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=lambda: {
+        k: 0.0 for k in _COLLECTIVES})
+    coll_count: float = 0.0
+
+    def __iadd__(self, other: "HloCost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k in self.coll:
+            self.coll[k] += other.coll[k]
+        self.coll_count += other.coll_count
+        return self
+
+    def scaled(self, m: float) -> "HloCost":
+        return HloCost(self.flops * m, self.bytes * m,
+                       {k: v * m for k, v in self.coll.items()},
+                       self.coll_count * m)
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+
+def _parse_computations(text: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line.strip())
+        if hdr and ("->" in line):
+            cur = hdr.group(2)
+            comps[cur] = []
+            if hdr.group(1):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OPLINE_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.groups()
+        # operand list: first balanced paren group after "opcode("
+        start = line.find(opcode + "(") + len(opcode) + 1
+        depth = 1
+        i = start
+        while i < len(line) and depth:
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+            i += 1
+        operand_str = line[start:i - 1]
+        attrs = line[i:]
+        operands = _OPERANDS_RE.findall(operand_str)
+        comps[cur].append(_Op(name, type_str, opcode, operands, attrs))
+    comps["__entry__"] = comps.get(entry, [])
+    return comps
+
+
+_ZERO_FLOP_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "copy", "copy-start", "copy-done", "reshape", "transpose", "broadcast",
+    "slice", "dynamic-slice", "dynamic-update-slice", "concatenate", "pad",
+    "iota", "reverse", "gather", "scatter", "after-all", "partition-id",
+    "replica-id", "rng-bit-generator", "convert", "optimization-barrier",
+    "infeed", "outfeed", "send", "recv", "domain",
+}
+
+
+def _contracted_extent(op: _Op, shapes: Dict[str, List[Tuple[str, List[int]]]]) -> int:
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    dims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+    lhs = shapes.get(op.operands[0]) if op.operands else None
+    if not lhs:
+        return 1
+    _, lhs_dims = lhs[0]
+    k = 1
+    for dx in dims:
+        if dx < len(lhs_dims):
+            k *= lhs_dims[dx]
+    return max(k, 1)
+
+
+class _Analyzer:
+    def __init__(self, comps: Dict[str, List[_Op]]):
+        self.comps = comps
+        self.memo: Dict[Tuple[str, bool], HloCost] = {}
+
+    def comp_cost(self, name: str, boundary: bool) -> HloCost:
+        key = (name, boundary)
+        if key in self.memo:
+            return self.memo[key]
+        self.memo[key] = HloCost()  # cycle guard
+        total = HloCost()
+        ops = self.comps.get(name, [])
+        shapes: Dict[str, List[Tuple[str, List[int]]]] = {}
+        bytes_of: Dict[str, int] = {}
+        for op in ops:
+            b, arrs = _shape_info(op.type_str)
+            shapes[op.name] = arrs
+            bytes_of[op.name] = b
+        for op in ops:
+            total += self.op_cost(op, shapes, bytes_of, boundary)
+        self.memo[key] = total
+        return total
+
+    def op_cost(self, op: _Op, shapes, bytes_of, boundary: bool) -> HloCost:
+        c = HloCost()
+        out_bytes = bytes_of.get(op.name, 0)
+        out_elems = 0
+        for dt, dims in shapes.get(op.name, []):
+            n = 1
+            for d in dims:
+                n *= d
+            out_elems += n
+        opcode = op.opcode
+
+        if opcode == "while":
+            trips = 1
+            m = _TRIP_RE.search(op.attrs)
+            if m:
+                trips = int(m.group(1))
+            body = _CALLS_RE.search(op.attrs.replace("condition=", ""))
+            bm = re.search(r"body=%?([\w\.\-]+)", op.attrs)
+            cm = _COND_RE.search(op.attrs)
+            if bm:
+                c += self.comp_cost(bm.group(1), True).scaled(trips)
+            if cm:
+                c += self.comp_cost(cm.group(1), True).scaled(trips)
+            return c
+
+        if opcode in ("fusion",):
+            m = re.search(r"calls=%?([\w\.\-]+)", op.attrs)
+            if m:
+                c += self.comp_cost(m.group(1), False)
+            if boundary:
+                c.bytes += out_bytes + sum(bytes_of.get(o, 0)
+                                           for o in op.operands)
+            return c
+
+        if opcode in ("call", "conditional", "custom-call", "map",
+                      "reduce-window", "sort", "async-start"):
+            m = re.search(r"(?:calls|to_apply|branch_computations)=\{?%?([\w\.\-]+)",
+                          op.attrs)
+            if m:
+                c += self.comp_cost(m.group(1), boundary)
+            if boundary:
+                c.bytes += out_bytes + sum(bytes_of.get(o, 0)
+                                           for o in op.operands)
+            if opcode == "sort":
+                c.flops += out_elems  # comparator approx
+            return c
+
+        base = opcode.replace("-start", "")
+        if base in _COLLECTIVES:
+            if opcode.endswith("-done"):
+                return c
+            operand_bytes = sum(bytes_of.get(o, 0) for o in op.operands)
+            if operand_bytes == 0:
+                operand_bytes = out_bytes
+            c.coll[base] += operand_bytes
+            c.coll_count += 1
+            if boundary:
+                c.bytes += out_bytes + operand_bytes
+            return c
+
+        if opcode == "dot":
+            k = _contracted_extent(op, shapes)
+            c.flops += 2.0 * out_elems * k
+            if boundary:
+                c.bytes += out_bytes + sum(bytes_of.get(o, 0)
+                                           for o in op.operands)
+            return c
+
+        if opcode == "convolution":
+            # rough: 2 * out_elems * (kernel elems) — unused by our models
+            kb = bytes_of.get(op.operands[1], 0) if len(op.operands) > 1 else 0
+            c.flops += 2.0 * out_elems * max(kb // 4, 1)
+            if boundary:
+                c.bytes += out_bytes + sum(bytes_of.get(o, 0)
+                                           for o in op.operands)
+            return c
+
+        if opcode == "reduce":
+            in_bytes = sum(bytes_of.get(o, 0) for o in op.operands[:1])
+            c.flops += in_bytes / 4.0
+            if boundary:
+                c.bytes += out_bytes + sum(bytes_of.get(o, 0)
+                                           for o in op.operands)
+            return c
+
+        if opcode in _ZERO_FLOP_OPS:
+            if not boundary:
+                return c
+            if opcode in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced window, not the whole operand
+                c.bytes += 2 * out_bytes
+            elif opcode in ("dynamic-update-slice", "scatter"):
+                upd = (bytes_of.get(op.operands[1], 0)
+                       if len(op.operands) > 1 else out_bytes)
+                c.bytes += 2 * upd  # read update + write region (in-place)
+            elif opcode in ("copy", "concatenate", "pad", "transpose",
+                            "reshape", "broadcast", "convert", "reverse"):
+                c.bytes += out_bytes + sum(bytes_of.get(o, 0)
+                                           for o in op.operands)
+            return c
+
+        # default: elementwise-ish
+        c.flops += out_elems
+        if boundary:
+            c.bytes += out_bytes + sum(bytes_of.get(o, 0) for o in op.operands)
+        return c
+
+
+def analyze_hlo_text(text: str) -> HloCost:
+    comps = _parse_computations(text)
+    return _Analyzer(comps).comp_cost("__entry__", True)

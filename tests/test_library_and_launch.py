@@ -1,0 +1,25 @@
+"""§4.5 library interface + launcher smoke coverage."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.library import pick
+
+
+class TestLibrary:
+    def test_vendor_fallback_for_odd_shapes(self):
+        choice = pick(100, 100, 100)
+        assert choice.name == "vendor:xla_dot"
+        a = jnp.ones((100, 100))
+        b = jnp.ones((100, 100))
+        np.testing.assert_allclose(choice(a, b), a @ b)
+
+    def test_tuned_kernel_for_aligned_shapes(self):
+        choice = pick(128, 128, 128)
+        assert choice.name.startswith("library:")
+        rng = np.random.RandomState(0)
+        a = jnp.asarray(rng.randn(128, 128), jnp.float32)
+        b = jnp.asarray(rng.randn(128, 128), jnp.float32)
+        np.testing.assert_allclose(choice(a, b), a @ b, rtol=1e-4, atol=1e-4)
+
+    def test_decode_shape_routes_to_skinny(self):
+        assert pick(8, 128, 128).name == "library:skinny_m"

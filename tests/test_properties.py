@@ -1,0 +1,140 @@
+"""Hypothesis property tests on system invariants.
+
+* random elementwise/reduce programs: DiscEngine(bucket-padded, masked)
+  output == direct jax execution at arbitrary shapes;
+* buffer plan safety: no two simultaneously-live values share a slot;
+* constraint store: equality is a congruence (symmetric/transitive,
+  refines through size classes);
+* packing: mask/segment invariants under random length distributions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buffers import liveness, plan_buffers
+from repro.core.constraints import ShapeConstraintStore
+from repro.core.runtime import DiscEngine
+from repro.core.symshape import fresh_symdim
+from repro.data.pipeline import pack_sequences
+from repro.frontends import ArgSpec, bridge
+
+# ---- random program generator ------------------------------------------
+_UNARY = [jnp.tanh, jnp.exp, lambda x: x * 0.5, jnp.abs,
+          jax.nn.sigmoid, lambda x: x + 1.0]
+_BINARY = [jnp.add, jnp.subtract, jnp.multiply, jnp.maximum]
+
+
+def _random_program(seed: int, depth: int, with_reduce: bool):
+    # the op plan is drawn ONCE here — fn must be pure (trace == run)
+    rng = np.random.RandomState(seed)
+    plan = []
+    n_vals = 2
+    for _ in range(depth):
+        if rng.rand() < 0.5:
+            plan.append(("u", rng.randint(len(_UNARY)), rng.randint(n_vals)))
+        else:
+            plan.append(("b", rng.randint(len(_BINARY)),
+                         rng.randint(n_vals), rng.randint(n_vals)))
+        n_vals += 1
+    red = (int(rng.randint(2)), bool(rng.rand() < 0.5)) if with_reduce else None
+
+    def fn(x, y):
+        vals = [x, y]
+        for step in plan:
+            if step[0] == "u":
+                vals.append(_UNARY[step[1]](vals[step[2]]))
+            else:
+                vals.append(_BINARY[step[1]](vals[step[2]], vals[step[3]]))
+        out = vals[-1] + vals[-2]
+        if red is not None:
+            ax, use_sum = red
+            return out.sum(axis=ax) if use_sum else out.max(axis=ax)
+        return out
+
+    return fn
+
+
+class TestEngineEqualsReferenceOnRandomPrograms:
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           depth=st.integers(1, 6),
+           with_reduce=st.booleans(),
+           b=st.integers(1, 24), s=st.integers(1, 24),
+           dseed=st.integers(0, 2**31 - 1))
+    def test_random_program(self, seed, depth, with_reduce, b, s, dseed):
+        fn = _random_program(seed, depth, with_reduce)
+        eng = DiscEngine(fn, [ArgSpec(("B", "S")), ArgSpec(("B", "S"))],
+                         name=f"prop{seed}")
+        rng = np.random.RandomState(dseed)
+        x = rng.randn(b, s).astype(np.float32)
+        y = rng.randn(b, s).astype(np.float32)
+        got = eng(x, y)
+        want = fn(jnp.asarray(x), jnp.asarray(y))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-4, atol=5e-5)
+
+
+class TestBufferPlanSafety:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000), depth=st.integers(2, 8))
+    def test_no_live_overlap(self, seed, depth):
+        fn = _random_program(seed, depth, with_reduce=True)
+        graph, _ = bridge(fn, [ArgSpec(("B", "S")), ArgSpec(("B", "S"))])
+        plan = plan_buffers(graph)
+        spans = liveness(graph)
+        by_slot = {}
+        for vid, slot in plan.slot_of.items():
+            by_slot.setdefault(slot, []).append(spans[vid])
+        for slot, intervals in by_slot.items():
+            intervals.sort()
+            for (d1, l1), (d2, l2) in zip(intervals, intervals[1:]):
+                # a later tenant may not be defined before the earlier died
+                assert d2 > l1, f"slot {slot}: [{d1},{l1}] overlaps [{d2},{l2}]"
+        assert plan.n_slots <= plan.n_values
+
+
+class TestConstraintCongruence:
+    @settings(max_examples=25, deadline=None)
+    @given(pairs=st.lists(
+        st.tuples(st.integers(0, 7), st.integers(0, 7)), max_size=12))
+    def test_equality_is_equivalence(self, pairs):
+        store = ShapeConstraintStore()
+        dims = [fresh_symdim(f"d{i}") for i in range(8)]
+        for a, b in pairs:
+            store.assert_dim_eq(dims[a], dims[b])
+        # reflexive, symmetric, transitive under the asserted closure
+        for a, b in pairs:
+            assert store.dims_equal(dims[a], dims[b])
+            assert store.dims_equal(dims[b], dims[a])
+        for a, b in pairs:
+            for c, d in pairs:
+                if b == c:
+                    assert store.dims_equal(dims[a], dims[d])
+
+    @settings(max_examples=25, deadline=None)
+    @given(v=st.integers(1, 4096), g=st.sampled_from([8, 16, 64]))
+    def test_refined_size_classes(self, v, g):
+        store = ShapeConstraintStore()
+        m, n = fresh_symdim("M"), fresh_symdim("N")
+        store.note_value_size(1, (m, g))
+        store.note_value_size(2, (n, g))
+        store.assert_dim_eq(m, v)
+        store.assert_dim_eq(n, v)
+        assert store.sizes_equal(1, 2)  # both refined to v*g
+
+
+class TestPackingProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(lens=st.lists(st.integers(1, 48), min_size=1, max_size=30),
+           seed=st.integers(0, 2**31 - 1))
+    def test_mask_and_segments(self, lens, seed):
+        rng = np.random.RandomState(seed)
+        seqs = [rng.randint(1, 99, size=l).astype(np.int32) for l in lens]
+        tokens, segs, mask = pack_sequences(seqs, seq_len=48)
+        assert int(mask.sum()) == sum(min(l, 48) for l in lens)
+        # every packed token is recoverable and non-pad where masked
+        assert ((segs > 0) == (mask > 0)).all()
+        # rows never exceed capacity
+        assert tokens.shape[1] == 48

@@ -1,0 +1,103 @@
+"""End-to-end behaviour tests for the DISC system on paper-like workloads.
+
+These mirror the paper's evaluation setting: inference graphs with varying
+sequence lengths, executed through the full DISC pipeline (bridge →
+constraints → fusion → bucketed compile → generated dispatch) and checked
+against direct JAX execution.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bucketing import BucketPolicy
+from repro.core.runtime import DiscEngine
+from repro.frontends import ArgSpec
+
+
+def transformer_ffn(x, w1, b1, w2, b2):
+    h = jax.nn.gelu(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def attention(q, k, v):
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / np.sqrt(d)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+D = 32
+
+
+def encoder_layer(x, wq, wk, wv, wo, w1, b1, w2, b2, g1, bb1, g2, bb2):
+    """One pre-LN transformer encoder layer (the paper's main workload)."""
+    h = layer_norm(x, g1, bb1)
+    q, k, v = h @ wq, h @ wk, h @ wv
+    x = x + attention(q, k, v) @ wo
+    h = layer_norm(x, g2, bb2)
+    return x + transformer_ffn(h, w1, b1, w2, b2)
+
+
+def _layer_params(rng, d=D, f=4 * D):
+    ws = [rng.randn(d, d).astype(np.float32) * 0.1 for _ in range(4)]
+    w1 = rng.randn(d, f).astype(np.float32) * 0.1
+    b1 = np.zeros(f, np.float32)
+    w2 = rng.randn(f, d).astype(np.float32) * 0.1
+    b2 = np.zeros(d, np.float32)
+    g1 = np.ones(d, np.float32)
+    bb1 = np.zeros(d, np.float32)
+    g2 = np.ones(d, np.float32)
+    bb2 = np.zeros(d, np.float32)
+    return (*ws, w1, b1, w2, b2, g1, bb1, g2, bb2)
+
+
+def _specs():
+    return [ArgSpec(("B", "S", D))] + [
+        ArgSpec((D, D)), ArgSpec((D, D)), ArgSpec((D, D)), ArgSpec((D, D)),
+        ArgSpec((D, 4 * D)), ArgSpec((4 * D,)), ArgSpec((4 * D, D)),
+        ArgSpec((D,)), ArgSpec((D,)), ArgSpec((D,)), ArgSpec((D,)),
+        ArgSpec((D,)),
+    ]
+
+
+class TestTransformerLayerEndToEnd:
+    def test_encoder_layer_dynamic_batch_and_seq(self):
+        rng = np.random.RandomState(0)
+        params = _layer_params(rng)
+        eng = DiscEngine(encoder_layer, _specs(), name="encoder_layer")
+        for b, s in [(1, 7), (2, 19), (4, 64), (3, 33)]:
+            x = rng.randn(b, s, D).astype(np.float32)
+            got = eng(x, *params)
+            want = encoder_layer(jnp.asarray(x), *params)
+            np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+    def test_seq2seq_style_varying_lengths_compile_bound(self):
+        """The paper's Seq2seq scenario: ~uniform random lengths; compile
+        count stays at #buckets while correctness holds per request."""
+        rng = np.random.RandomState(1)
+        params = _layer_params(rng)
+        eng = DiscEngine(encoder_layer, _specs(), name="seq2seq",
+                         policy=BucketPolicy(kind="pow2", granule=16))
+        lengths = rng.randint(1, 128, size=24)
+        for s in lengths:
+            x = rng.randn(2, int(s), D).astype(np.float32)
+            got = eng(x, *params)
+            want = encoder_layer(jnp.asarray(x), *params)
+            np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+        n_buckets = len({eng.policy.bucket("S", int(s)) for s in lengths})
+        n_b_buckets = 1  # B is always 2
+        assert eng.n_compiles == n_buckets * n_b_buckets
+        assert eng.n_compiles <= 4  # 16/32/64/128
+
+    def test_fusion_collapses_memory_ops(self):
+        eng = DiscEngine(encoder_layer, _specs(), name="fusion_stats")
+        st = eng.plan.stats()
+        # the paper's Table-3 effect: far fewer kernels than memory ops
+        assert st["kernels_after_fusion"] < st["memory_ops"] / 2
