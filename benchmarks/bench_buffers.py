@@ -10,9 +10,9 @@ from typing import List
 
 import numpy as np
 
-from repro.core.buffers import CachedArena, plan_buffers
-from repro.core.codegen import dyn_symbols
-from repro.frontends import bridge
+from repro.api import bridge
+from repro.core.buffers import CachedArena, plan_buffers  # internals bench
+from repro.core.codegen import dyn_symbols  # internals bench
 
 from .workloads import WORKLOADS
 

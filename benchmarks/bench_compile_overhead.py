@@ -14,8 +14,7 @@ from typing import List
 
 import numpy as np
 
-from repro.core.bucketing import BucketPolicy
-from repro.core.runtime import DiscEngine
+from repro.api import BucketPolicy, compile as disc_compile
 
 from .workloads import WORKLOADS
 
@@ -31,7 +30,7 @@ def main(csv: List[str]):
             ("static_per_shape", BucketPolicy(kind="exact")),
             ("disc_pow2", BucketPolicy(kind="pow2", granule=32)),
             ("disc_mult64", BucketPolicy(kind="multiple", granule=64))):
-        eng = DiscEngine(fn, specs, name=f"compile_{label}", policy=policy)
+        eng = disc_compile(fn, specs, name=f"compile_{label}", policy=policy)
         t0 = time.perf_counter()
         for l in lengths:
             eng(*gen(rng, int(l)))

@@ -16,10 +16,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core.bucketing import BucketPolicy
-from repro.core.runtime import DiscEngine
-from repro.core.vm import NimbleVM
-from repro.frontends import bridge
+from repro.api import BucketPolicy, NimbleVM, compile as disc_compile
 
 from .workloads import WORKLOADS
 
@@ -32,10 +29,10 @@ def run_one(name: str, maker) -> Dict[str, float]:
     rng = np.random.RandomState(7)
     lengths = rng.randint(16, 256, size=N_REQS)
 
-    graph, _ = bridge(fn, specs, name=name)
+    engine = disc_compile(fn, specs, name=name,
+                          policy=BucketPolicy(kind="pow2", granule=32))
+    graph = engine.lower().graph
     vm = NimbleVM(graph, sync_per_op=True)
-    engine = DiscEngine(fn, specs, name=name,
-                        policy=BucketPolicy(kind="pow2", granule=32))
 
     # warm both paths on every bucket so steady state is measured
     for s in sorted({int(engine.policy.bucket("S", int(l))) for l in lengths}):

@@ -16,8 +16,7 @@ from typing import List
 import jax
 import numpy as np
 
-from repro.core.bucketing import BucketPolicy
-from repro.core.runtime import DiscEngine
+from repro.api import BucketPolicy, compile as disc_compile
 
 from .workloads import WORKLOADS
 
@@ -38,12 +37,12 @@ def main(csv: List[str]):
     for name, maker in WORKLOADS.items():
         fn, specs, gen = maker()
         static_fn = jax.jit(fn)
-        eng = DiscEngine(fn, specs, name=name,
-                         policy=BucketPolicy(kind="pow2", granule=32))
-        # §4.4: an engine with static escalation heals hot worst-case shapes
-        eng_esc = DiscEngine(fn, specs, name=name + "_esc",
-                             policy=BucketPolicy(kind="pow2", granule=32),
-                             escalation_threshold=3)
+        eng = disc_compile(fn, specs, name=name,
+                           policy=BucketPolicy(kind="pow2", granule=32))
+        # §4.4: an artifact with static escalation heals hot worst-case shapes
+        eng_esc = disc_compile(fn, specs, name=name + "_esc",
+                               policy=BucketPolicy(kind="pow2", granule=32),
+                               escalation_threshold=3)
         for label, s, sink in (("aligned", 128, aligned),
                                ("worst", 129, worst)):
             args = gen(np.random.RandomState(0), s)

@@ -17,10 +17,8 @@ from typing import Dict, List
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bucketing import BucketPolicy
-from repro.core.runtime import DiscEngine
-from repro.core.vm import NimbleVM
-from repro.frontends import ArgSpec, bridge
+from repro.api import (ArgSpec, BucketPolicy, NimbleVM,
+                       compile as disc_compile)
 
 from .workloads import WORKLOADS
 
@@ -41,9 +39,8 @@ def _host_overhead_graph():
 
 def main(csv: List[str]):
     fn, specs = _host_overhead_graph()
-    graph, _ = bridge(fn, specs)
-    vm = NimbleVM(graph, sync_per_op=True)
-    eng = DiscEngine(fn, specs, policy=BucketPolicy(kind="pow2", granule=8))
+    eng = disc_compile(fn, specs, policy=BucketPolicy(kind="pow2", granule=8))
+    vm = NimbleVM(eng.lower().graph, sync_per_op=True)
     rng = np.random.RandomState(0)
     shapes = rng.randint(1, 64, size=N)
     for s in sorted({int(eng.policy.bucket("B", int(b))) for b in shapes}):
@@ -69,9 +66,9 @@ def main(csv: List[str]):
 
     # transformer workload at realistic sizes (paper Table 2 subject)
     fnt, specst, gent = WORKLOADS["transformer"]()
-    grapht, _ = bridge(fnt, specst)
-    vmt = NimbleVM(grapht, sync_per_op=True)
-    engt = DiscEngine(fnt, specst, policy=BucketPolicy(kind="pow2", granule=32))
+    engt = disc_compile(fnt, specst,
+                        policy=BucketPolicy(kind="pow2", granule=32))
+    vmt = NimbleVM(engt.lower().graph, sync_per_op=True)
     lens = rng.randint(16, 256, size=20)
     for s in sorted({int(engt.policy.bucket("S", int(l))) for l in lens}):
         engt(*gent(np.random.RandomState(0), s))

@@ -13,9 +13,9 @@ from typing import List
 
 import jax.numpy as jnp
 
-from repro.core.fusion import plan_fusion
-from repro.core.propagation import CostClass, op_info
-from repro.frontends import ArgSpec, bridge
+from repro.api import ArgSpec, bridge
+from repro.core.fusion import plan_fusion  # internals bench
+from repro.core.propagation import CostClass, op_info  # internals bench
 
 from .workloads import WORKLOADS
 

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.frontends import ArgSpec
+from repro.api import ArgSpec
 
 D = 64
 F = 4 * D

@@ -11,9 +11,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bucketing import BucketPolicy
-from repro.core.runtime import DiscEngine
-from repro.frontends import ArgSpec
+import disc
 
 
 def fn(x):
@@ -22,8 +20,9 @@ def fn(x):
 
 
 def run(policy, lengths, escalation=None):
-    eng = DiscEngine(fn, [ArgSpec(("S", 32))], policy=policy,
-                     escalation_threshold=escalation)
+    eng = disc.compile(fn, [("S", 32)],
+                       options=disc.CompileOptions(
+                           policy=policy, escalation_threshold=escalation))
     t0 = time.time()
     for s in lengths:
         eng(np.zeros((int(s), 32), np.float32))
@@ -36,9 +35,9 @@ def main():
     print(f"100 requests, {len(set(lengths))} distinct lengths\n")
     print(f"{'policy':<22}{'compiles':<10}{'compile_s':<11}{'total_s':<9}hit%")
     for name, pol in [
-            ("static per-shape", BucketPolicy(kind="exact")),
-            ("disc pow2/16", BucketPolicy(kind="pow2", granule=16)),
-            ("disc multiple-64", BucketPolicy(kind="multiple", granule=64))]:
+            ("static per-shape", disc.BucketPolicy(kind="exact")),
+            ("disc pow2/16", disc.BucketPolicy(kind="pow2", granule=16)),
+            ("disc multiple-64", disc.BucketPolicy(kind="multiple", granule=64))]:
         eng, dt = run(pol, lengths)
         st = eng.cache.stats
         hit = st.hits / max(st.hits + st.misses, 1) * 100
@@ -47,7 +46,7 @@ def main():
 
     # §4.4 mixed static/dynamic: hot shapes escalate to exact compiles
     hot = np.concatenate([lengths, np.full(50, 77)])
-    eng, dt = run(BucketPolicy(kind="pow2", granule=16), hot, escalation=5)
+    eng, dt = run(disc.BucketPolicy(kind="pow2", granule=16), hot, escalation=5)
     print(f"\nwith static escalation (50 repeats of length 77): "
           f"escalations={eng.cache.stats.escalations} "
           f"(hot shape got its own unmasked specialization)")

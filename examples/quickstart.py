@@ -1,18 +1,17 @@
-"""Quickstart: the DISC dynamic-shape pipeline in 40 lines.
+"""Quickstart: the DISC dynamic-shape pipeline through the public API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Takes a jax function with dynamic dims, builds the DHLO graph + shape
-constraints, fuses, and serves varying shapes from a bucketed compile
-cache through generated host dispatch.
+``disc.compile`` takes a jax function with dynamic dims and stages it:
+``lower()`` builds the DHLO graph + shape constraints + fusion/placement/
+buffer plans (all inspectable), ``compile()`` produces the generated host
+dispatcher that serves varying shapes from a bucketed compile cache.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bucketing import BucketPolicy
-from repro.core.runtime import DiscEngine
-from repro.frontends import ArgSpec
+import disc
 
 
 def model(x, w):
@@ -22,27 +21,45 @@ def model(x, w):
 
 
 def main():
-    engine = DiscEngine(
+    # symbolic dims are first-class: B is dynamic, bucketed in multiples
+    # of 16, and never exceeds 4096
+    fast = disc.compile(
         model,
-        [ArgSpec(("B", 64), name="x"), ArgSpec((64, 32), name="w")],
-        policy=BucketPolicy(kind="pow2", granule=16),
+        [(disc.Dim("B", max=4096, multiple_of=16), 64), (64, 32)],
     )
-    print("== fusion plan ==")
-    print(engine.plan.stats())
-    print("\n== generated host dispatch (compile-time codegen) ==")
-    print(engine.dispatch_source)
+
+    print("== stage 1: lowered (DHLO graph + plans, no device code yet) ==")
+    lowered = fast.lower()
+    print(lowered.as_text())
+
+    compiled = lowered.compile()
+    print("\n== stage 2: generated host dispatch (compile-time codegen) ==")
+    print(compiled.dispatch_source)
 
     w = np.random.randn(64, 32).astype(np.float32)
     rng = np.random.RandomState(0)
     for batch in rng.randint(1, 200, size=25):
         x = rng.randn(int(batch), 64).astype(np.float32)
-        out = engine(x, w)
+        out = compiled(x, w)
         ref = model(jnp.asarray(x), jnp.asarray(w))
         np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-6)
 
     print("\n== 25 distinct shapes served ==")
-    print(engine.report()["cache"])
+    print(compiled.cache_stats())
     print("(compare: a static compiler would have compiled ~25 times)")
+
+    # no specs at all: they are inferred from the first call
+    @disc.compile
+    def row_softmax(x):
+        return jax.nn.softmax(x, axis=-1)
+
+    for s in (7, 21, 40):
+        x = rng.randn(3, s).astype(np.float32)
+        np.testing.assert_allclose(row_softmax(x),
+                                   jax.nn.softmax(jnp.asarray(x), axis=-1),
+                                   rtol=1e-5, atol=1e-6)
+    print("\n== specs inferred from first call ==")
+    print(row_softmax.compile_counts())
 
 
 if __name__ == "__main__":

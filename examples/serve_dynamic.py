@@ -13,10 +13,10 @@ import time
 import jax
 import numpy as np
 
+from repro.api import ServeConfig, ServeEngine
 from repro.configs import get_config
 from repro.data.pipeline import VarLenRequestStream
 from repro.models.registry import get_model
-from repro.serve.engine import ServeConfig, ServeEngine
 
 
 def main():

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Repo check: tier-1 tests + public-API import lint.
+#
+#   scripts/check.sh            # everything
+#   scripts/check.sh --lint     # lint only (fast)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python scripts/import_lint.py
+
+if [[ "${1:-}" != "--lint" ]]; then
+    python -m pytest -q
+fi

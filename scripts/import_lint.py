@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Import lint: examples/ and benchmarks/ must consume the compiler only
+through the public API (``disc`` / ``repro.api``).
+
+Workload definitions (``repro.models``, ``repro.configs``, ``repro.data``,
+``repro.checkpoint``, ``repro.train``, ``repro.roofline``) are data/tooling,
+not compiler surface, and stay importable.  Anything under ``repro.core``,
+``repro.frontends``, ``repro.serve`` or ``repro.launch`` is internal; the
+explicit per-file allowlist below names the two benchmarks that measure
+internals (buffer planning, fusion cost classes) by design.
+
+Usage: PYTHONPATH=src python scripts/import_lint.py   (exit 1 on violation)
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCANNED = ["examples", "benchmarks"]
+
+PUBLIC_PREFIXES = ("disc", "repro.api")
+ALLOWED_PREFIXES = PUBLIC_PREFIXES + (
+    "repro.models", "repro.configs", "repro.data", "repro.checkpoint",
+    "repro.train", "repro.optim", "repro.roofline", "repro.kernels",
+    "repro.dist",
+)
+
+# benchmarks measuring compiler *internals* on purpose
+FILE_ALLOWLIST = {
+    "benchmarks/bench_buffers.py": {"repro.core.buffers",
+                                    "repro.core.codegen"},
+    "benchmarks/bench_table3_kernels.py": {"repro.core.fusion",
+                                           "repro.core.propagation",
+                                           "repro.core.codegen"},
+}
+
+
+def imports_of(path: pathlib.Path):
+    tree = ast.parse(path.read_text(), filename=str(path))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                yield a.name, node.lineno
+        elif isinstance(node, ast.ImportFrom) and node.level == 0:
+            if node.module:
+                yield node.module, node.lineno
+
+
+def main() -> int:
+    bad = []
+    for d in SCANNED:
+        for path in sorted((ROOT / d).glob("*.py")):
+            rel = path.relative_to(ROOT).as_posix()
+            allow = FILE_ALLOWLIST.get(rel, set())
+            for mod, lineno in imports_of(path):
+                if not mod.startswith("repro"):
+                    continue
+                if mod in allow:
+                    continue
+                if any(mod == p or mod.startswith(p + ".")
+                       for p in ALLOWED_PREFIXES):
+                    continue
+                bad.append(f"{rel}:{lineno}: {mod} (use repro.api / disc)")
+    if bad:
+        print("import lint: examples/benchmarks reach past the public API:")
+        print("\n".join("  " + b for b in bad))
+        return 1
+    print(f"import lint: OK ({sum(1 for d in SCANNED for _ in (ROOT / d).glob('*.py'))} files clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

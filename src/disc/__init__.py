@@ -1,0 +1,37 @@
+"""``disc`` — the public name of the DISC compiler API.
+
+A thin alias for :mod:`repro.api`; see that module for the full surface.
+
+    import disc
+    fast = disc.compile(fn, [(disc.Dim("S", max=4096), 64), (64, 32)])
+"""
+import repro.api as _api
+from repro.api import (  # noqa: F401
+    ArgSpec,
+    Backend,
+    BucketPolicy,
+    CacheStats,
+    Compiled,
+    CompiledFunction,
+    CompileCache,
+    CompileOptions,
+    Dim,
+    EXACT,
+    Lowered,
+    NimbleVM,
+    POW2,
+    UnknownBackendError,
+    bridge,
+    compile,
+    get_backend,
+    infer_specs,
+    list_backends,
+    pow2_bucket,
+    register_backend,
+)
+
+__all__ = list(_api.__all__)
+
+
+def __getattr__(name):  # ServeEngine / ServeConfig stay lazy (model zoo)
+    return getattr(_api, name)

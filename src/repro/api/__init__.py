@@ -1,0 +1,62 @@
+"""``repro.api`` — the single public entry point to the DISC compiler.
+
+Everything user-facing hangs off this package (aliased as the top-level
+``disc`` module)::
+
+    import disc
+
+    @disc.compile
+    def f(x, w): ...
+
+    f2 = disc.compile(f, [(disc.Dim("S", max=4096, multiple_of=8), 64),
+                          (64, 32)],
+                      options=disc.CompileOptions(backend="pallas"))
+    lowered  = f2.lower()        # DHLO graph + fusion/placement/buffer plans
+    compiled = lowered.compile() # generated dispatcher
+    compiled.dispatch_source     # the generated host flow, as text
+    compiled.cache_stats()       # O(#buckets) compile contract, observable
+
+Backends (``xla``, ``pallas``, ``nimble_vm``, or your own via
+:func:`register_backend`) are selected by name through
+``CompileOptions.backend``.  The serving layer (:class:`ServeEngine`) and
+the baselines/benchmark helpers are re-exported here so examples and
+benchmarks never reach into ``repro.core`` / ``repro.frontends``
+internals.
+"""
+from ..core.bucketing import BucketPolicy, EXACT, POW2, pow2_bucket  # noqa: F401
+from ..core.cache import CompileCache, CacheStats  # noqa: F401
+from ..core.vm import NimbleVM  # noqa: F401
+from ..frontends.jaxpr_frontend import ArgSpec, bridge  # noqa: F401
+from .backends import (  # noqa: F401
+    Backend,
+    UnknownBackendError,
+    get_backend,
+    list_backends,
+    register_backend,
+)
+from .options import CompileOptions, Dim  # noqa: F401
+from .staged import Compiled, CompiledFunction, Lowered, compile, infer_specs  # noqa: F401
+
+__all__ = [
+    # staged pipeline
+    "compile", "CompiledFunction", "Lowered", "Compiled", "infer_specs",
+    # options
+    "CompileOptions", "Dim", "ArgSpec",
+    # backends
+    "Backend", "register_backend", "get_backend", "list_backends",
+    "UnknownBackendError",
+    # bucketing / caching
+    "BucketPolicy", "POW2", "EXACT", "pow2_bucket", "CompileCache",
+    "CacheStats",
+    # baselines & serving
+    "NimbleVM", "bridge", "ServeEngine", "ServeConfig",
+]
+
+
+def __getattr__(name):
+    # serving imports models/configs; keep it lazy so `import disc` stays
+    # light and the core API never depends on the model zoo
+    if name in ("ServeEngine", "ServeConfig"):
+        from ..serve.engine import ServeConfig, ServeEngine
+        return {"ServeEngine": ServeEngine, "ServeConfig": ServeConfig}[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

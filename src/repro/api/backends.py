@@ -1,0 +1,145 @@
+"""Backend registry — one mechanism for selecting how buckets compile.
+
+Before this module, backend choice lived as string-ifs inside
+``core/runtime.py`` (``"xla"`` vs ``"pallas"``) while the Nimble-VM
+baseline was a separate class nobody could select uniformly.  Now a
+:class:`Backend` bundles the two things a dispatcher needs:
+
+* ``build_bucket``: produce the per-bucket-signature entry
+  ``entry(lens_i32, *padded_arrays) -> outputs`` for one padded binding;
+* ``build_exact``: produce the exact-shape executor used by §4.4 static
+  escalation.
+
+Built-ins:
+
+* ``"xla"``       — DHLO graph emitted through XLA, AOT-compiled per bucket
+* ``"pallas"``    — eligible fusion clusters run through the fused Pallas
+  kernels, the rest through XLA; AOT-compiled per bucket
+* ``"nimble_vm"`` — the interpreted baseline: the same masked executor, but
+  *never jitted* — every call walks the graph op by op (Nimble's VM
+  approach, kept selectable for honest §5.2 comparisons)
+
+Third parties register their own with
+``register_backend("mine", Backend(...))``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.codegen import build_exact_executor, build_padded_executor
+from ..core.dhlo import DGraph
+from ..core.symshape import SymDim
+
+__all__ = ["Backend", "UnknownBackendError", "register_backend",
+           "get_backend", "list_backends"]
+
+
+class UnknownBackendError(ValueError):
+    """Raised when ``options.backend`` names no registered backend."""
+
+
+@dataclass(frozen=True)
+class Backend:
+    """A named strategy for turning a lowered graph into executables.
+
+    ``build_bucket(graph, plan, syms, padded, donate)`` returns the entry
+    for one bucket signature; ``build_exact(graph, plan)`` returns the
+    exact-shape executor for the static-escalation path.
+    """
+
+    name: str
+    build_bucket: Callable[..., Any]
+    build_exact: Callable[..., Callable]
+    description: str = ""
+
+
+def _padded_arg_sds(graph: DGraph, padded: Dict[int, int]):
+    arg_sds = []
+    for p in graph.params:
+        shape = []
+        for d in p.shape:
+            if isinstance(d, SymDim):
+                c = graph.store.canon_dim(d)
+                shape.append(padded[c.uid] if isinstance(c, SymDim) else c)
+            else:
+                shape.append(d)
+        arg_sds.append(jax.ShapeDtypeStruct(tuple(shape), p.dtype))
+    return arg_sds
+
+
+def _make_aot_backend(name: str, emission: str, description: str) -> Backend:
+    """A backend that AOT-compiles each bucket entry through jax.jit."""
+
+    def build_bucket(graph: DGraph, plan, syms: Sequence[SymDim],
+                     padded: Dict[int, int], donate: bool):
+        executor = build_padded_executor(graph, padded, syms, plan=plan,
+                                         backend=emission)
+        lens_sds = jax.ShapeDtypeStruct((max(len(syms), 1),), jnp.int32)
+        arg_sds = _padded_arg_sds(graph, padded)
+        donate_nums = tuple(range(1, 1 + len(arg_sds))) if donate else ()
+        jfn = jax.jit(executor, donate_argnums=donate_nums)
+        return jfn.lower(lens_sds, *arg_sds).compile()
+
+    def build_exact(graph: DGraph, plan):
+        return jax.jit(build_exact_executor(graph, plan=plan,
+                                            backend=emission))
+
+    return Backend(name=name, build_bucket=build_bucket,
+                   build_exact=build_exact, description=description)
+
+
+def _make_vm_backend() -> Backend:
+    """The interpreted baseline: identical numerics, no AOT compile — every
+    call walks the graph per op (what the paper calls the VM approach)."""
+
+    def build_bucket(graph: DGraph, plan, syms: Sequence[SymDim],
+                     padded: Dict[int, int], donate: bool):
+        # NOT jitted: per-call graph walk + one dispatch per op.
+        return build_padded_executor(graph, padded, syms, plan=None,
+                                     backend="xla")
+
+    def build_exact(graph: DGraph, plan):
+        return build_exact_executor(graph)
+
+    return Backend(
+        name="nimble_vm", build_bucket=build_bucket, build_exact=build_exact,
+        description="interpreted per-op baseline (Nimble-style VM)")
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(name: str, backend: Backend, *,
+                     overwrite: bool = False) -> Backend:
+    """Register ``backend`` under ``name`` (``options.backend=name``)."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"backend {name!r} is already registered; pass overwrite=True "
+            f"to replace it")
+    _REGISTRY[name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownBackendError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def list_backends() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+register_backend("xla", _make_aot_backend(
+    "xla", "xla", "DHLO emitted through XLA, AOT-compiled per bucket"))
+register_backend("pallas", _make_aot_backend(
+    "pallas", "pallas",
+    "eligible fusion clusters through fused Pallas kernels, rest XLA"))
+register_backend("nimble_vm", _make_vm_backend())

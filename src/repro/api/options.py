@@ -1,0 +1,184 @@
+"""Public option objects for ``disc.compile`` — one place for every knob.
+
+Historically the knobs were scattered: ``DiscEngine(...)`` kwargs, a
+parallel ``ServeConfig``, and ad-hoc strings inside ``runtime.py``.
+:class:`CompileOptions` consolidates them; :class:`Dim` makes symbolic
+dimensions first-class values that carry their own bucketing contract
+(``max``, ``multiple_of``) instead of smuggling it through a separately
+constructed :class:`~repro.core.bucketing.BucketPolicy`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+
+from ..core.bucketing import BucketPolicy, POW2
+from ..core.cache import CompileCache
+from ..frontends.jaxpr_frontend import ArgSpec
+
+__all__ = ["Dim", "CompileOptions", "normalize_specs"]
+
+
+@dataclass(frozen=True)
+class Dim:
+    """A named symbolic dimension with an optional bucketing contract.
+
+    ``Dim("S", max=4096, multiple_of=8)`` in a spec shape means: dimension
+    ``S`` is dynamic, never exceeds 4096 (buckets are clamped there, larger
+    runtime values are a contract violation), and buckets are sized in
+    multiples of 8.
+
+    ``bucket`` selects the bucketing rule for this symbol:
+
+    * ``"pow2"``     — granule·2^k buckets (log-many; the default)
+    * ``"multiple"`` — multiples of ``multiple_of`` (linear-many, less
+      padding waste; good when shapes cluster)
+    * ``"exact"``    — no bucketing: one compile per concrete size (the
+      static-compiler baseline)
+    """
+
+    name: str
+    max: Optional[int] = None
+    multiple_of: Optional[int] = None
+    bucket: str = "pow2"
+
+    def __post_init__(self):
+        if not self.name or not isinstance(self.name, str):
+            raise ValueError(f"Dim needs a non-empty string name, got {self.name!r}")
+        if self.bucket not in ("pow2", "multiple", "exact"):
+            raise ValueError(f"unknown bucket rule {self.bucket!r}")
+        if self.max is not None and self.max < 1:
+            raise ValueError(f"Dim {self.name}: max must be >= 1")
+        if self.multiple_of is not None and self.multiple_of < 1:
+            raise ValueError(f"Dim {self.name}: multiple_of must be >= 1")
+
+    def policy_override(self) -> Optional[Tuple[str, Tuple[str, int]]]:
+        """The per-symbol :class:`BucketPolicy` override this Dim implies."""
+        if self.bucket == "exact":
+            return (self.name, ("exact", 1))
+        if self.multiple_of is not None:
+            kind = "multiple" if self.bucket == "multiple" else "pow2"
+            return (self.name, (kind, self.multiple_of))
+        if self.bucket == "multiple":
+            return (self.name, ("multiple", 16))
+        return None
+
+
+DimLike = Union[int, str, Dim]
+SpecLike = Union[ArgSpec, Tuple[DimLike, ...], None]
+
+
+@dataclass(frozen=True)
+class CompileOptions:
+    """Every ``disc.compile`` knob, in one (immutable) place.
+
+    * ``policy``               — default bucketing rule (per-``Dim``
+      contracts are layered on top as overrides)
+    * ``backend``              — registry name: ``"xla"``, ``"pallas"``,
+      ``"nimble_vm"``, or anything registered via
+      :func:`repro.api.register_backend`
+    * ``escalation_threshold`` — §4.4 static/dynamic mix: exact signatures
+      seen at least this many times get their own unmasked specialization
+      (``None`` disables)
+    * ``max_cache_entries``    — LRU budget of the compile cache
+    * ``donate``               — donate input buffers to the device
+      executable (bucketed entries only)
+    * ``pipeline``             — ``"dhlo"`` runs the full DISC pipeline
+      (bridge → constraints → fusion → bucketed codegen → generated
+      dispatch); ``"jit"`` skips the DHLO bridge and buckets a
+      jax-traceable function directly (pytree-capable; used by the serving
+      engine for whole-model prefill/decode)
+    * ``cache``                — share a :class:`CompileCache` between
+      several compiled artifacts (entries are keyed by per-artifact
+      fingerprint and never collide)
+    * ``name``                 — artifact name for diagnostics
+    """
+
+    policy: BucketPolicy = POW2
+    backend: str = "xla"
+    escalation_threshold: Optional[int] = None
+    max_cache_entries: int = 256
+    donate: bool = False
+    pipeline: str = "dhlo"
+    cache: Optional[CompileCache] = None
+    name: str = "disc"
+
+    def __post_init__(self):
+        if self.pipeline not in ("dhlo", "jit"):
+            raise ValueError(
+                f"unknown pipeline {self.pipeline!r} (expected 'dhlo' or 'jit')")
+
+    def replace(self, **kw) -> "CompileOptions":
+        return dataclasses.replace(self, **kw)
+
+    def policy_with_dims(self, dims: Sequence[Dim]) -> BucketPolicy:
+        """Layer per-``Dim`` contracts onto the base policy."""
+        overrides = list(self.policy.overrides)
+        caps = list(self.policy.caps)
+        for d in dims:
+            ov = d.policy_override()
+            if ov is not None and ov[0] not in [n for n, _ in overrides]:
+                overrides.append(ov)
+            if d.max is not None and d.name not in [n for n, _ in caps]:
+                caps.append((d.name, d.max))
+        if overrides == list(self.policy.overrides) and caps == list(self.policy.caps):
+            return self.policy
+        return dataclasses.replace(self.policy, overrides=tuple(overrides),
+                                   caps=tuple(caps))
+
+
+def normalize_specs(specs: Optional[Sequence[SpecLike]],
+                    default_dtype=jnp.float32,
+                    ) -> Tuple[Optional[Tuple[Optional[ArgSpec], ...]], Tuple[Dim, ...]]:
+    """Normalize user-facing specs into ``ArgSpec``s + the ``Dim``s found.
+
+    Accepts per argument: an :class:`ArgSpec`, a bare shape tuple whose
+    entries are ints / symbol-name strings / :class:`Dim` objects, or
+    ``None`` (pass-through argument — only meaningful for the ``"jit"``
+    pipeline).  Returns ``(normalized, dims)``; ``normalized`` is ``None``
+    when ``specs`` is ``None`` (defer to first-call inference).
+    """
+    if specs is None:
+        return None, ()
+    dims: dict = {}
+    explicit: set = set()  # names declared via a Dim object (vs bare string)
+    out = []
+    for spec in specs:
+        if spec is None:
+            out.append(None)
+            continue
+        if isinstance(spec, ArgSpec):
+            shape, dtype, name = spec.shape, spec.dtype, spec.name
+        elif isinstance(spec, tuple) and all(
+                isinstance(d, (int, str, Dim)) for d in spec):
+            shape, dtype, name = spec, default_dtype, ""
+        elif isinstance(spec, tuple) and len(spec) in (2, 3) and isinstance(spec[0], (tuple, list)):
+            shape = tuple(spec[0])
+            dtype = spec[1]
+            name = spec[2] if len(spec) == 3 else ""
+        else:
+            raise TypeError(
+                f"cannot interpret spec {spec!r}: expected ArgSpec, shape "
+                f"tuple, (shape, dtype[, name]) or None")
+        norm_shape = []
+        for d in shape:
+            if isinstance(d, Dim):
+                # only two *explicit* contracts can conflict — a bare string
+                # occurrence of the same name just references this Dim
+                if d.name in explicit and dims[d.name] != d:
+                    raise ValueError(
+                        f"Dim {d.name!r} declared twice with different "
+                        f"contracts: {dims[d.name]} vs {d}")
+                dims[d.name] = d
+                explicit.add(d.name)
+                norm_shape.append(d.name)
+            elif isinstance(d, str):
+                dims.setdefault(d, Dim(d))
+                norm_shape.append(d)
+            else:
+                norm_shape.append(int(d))
+        out.append(ArgSpec(tuple(norm_shape), dtype, name))
+    return tuple(out), tuple(dims.values())

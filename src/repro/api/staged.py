@@ -1,0 +1,528 @@
+"""The staged public pipeline: ``disc.compile(fn) → lower() → compile()``.
+
+Mirrors JAX's AOT staging (``jit(f).lower(...).compile()``) for the whole
+DISC compiler:
+
+* :func:`compile` returns a :class:`CompiledFunction` — callable
+  immediately (lowering/compiling happens on demand, with spec inference
+  from the first call when no specs were given), and stageable explicitly;
+* :class:`Lowered` holds the inspectable compile-time artifacts (DHLO
+  graph, fusion / placement / buffer plans, dynamic symbols) before any
+  device code exists;
+* :class:`Compiled` owns the generated host dispatcher plus the per-bucket
+  compile cache, and exposes ``dispatch_source`` / ``cache_stats()`` /
+  ``compile_counts()`` for introspection.
+
+Two pipelines share this surface (selected by
+``CompileOptions.pipeline``):
+
+* ``"dhlo"`` — the paper's full pipeline: jaxpr → DHLO bridge, shape
+  constraints, fusion, placement, buffers, bucketed per-backend codegen,
+  generated host dispatch with output recovery.
+* ``"jit"``  — bucketed dispatch over a jax-traceable function *without*
+  bridging it through DHLO: declared dynamic args are bucket-padded and
+  one ``jax.jit`` entry is cached per bucket signature.  Pytree args pass
+  through untouched (spec ``None``), so whole models (params/KV-cache
+  trees) get the O(#buckets) compile contract — this is what the serving
+  engine builds prefill/decode on.
+"""
+from __future__ import annotations
+
+import builtins
+import hashlib
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ..core.bucketing import BucketPolicy
+from ..core.cache import CompileCache
+from ..core.codegen import dyn_symbols
+from ..core.dispatcher import generate_dispatch
+from ..core.symshape import SymDim
+from ..frontends.jaxpr_frontend import ArgSpec, bridge
+from .backends import get_backend
+from .options import CompileOptions, Dim, normalize_specs
+
+__all__ = ["compile", "CompiledFunction", "Lowered", "Compiled"]
+
+
+# ------------------------------------------------------------- inference --
+
+def infer_specs(arrays: Sequence[Any]) -> List[ArgSpec]:
+    """Infer ``ArgSpec``s from one call's concrete arguments.
+
+    Every axis of size > 1 becomes a symbolic dim; axes sharing a size in
+    this call share a symbol (so contractions stay well-typed when traced
+    at representative sizes).  Size-1 axes stay static (broadcasting).
+    The inferred profile is exact for any later call with the same
+    equality structure; distinct dims that *happened* to coincide on the
+    first call are tied — declare specs explicitly to untie them.
+    """
+    by_size: Dict[int, str] = {}
+    specs: List[ArgSpec] = []
+    for a in arrays:
+        ashape = np.shape(a)
+        dtype = getattr(a, "dtype", None)
+        if dtype is None:
+            dtype = np.asarray(a).dtype
+        shape = []
+        for size in ashape:
+            if size <= 1:
+                shape.append(int(size))
+            else:
+                shape.append(by_size.setdefault(int(size), f"d{size}"))
+        specs.append(ArgSpec(tuple(shape), dtype))
+    return specs
+
+
+def _graph_const_token(graph) -> str:
+    """Hash of a DHLO graph's literal payloads, in deterministic order."""
+    h = hashlib.sha1()
+    seen = set()
+    for op in graph.ops:
+        for v in list(op.inputs) + list(op.shape_operands):
+            if v.literal is not None and v.vid not in seen:
+                seen.add(v.vid)
+                arr = np.asarray(v.literal)
+                h.update(str(arr.dtype).encode())
+                h.update(repr(arr.shape).encode())
+                h.update(arr.tobytes())
+    return h.hexdigest()[:16]
+
+
+def _fn_token(fn: Callable) -> str:
+    """An identity token for ``fn`` (code, closure, bound instance).
+
+    Process-local: bound methods are distinguished by instance identity
+    (two engines sharing one cache must never serve each other's
+    closures), so tokens are not stable across processes — fine for an
+    in-memory compile cache.
+    """
+    parts: List[str] = []
+    base = getattr(fn, "__func__", fn)
+    self_obj = getattr(fn, "__self__", None)
+    if self_obj is not None:
+        parts.append(type(self_obj).__qualname__)
+        parts.append(str(id(self_obj)))
+    code = getattr(base, "__code__", None)
+    if code is None:
+        parts.append(repr(base))
+    else:
+        parts.append(getattr(base, "__qualname__", ""))
+        parts.append(hashlib.sha1(code.co_code).hexdigest())
+        parts.append(repr(code.co_consts)[:2000])
+        for cell in base.__closure__ or ():
+            try:
+                parts.append(repr(cell.cell_contents)[:200])
+            except ValueError:  # empty cell
+                parts.append("<empty>")
+    return "\x00".join(parts)
+
+
+# --------------------------------------------------------------- lowered --
+
+@dataclass
+class Lowered:
+    """Compile-time artifacts of one function at one spec signature.
+
+    For the ``"dhlo"`` pipeline all plan fields are populated; for the
+    ``"jit"`` pipeline only ``specs`` / ``sym_names`` are (there is no hub
+    IR — the function is staged directly through ``jax.jit`` per bucket).
+    """
+
+    fn: Callable
+    specs: Tuple[Optional[ArgSpec], ...]
+    options: CompileOptions
+    policy: BucketPolicy
+    pipeline: str
+    graph: Any = None
+    plan: Any = None              # FusionPlan
+    placement: Any = None
+    buffer_plan: Any = None
+    syms: Tuple[SymDim, ...] = ()
+    sym_names: Tuple[str, ...] = ()
+
+    def fingerprint(self) -> str:
+        if self.graph is not None:
+            # DGraph.fingerprint() is deliberately shape-free AND
+            # constant-free (the per-engine cache-key property).  As a
+            # *shared*-cache key that is too weak: two graphs with the same
+            # wiring but different literal payloads must not collide, so
+            # the artifact fingerprint folds the constants in.
+            return (self.graph.fingerprint() + "+"
+                    + _graph_const_token(self.graph))
+        # jit pipeline has no shape-free graph fingerprint; identify the
+        # artifact by the *function* (code + closure + bound self) plus the
+        # spec signature, so distinct functions sharing one CompileCache
+        # can never hit each other's entries
+        sig = repr([(None if s is None else (s.shape, str(np.dtype(s.dtype))))
+                    for s in self.specs])
+        h = hashlib.sha1((sig + "\x00" + _fn_token(self.fn)).encode())
+        return f"jit:{self.options.name}:{h.hexdigest()[:16]}"
+
+    def compile(self, options: Optional[CompileOptions] = None) -> "Compiled":
+        """Build the dispatcher (device code still compiles per bucket,
+        lazily, through the backend registry).
+
+        ``options`` may override backend / cache / escalation at this
+        stage; the bucketing policy is part of the lowering contract
+        (``Dim`` markers were folded into it) and stays fixed.
+        """
+        return Compiled(self, options or self.options)
+
+    def as_text(self) -> str:
+        """Human-readable summary of the lowering (inspectable stage)."""
+        lines = [f"Lowered({self.options.name!r}, pipeline={self.pipeline!r})"]
+        lines.append(f"  fingerprint: {self.fingerprint()}")
+        lines.append(f"  dynamic symbols: {list(self.sym_names)}")
+        if self.graph is not None:
+            lines.append(f"  params: {len(self.graph.params)}  "
+                         f"ops: {len(self.graph.ops)}  "
+                         f"outputs: {len(self.graph.outputs)}")
+            lines.append(f"  fusion: {self.plan.stats()}")
+            lines.append(f"  placement: {self.placement.report()}")
+            lines.append(f"  constraints: {self.graph.store.stats()}")
+        else:
+            lines.append("  (no DHLO graph: jit pipeline stages the "
+                         "function directly per bucket)")
+        return "\n".join(lines)
+
+
+def _lower(fn: Callable, specs: Sequence[Optional[ArgSpec]],
+           dims: Sequence[Dim], options: CompileOptions) -> Lowered:
+    policy = options.policy_with_dims(dims)
+    if options.pipeline == "jit":
+        sym_names: List[str] = []
+        for s in specs:
+            if s is None:
+                continue
+            for d in s.shape:
+                if isinstance(d, str) and d not in sym_names:
+                    sym_names.append(d)
+        return Lowered(fn=fn, specs=tuple(specs), options=options,
+                       policy=policy, pipeline="jit",
+                       sym_names=tuple(sym_names))
+
+    if any(s is None for s in specs):
+        raise ValueError(
+            "the 'dhlo' pipeline needs an ArgSpec for every argument "
+            "(None pass-through specs are only supported by "
+            "CompileOptions(pipeline='jit'))")
+    from ..core.fusion import plan_fusion
+    from ..core.placer import place
+    from ..core.buffers import plan_buffers
+
+    graph, _ = bridge(fn, list(specs), name=options.name)
+    plan = plan_fusion(graph)
+    placement = place(graph)
+    buffer_plan = plan_buffers(graph)
+    syms = tuple(dyn_symbols(graph))
+    return Lowered(fn=fn, specs=tuple(specs), options=options,
+                   policy=policy, pipeline="dhlo", graph=graph, plan=plan,
+                   placement=placement, buffer_plan=buffer_plan, syms=syms,
+                   sym_names=tuple(s.name for s in syms))
+
+
+# -------------------------------------------------------------- compiled --
+
+class Compiled:
+    """The executable artifact: generated host dispatch + compile cache."""
+
+    def __init__(self, lowered: Lowered, options: CompileOptions) -> None:
+        self.lowered = lowered
+        self.options = options
+        self.backend = get_backend(options.backend)
+        self._fingerprint = lowered.fingerprint()
+        self.cache = options.cache if options.cache is not None else \
+            CompileCache(self._fingerprint,
+                         max_entries=options.max_cache_entries,
+                         escalation_threshold=options.escalation_threshold)
+        self._bucket_compiles = 0
+        self._exact_compiles = 0
+        self._exact_fn = None
+        if lowered.pipeline == "dhlo":
+            self._dispatch, self.dispatch_source = generate_dispatch(
+                lowered.graph, lowered.syms, lowered.policy, self.cache,
+                self._compile_bucket, self._compile_exact,
+                fingerprint=self._fingerprint,
+                escalation_threshold=options.escalation_threshold)
+        else:
+            self._dispatch, self.dispatch_source = self._generate_jit_dispatch()
+
+    # ------------------------------------------------------------ public --
+    def __call__(self, *arrays):
+        outs = self._dispatch(arrays)
+        if self.lowered.pipeline == "jit":
+            return outs
+        return outs[0] if len(outs) == 1 else tuple(outs)
+
+    @property
+    def graph(self):
+        return self.lowered.graph
+
+    @property
+    def plan(self):
+        return self.lowered.plan
+
+    @property
+    def placement(self):
+        return self.lowered.placement
+
+    @property
+    def buffer_plan(self):
+        return self.lowered.buffer_plan
+
+    @property
+    def syms(self):
+        return list(self.lowered.syms)
+
+    @property
+    def policy(self) -> BucketPolicy:
+        return self.lowered.policy
+
+    @property
+    def n_compiles(self) -> int:
+        return self._bucket_compiles + self._exact_compiles
+
+    def cache_stats(self) -> Dict[str, float]:
+        return self.cache.stats.as_dict()
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Per-artifact compile counts (meaningful under shared caches)."""
+        return {"bucket": self._bucket_compiles,
+                "exact": self._exact_compiles,
+                "total": self._bucket_compiles + self._exact_compiles}
+
+    def report(self) -> Dict[str, Any]:
+        rep: Dict[str, Any] = {
+            "fingerprint": self._fingerprint,
+            "backend": self.backend.name,
+            "pipeline": self.lowered.pipeline,
+            "cache": self.cache_stats(),
+            "compiles": self.compile_counts(),
+            "dynamic_symbols": list(self.lowered.sym_names),
+        }
+        low = self.lowered
+        if low.graph is not None:
+            from ..core.codegen import (_pallas_input_eligible,
+                                        _pallas_loop_eligible)
+            n_pallas = sum(
+                1 for c in low.plan.clusters
+                if _pallas_loop_eligible(low.graph, c)
+                or _pallas_input_eligible(low.graph, c))
+            rep.update({
+                "fusion": low.plan.stats(),
+                "placement": low.placement.report(),
+                "constraints": low.graph.store.stats(),
+                "pallas_eligible_clusters": n_pallas,
+            })
+        return rep
+
+    # ------------------------------------------------- device compilation --
+    def _compile_bucket(self, key: Tuple[int, ...]):
+        low = self.lowered
+        padded = {s.uid: int(k) for s, k in zip(low.syms, key)}
+        self._bucket_compiles += 1
+        return self.backend.build_bucket(low.graph, low.plan, low.syms,
+                                         padded, self.options.donate)
+
+    def _compile_exact(self):
+        if self._exact_fn is None:
+            self._exact_fn = self.backend.build_exact(self.lowered.graph,
+                                                      self.lowered.plan)
+        self._exact_compiles += 1
+        return self._exact_fn
+
+    # ----------------------------------------------------- jit pipeline --
+    def _generate_jit_dispatch(self) -> Tuple[Callable, str]:
+        """Generated host flow for the jit pipeline: extract sizes, bucket,
+        zero-pad declared dynamic args, call the per-bucket jax.jit entry.
+        No output recovery — jit-pipeline functions are lens-aware and
+        produce shape-stable outputs themselves."""
+        low = self.lowered
+        sym_index = {n: i for i, n in enumerate(low.sym_names)}
+
+        # first extraction site per symbol
+        extract: Dict[str, Tuple[int, int]] = {}
+        for ai, spec in enumerate(low.specs):
+            if spec is None:
+                continue
+            for ax, d in enumerate(spec.shape):
+                if isinstance(d, str) and d not in extract:
+                    extract[d] = (ai, ax)
+
+        lines = ["def _dispatch(args):"]
+        w = lines.append
+        for name in low.sym_names:
+            ai, ax = extract[name]
+            w(f"    s_{sym_index[name]} = args[{ai}].shape[{ax}]")
+        if low.sym_names:
+            w("    key = (" + ", ".join(
+                f"_b{i}(s_{i})" for i in range(len(low.sym_names))) + ",)")
+        else:
+            w("    key = ()")
+        w("    entry = _get(('bucket', _fp, key))")
+        w("    if entry is None:")
+        w("        entry = _compile(key)")
+
+        call_args = []
+        for ai, spec in enumerate(low.specs):
+            var = f"a{ai}"
+            if spec is None or not any(isinstance(d, str) for d in spec.shape):
+                call_args.append(f"args[{ai}]")
+                continue
+            shape_expr = []
+            dyn_axes = []
+            for ax, d in enumerate(spec.shape):
+                if isinstance(d, str):
+                    dyn_axes.append(ax)
+                    shape_expr.append(f"key[{sym_index[d]}]")
+                else:
+                    shape_expr.append(str(d))
+            pshape = "(" + ", ".join(shape_expr) + \
+                ("," if len(shape_expr) == 1 else "") + ")"
+            w(f"    {var} = args[{ai}]")
+            w(f"    if tuple({var}.shape) != {pshape}:")
+            w(f"        _buf = _np.zeros({pshape}, _dt{ai})")
+            idx = ", ".join(f":{var}.shape[{ax}]" if ax in dyn_axes else ":"
+                            for ax in range(len(spec.shape)))
+            w(f"        _buf[{idx}] = _np.asarray({var})")
+            w(f"        {var} = _buf")
+            call_args.append(var)
+
+        w("    return entry(" + ", ".join(call_args) + ")")
+        src = "\n".join(lines)
+
+        cache = self.cache
+        _entries_get = cache._entries.get
+        _move_to_end = cache._entries.move_to_end
+        _stats = cache.stats
+
+        def _get(key):
+            e = _entries_get(key)
+            if e is not None:
+                _stats.hits += 1
+                _move_to_end(key)  # keep hot buckets at the LRU tail
+            return e
+
+        def _make_entry():
+            self._bucket_compiles += 1
+            return jax.jit(low.fn)
+
+        def _compile(key):
+            return cache.get_or_compile(key, _make_entry,
+                                        fingerprint=self._fingerprint)
+
+        ns: Dict[str, Any] = {"_np": np, "_fp": self._fingerprint,
+                              "_get": _get, "_compile": _compile}
+        for i, name in enumerate(low.sym_names):
+            ns[f"_b{i}"] = (lambda v, _p=low.policy, _n=name:
+                            _p.bucket(_n, int(v)))
+        for ai, spec in enumerate(low.specs):
+            if spec is not None:
+                ns[f"_dt{ai}"] = np.dtype(spec.dtype)
+
+        code = builtins.compile(
+            src, f"<disc-jit-dispatch:{low.options.name}>", "exec")
+        exec(code, ns)
+        return ns["_dispatch"], src
+
+
+# ------------------------------------------------------ public entrypoint --
+
+class CompiledFunction:
+    """What ``disc.compile`` returns: callable now, stageable explicitly.
+
+    * with specs: lowering + dispatcher generation happen eagerly (device
+      code still compiles per bucket on demand);
+    * without specs: the first call infers them (:func:`infer_specs`).
+
+    Attribute access falls through to the underlying :class:`Compiled`
+    artifact (``plan``, ``report()``, ``n_compiles``, ...), so migrating
+    from ``DiscEngine`` is a constructor swap.
+    """
+
+    def __init__(self, fn: Callable,
+                 specs: Optional[Sequence[Any]] = None,
+                 options: Optional[CompileOptions] = None, **kw) -> None:
+        if options is None:
+            options = CompileOptions(**kw)
+        elif kw:
+            options = options.replace(**kw)
+        self.fn = fn
+        self.options = options
+        self._specs, self._dims = normalize_specs(specs)
+        self._lowered: Optional[Lowered] = None
+        self._compiled: Optional[Compiled] = None
+        if self._specs is not None:
+            self._ensure()
+
+    # ------------------------------------------------------------ staging --
+    def lower(self, specs: Optional[Sequence[Any]] = None) -> Lowered:
+        """Stage 1: produce the inspectable compile-time artifacts."""
+        if specs is not None:
+            norm, dims = normalize_specs(specs)
+            return _lower(self.fn, norm, dims, self.options)
+        if self._specs is None:
+            raise ValueError(
+                "no specs declared and none inferred yet — pass specs to "
+                "lower(), declare them in disc.compile(fn, specs), or call "
+                "the function once to infer them")
+        if self._lowered is None:
+            self._lowered = _lower(self.fn, self._specs, self._dims,
+                                   self.options)
+        return self._lowered
+
+    def _ensure(self) -> Compiled:
+        if self._compiled is None:
+            self._compiled = self.lower().compile()
+        return self._compiled
+
+    # ------------------------------------------------------------ calling --
+    def __call__(self, *arrays):
+        if self._compiled is None:
+            if self._specs is None:
+                if self.options.pipeline == "jit":
+                    # no declared dynamic dims: every arg passes through
+                    self._specs = (None,) * len(arrays)
+                else:
+                    self._specs = tuple(infer_specs(arrays))
+            self._ensure()
+        return self._compiled(*arrays)
+
+    def __getattr__(self, item):
+        compiled = object.__getattribute__(self, "_compiled")
+        if compiled is None:
+            raise AttributeError(
+                f"{item!r} is unavailable before compilation — call the "
+                f"function once (or pass specs) first")
+        return getattr(compiled, item)
+
+
+def compile(fn: Optional[Callable] = None,
+            specs: Optional[Sequence[Any]] = None,
+            options: Optional[CompileOptions] = None,
+            **kw) -> CompiledFunction:
+    """Compile ``fn`` for dynamic shapes through the DISC pipeline.
+
+    ``specs`` declares per-argument shapes with symbolic dims (strings or
+    :class:`Dim` objects); omit it to infer from the first call.  All
+    remaining keywords are :class:`CompileOptions` fields::
+
+        @disc.compile            # bare decorator, inferred specs
+        def f(x, y): ...
+
+        f2 = disc.compile(f, [("B", 64), (64, 32)], backend="pallas")
+        lowered = f2.lower()      # inspect DHLO graph + plans
+        art = lowered.compile()   # generated dispatcher
+
+    Usable as a decorator (``@disc.compile`` or
+    ``@disc.compile(specs=..., backend=...)``).
+    """
+    if fn is None:  # decorator-with-arguments form
+        return lambda f: CompiledFunction(f, specs, options, **kw)
+    if not callable(fn):
+        raise TypeError("disc.compile: first argument must be callable")
+    return CompiledFunction(fn, specs, options, **kw)

@@ -37,6 +37,9 @@ class BucketPolicy:
     granule: int = 16           # pow2: smallest bucket; multiple: the multiple
     # per-symbol overrides: symbol name -> (kind, granule)
     overrides: Tuple[Tuple[str, Tuple[str, int]], ...] = ()
+    # per-symbol hard caps (declared ``Dim(max=...)``): buckets are clamped
+    # to the cap; a value beyond the cap is a contract violation
+    caps: Tuple[Tuple[str, int], ...] = ()
 
     def _rule(self, symbol_name: str) -> Tuple[str, int]:
         for name, rule in self.overrides:
@@ -44,15 +47,30 @@ class BucketPolicy:
                 return rule
         return (self.kind, self.granule)
 
+    def cap(self, symbol_name: str) -> Optional[int]:
+        for name, c in self.caps:
+            if name == symbol_name:
+                return c
+        return None
+
     def bucket(self, symbol_name: str, value: int) -> int:
         kind, g = self._rule(symbol_name)
         if kind == "exact":
-            return value
-        if kind == "multiple":
-            return g * math.ceil(value / g)
-        if kind == "pow2":
-            return pow2_bucket(value, g)
-        raise ValueError(f"unknown bucket kind {kind}")
+            b = value
+        elif kind == "multiple":
+            b = g * math.ceil(value / g)
+        elif kind == "pow2":
+            b = pow2_bucket(value, g)
+        else:
+            raise ValueError(f"unknown bucket kind {kind}")
+        c = self.cap(symbol_name)
+        if c is not None:
+            if value > c:
+                raise ValueError(
+                    f"dim {symbol_name}={value} exceeds its declared "
+                    f"max={c}")
+            b = min(b, c)
+        return b
 
     def max_buckets(self, symbol_name: str, max_value: int) -> int:
         """Upper bound on #buckets a symbol can produce up to max_value."""

@@ -54,8 +54,16 @@ class CompileCache:
         self.stats = CacheStats()
 
     # --------------------------------------------------------- bucketed --
-    def get_or_compile(self, bucket_sig: Tuple, compile_fn: Callable[[], Any]) -> Any:
-        key = ("bucket", self.fingerprint, bucket_sig)
+    def get_or_compile(self, bucket_sig: Tuple, compile_fn: Callable[[], Any],
+                       fingerprint: Optional[str] = None) -> Any:
+        """Look up / build the artifact for one bucket signature.
+
+        ``fingerprint`` overrides the cache's default graph fingerprint so a
+        single cache instance can be shared by several compiled artifacts
+        (e.g. a serving engine's prefill + decode functions) — entries never
+        collide because the fingerprint is part of the key.
+        """
+        key = ("bucket", fingerprint or self.fingerprint, bucket_sig)
         entry = self._entries.get(key)
         if entry is not None:
             self.stats.hits += 1
@@ -70,17 +78,22 @@ class CompileCache:
         return entry
 
     # ------------------------------------------------- static escalation --
-    def should_escalate(self, exact_sig: Tuple) -> bool:
+    def should_escalate(self, exact_sig: Tuple,
+                        fingerprint: Optional[str] = None,
+                        threshold: Optional[int] = None) -> bool:
         """§4.4: route hot exact shapes to the static compiler."""
-        if self.escalation_threshold is None:
+        threshold = self.escalation_threshold if threshold is None else threshold
+        if threshold is None:
             return False
-        n = self._exact_hits.get(exact_sig, 0) + 1
-        self._exact_hits[exact_sig] = n
-        return n >= self.escalation_threshold
+        key = (fingerprint or self.fingerprint, exact_sig)
+        n = self._exact_hits.get(key, 0) + 1
+        self._exact_hits[key] = n
+        return n >= threshold
 
     def get_or_compile_exact(self, exact_sig: Tuple,
-                             compile_fn: Callable[[], Any]) -> Any:
-        key = ("exact", self.fingerprint, exact_sig)
+                             compile_fn: Callable[[], Any],
+                             fingerprint: Optional[str] = None) -> Any:
+        key = ("exact", fingerprint or self.fingerprint, exact_sig)
         entry = self._entries.get(key)
         if entry is not None:
             self.stats.hits += 1

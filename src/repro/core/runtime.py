@@ -1,46 +1,35 @@
-"""DiscEngine — generated runtime flow — DISC §4.2.
+"""DiscEngine — deprecated shim over the public ``disc.compile`` API.
 
-    "Rather than using an interpreter, DISC compiles and generates the code
-     of computations on both host and device side, and also runtime flows
-     (buffer management, kernel launch, et al.)."
+The engine that used to live here was split apart:
 
-`DiscEngine.compile()` *generates Python source* for the host-side dispatch
-of one graph — shape extraction, bucket mapping, cache lookup, padding plan,
-device invocation, output recovery — and ``exec``s it once.  The per-call
-path is straight-line host code specialized to the graph: no graph walking,
-no per-op interpretation (contrast ``vm.NimbleVM``).  The generated source
-is kept in ``engine.dispatch_source`` as an inspectable artifact.
+* host-dispatch code generation  → :mod:`repro.core.dispatcher`
+* backend selection              → :mod:`repro.api.backends` (registry)
+* staging / caching / options    → :mod:`repro.api.staged` /
+  :class:`repro.api.CompileOptions`
 
-Device-side artifacts are produced per *bucket signature* by
-``codegen.build_padded_executor`` and cached in ``cache.CompileCache`` keyed
-on the shape-free graph fingerprint + bucket signature; hot exact shapes
-optionally escalate to static specializations (§4.4).
+``DiscEngine(fn, specs, ...)`` keeps working — it forwards to
+``disc.compile`` and proxies the old attribute surface — but emits a
+``DeprecationWarning``.  New code should use::
+
+    import disc
+    compiled = disc.compile(fn, specs, options=disc.CompileOptions(...))
+
+Deprecation policy: the shim stays for two release cycles after the
+``repro.api`` introduction, then construction becomes an error.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Callable, Dict, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from ..frontends.jaxpr_frontend import ArgSpec, bridge, eval_dim
+from ..frontends.jaxpr_frontend import ArgSpec
 from .bucketing import POW2, BucketPolicy
-from .cache import CompileCache
-from .codegen import build_exact_executor, build_padded_executor, dyn_symbols
-from .dhlo import DGraph
-from .fusion import FusionPlan, plan_fusion
-from .placer import Placement, place
-from .buffers import BufferPlan, plan_buffers
-from .symshape import SymDim
 
 __all__ = ["DiscEngine"]
 
 
 class DiscEngine:
-    """End-to-end dynamic-shape execution of a jax-traceable function."""
+    """Deprecated: use ``disc.compile`` (see module docstring)."""
 
     def __init__(
         self,
@@ -54,226 +43,61 @@ class DiscEngine:
         donate: bool = False,
         backend: str = "xla",
     ) -> None:
+        warnings.warn(
+            "DiscEngine is deprecated; use disc.compile(fn, specs, "
+            "options=disc.CompileOptions(...)) instead",
+            DeprecationWarning, stacklevel=2)
+        from ..api import CompileOptions
+        from ..api.staged import compile as disc_compile
+
         self.fn = fn
         self.specs = list(arg_specs)
         self.policy = policy
         self.donate = donate
         self.backend = backend
-        self.graph, _ = bridge(fn, arg_specs, name=name)
-        self.plan: FusionPlan = plan_fusion(self.graph)
-        self.placement: Placement = place(self.graph)
-        self.buffer_plan: BufferPlan = plan_buffers(self.graph)
-        self.syms: List[SymDim] = dyn_symbols(self.graph)
-        self.cache = CompileCache(
-            self.graph.fingerprint(),
-            max_entries=max_cache_entries,
+        options = CompileOptions(
+            policy=policy, name=name, backend=backend,
             escalation_threshold=escalation_threshold,
-        )
-        self._exact_jit = None  # lazily created static-fallback executor
-        self.dispatch_source: str = ""
-        self._dispatch = self._generate_dispatch()
+            max_cache_entries=max_cache_entries, donate=donate)
+        self._compiled = disc_compile(fn, arg_specs, options=options)._ensure()
 
-    # ------------------------------------------------------------ public --
+    # ---------------------------------------------------- old surface --
     def __call__(self, *arrays):
-        outs = self._dispatch(arrays)
-        return outs[0] if len(outs) == 1 else tuple(outs)
+        return self._compiled(*arrays)
+
+    @property
+    def graph(self):
+        return self._compiled.graph
+
+    @property
+    def plan(self):
+        return self._compiled.plan
+
+    @property
+    def placement(self):
+        return self._compiled.placement
+
+    @property
+    def buffer_plan(self):
+        return self._compiled.buffer_plan
+
+    @property
+    def syms(self):
+        return self._compiled.syms
+
+    @property
+    def cache(self):
+        return self._compiled.cache
+
+    @property
+    def dispatch_source(self) -> str:
+        return self._compiled.dispatch_source
 
     @property
     def n_compiles(self) -> int:
-        return self.cache.stats.compiles
+        return self._compiled.cache.stats.compiles
 
     def report(self) -> Dict[str, Any]:
-        from .codegen import _pallas_input_eligible, _pallas_loop_eligible
-        n_pallas = sum(
-            1 for c in self.plan.clusters
-            if _pallas_loop_eligible(self.graph, c)
-            or _pallas_input_eligible(self.graph, c))
-        return {
-            "fingerprint": self.graph.fingerprint(),
-            "fusion": self.plan.stats(),
-            "placement": self.placement.report(),
-            "constraints": self.graph.store.stats(),
-            "cache": self.cache.stats.as_dict(),
-            "dynamic_symbols": [s.name for s in self.syms],
-            "backend": self.backend,
-            "pallas_eligible_clusters": n_pallas,
-        }
-
-    # ------------------------------------------------- device compilation --
-    def _compile_bucket(self, key: Tuple[int, ...]):
-        padded = {s.uid: int(k) for s, k in zip(self.syms, key)}
-        executor = build_padded_executor(self.graph, padded, self.syms,
-                                         plan=self.plan,
-                                         backend=self.backend)
-        lens_sds = jax.ShapeDtypeStruct((max(len(self.syms), 1),), jnp.int32)
-        arg_sds = []
-        for p in self.graph.params:
-            shape = []
-            for d in p.shape:
-                if isinstance(d, SymDim):
-                    c = self.graph.store.canon_dim(d)
-                    shape.append(padded[c.uid] if isinstance(c, SymDim) else c)
-                else:
-                    shape.append(d)
-            arg_sds.append(jax.ShapeDtypeStruct(tuple(shape), p.dtype))
-        donate = tuple(range(1, 1 + len(arg_sds))) if self.donate else ()
-        jfn = jax.jit(executor, donate_argnums=donate)
-        return jfn.lower(lens_sds, *arg_sds).compile()
-
-    def _compile_exact(self):
-        if self._exact_jit is None:
-            self._exact_jit = jax.jit(build_exact_executor(self.graph))
-        return self._exact_jit
-
-    # ------------------------------------------------ generated host flow --
-    def _generate_dispatch(self) -> Callable:
-        g = self.graph
-        store = g.store
-        syms = self.syms
-        sym_index = {s.uid: i for i, s in enumerate(syms)}
-
-        # one extraction site per symbol: first (param, axis) where it occurs
-        extract: Dict[int, Tuple[int, int]] = {}
-        for pi, p in enumerate(g.params):
-            for ax, d in enumerate(p.shape):
-                if isinstance(d, SymDim):
-                    c = store.canon_dim(d)
-                    if isinstance(c, SymDim) and c.uid not in extract:
-                        extract[c.uid] = (pi, ax)
-
-        lines: List[str] = ["def _dispatch(arrays):"]
-        w = lines.append
-        names = []
-        for s in syms:
-            pi, ax = extract[s.uid]
-            nm = f"s_{s.uid}"
-            names.append(nm)
-            w(f"    {nm} = arrays[{pi}].shape[{ax}]")
-        if syms:
-            w("    key = (" + ", ".join(f"_b{i}({nm})" for i, nm in enumerate(names)) + ",)")
-            w("    exact = (" + ", ".join(names) + ",)")
-        else:
-            w("    key = ()")
-            w("    exact = ()")
-
-        # §4.4 static escalation branch
-        if self.cache.escalation_threshold is not None:
-            w("    if _cache.should_escalate(exact):")
-            w("        fn = _cache.get_or_compile_exact(exact, _compile_exact)")
-            w("        return list(fn(*arrays))")
-
-        w("    entry = _get(('bucket', _fp, key))")
-        w("    if entry is None:")
-        w("        entry = _compile(key)")
-        n = max(len(syms), 1)
-        if syms:
-            w(f"    lens = _np.array([{', '.join(names)}], _np.int32)")
-        else:
-            w(f"    lens = _zero_lens")
-
-        # padding plan: unrolled per param (host-side zero-fill)
-        call_args = []
-        for pi, p in enumerate(g.params):
-            dyn_axes = []
-            shape_expr = []
-            for ax, d in enumerate(p.shape):
-                if isinstance(d, SymDim):
-                    c = store.canon_dim(d)
-                    if isinstance(c, SymDim):
-                        dyn_axes.append((ax, sym_index[c.uid]))
-                        shape_expr.append(f"key[{sym_index[c.uid]}]")
-                    else:
-                        shape_expr.append(str(c))
-                else:
-                    shape_expr.append(str(d))
-            var = f"x{pi}"
-            if not dyn_axes:
-                w(f"    {var} = arrays[{pi}]")
-            else:
-                pshape = "(" + ", ".join(shape_expr) + ("," if len(shape_expr) == 1 else "") + ")"
-                w(f"    {var} = arrays[{pi}]")
-                w(f"    if tuple({var}.shape) != {pshape}:")
-                w(f"        _buf = _np.zeros({pshape}, _dt{pi})")
-                idx = ", ".join(
-                    (f":{var}.shape[{ax}]" if any(ax == a for a, _ in dyn_axes) else ":")
-                    for ax in range(p.rank)
-                )
-                w(f"        _buf[{idx}] = _np.asarray({var})")
-                w(f"        {var} = _buf")
-            call_args.append(var)
-
-        w(f"    outs = entry(lens, {', '.join(call_args)})" if call_args
-          else "    outs = entry(lens)")
-
-        # output recovery: slice back to true shapes
-        out_exprs = []
-        for oi, o in enumerate(g.outputs):
-            idx_parts = []
-            needs_slice = False
-            for ax, d in enumerate(o.shape):
-                if isinstance(d, int):
-                    idx_parts.append(":")
-                    continue
-                c = store.canon_dim(d)
-                if isinstance(c, int):
-                    idx_parts.append(":")
-                elif c.uid in sym_index:
-                    idx_parts.append(f":s_{c.uid}")
-                    needs_slice = True
-                else:
-                    idx_parts.append(f":_od{oi}_{ax}(exact)")
-                    needs_slice = True
-            if needs_slice:
-                out_exprs.append(f"outs[{oi}][{', '.join(idx_parts)}]")
-            else:
-                out_exprs.append(f"outs[{oi}]")
-        w("    return [" + ", ".join(out_exprs) + "]")
-
-        src = "\n".join(lines)
-        self.dispatch_source = src
-
-        # namespace bound once at generation time (compiled host flow)
-        _entries_get = self.cache._entries.get
-        _stats = self.cache.stats
-
-        def _get(key):
-            e = _entries_get(key)
-            if e is not None:
-                _stats.hits += 1
-            return e
-
-        ns: Dict[str, Any] = {
-            "_np": np,
-            "_fp": self.cache.fingerprint,
-            "_get": _get,
-            "_cache": self.cache,
-            "_compile_exact": self._compile_exact,
-            "_zero_lens": np.zeros((1,), np.int32),
-        }
-        for i, s in enumerate(syms):
-            pol = self.policy
-            nm = s.name
-            ns[f"_b{i}"] = (lambda v, _p=pol, _n=nm: _p.bucket(_n, int(v)))
-        for pi, p in enumerate(g.params):
-            ns[f"_dt{pi}"] = np.dtype(p.dtype)
-
-        def _compile(key):
-            return self.cache.get_or_compile(key, lambda: self._compile_bucket(key))
-
-        ns["_compile"] = _compile
-
-        # derived-output-dim evaluators (host shape calculation, §4.2.1)
-        for oi, o in enumerate(g.outputs):
-            for ax, d in enumerate(o.shape):
-                if isinstance(d, SymDim):
-                    c = store.canon_dim(d)
-                    if isinstance(c, SymDim) and c.uid not in sym_index:
-                        def _mk(dim):
-                            def _f(exact):
-                                binds = {s.uid: v for s, v in zip(syms, exact)}
-                                return eval_dim(g, dim, binds)
-                            return _f
-                        ns[f"_od{oi}_{ax}"] = _mk(d)
-
-        exec(compile(src, f"<disc-dispatch:{g.name}>", "exec"), ns)
-        return ns["_dispatch"]
+        rep = self._compiled.report()
+        rep["backend"] = self.backend
+        return rep

@@ -1,0 +1,1 @@
+from .context import use_mesh, get_mesh, maybe_shard  # noqa: F401

@@ -1,0 +1,71 @@
+"""Mesh context for distributed execution — single-device no-op by default.
+
+Models and launchers are written mesh-aware (``maybe_shard`` on activation
+boundaries, ``get_mesh()`` for expert-parallel branching).  On a single
+device, or outside any ``use_mesh`` scope, every call here degrades to a
+no-op so the same model code runs unsharded.
+
+Multi-device behaviour: ``use_mesh`` installs a ``jax.sharding.Mesh`` for
+the dynamic extent of the ``with`` block; ``maybe_shard`` then applies
+``lax.with_sharding_constraint`` with the spec *pruned to the axes that
+actually exist on the mesh* (layer code names the full production axis set
+``("pod", "data", "model")``; smaller meshes simply ignore missing axes).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = ["use_mesh", "get_mesh", "maybe_shard"]
+
+_state = threading.local()
+
+
+def get_mesh() -> Optional[Mesh]:
+    """The innermost active mesh, or ``None`` outside any ``use_mesh``."""
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Install ``mesh`` as the ambient mesh for the duration of the block."""
+    prev = get_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def _prune_spec(spec: PartitionSpec, mesh: Mesh) -> PartitionSpec:
+    """Drop axis names the mesh does not have (logical specs name the full
+    production axis set; a 1-axis test mesh keeps only what it defines)."""
+    names = set(mesh.axis_names)
+    pruned = []
+    for entry in spec:
+        if entry is None:
+            pruned.append(None)
+        elif isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            pruned.append(kept if kept else None)
+        else:
+            pruned.append(entry if entry in names else None)
+    return PartitionSpec(*pruned)
+
+
+def maybe_shard(x: Any, spec: Optional[PartitionSpec]) -> Any:
+    """Constrain ``x`` to ``spec`` under the active mesh; identity otherwise."""
+    mesh = get_mesh()
+    if mesh is None or spec is None:
+        return x
+    try:
+        sharding = NamedSharding(mesh, _prune_spec(spec, mesh))
+        return jax.lax.with_sharding_constraint(x, sharding)
+    except ValueError:
+        # spec rank mismatch etc. — sharding is an optimization hint, never
+        # a correctness requirement; fall through to unconstrained
+        return x

@@ -323,9 +323,13 @@ def _bridge_eqn(b: _Bridge, eqn) -> None:
         return
 
     if name == "slice":
-        starts = tuple(params["start_indices"])
-        limits = tuple(params["limit_indices"])
-        strides = tuple(params["strides"] or (1,) * len(starts))
+        # jnp.split lowers here with numpy-int indices — coerce to python
+        # ints so they never leak into DHLO shapes (isinstance(d, int)
+        # checks gate every constraint/codegen path)
+        starts = tuple(int(s) for s in params["start_indices"])
+        limits = tuple(int(l) for l in params["limit_indices"])
+        strides = tuple(int(st) for st in
+                        (params["strides"] or (1,) * len(starts)))
         src = in_vals[0]
         out_shape: List[Dim] = []
         for ax, (s, l, st) in enumerate(zip(starts, limits, strides)):
@@ -337,7 +341,7 @@ def _bridge_eqn(b: _Bridge, eqn) -> None:
                     out_shape.append(b.derived(f"{d.name}-{s}", d.rep - s,
                                                ("affine", d, 1, -s)))
             else:
-                out_shape.append(-(-(l - s) // st))
+                out_shape.append(int(-(-(l - s) // st)))
         emit("slice", in_vals, [tuple(out_shape)],
              extra_attrs={"start_indices": starts, "limit_indices": limits,
                           "strides": strides})

@@ -11,10 +11,10 @@ import time
 
 import jax
 
+from ..api import ServeConfig, ServeEngine
 from ..configs import ARCH_IDS, get_config
 from ..data.pipeline import VarLenRequestStream
 from ..models.registry import get_model
-from ..serve.engine import ServeConfig, ServeEngine
 
 
 def main():

@@ -2,18 +2,24 @@
 
 The paper's serving problem — requests with varying prompt lengths force
 either per-shape recompilation (XLA) or interpretation (Nimble VM) — is
-solved here exactly as DISC prescribes:
+solved here exactly as DISC prescribes, built entirely on the public
+``disc.compile`` API:
 
-* **prefill** is compiled once per (batch-bucket, length-bucket): prompts
-  are bucket-padded, true lengths ride along as an i32 operand, attention
-  masks by true length (one artifact serves every prompt ≤ bucket);
-* **decode** is compiled once per batch-bucket against the fixed-capacity
-  KV cache; a step serves any mix of sequence lengths via the lens vector;
-* slot management is host-side *generated* logic (plain compiled Python,
-  no per-op interpretation), mirroring core/runtime.py's dispatcher.
+* **prefill** and **decode** are two ``disc.compile`` artifacts
+  (``CompileOptions(pipeline="jit")`` — whole-model pytree functions)
+  sharing **one** :class:`CompileCache`;
+* prefill is compiled once per length-bucket: the artifact's generated
+  dispatch bucket-pads the prompt, true lengths ride along as an i32
+  operand (one compile serves every prompt ≤ bucket, clamped by
+  ``Dim("S", max=max_seq)``);
+* decode is compiled once against the fixed-capacity KV cache; a step
+  serves any mix of sequence lengths via the lens vector;
+* slot management is host-side compiled Python (no per-op
+  interpretation), mirroring the core dispatcher's generated flow.
 
-Compile counts are exposed so benchmarks can verify the O(#buckets)
-contract end-to-end on a real model.
+Compile counts come from the artifacts' ``compile_counts()`` so
+benchmarks can verify the O(#buckets) contract end-to-end on a real
+model.
 """
 from __future__ import annotations
 
@@ -25,8 +31,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..api.options import CompileOptions, Dim
+from ..api.staged import compile as disc_compile
 from ..core.bucketing import BucketPolicy, POW2
+from ..core.cache import CompileCache
 from ..data.pipeline import Request
+from ..frontends.jaxpr_frontend import ArgSpec
 from ..models.registry import Model
 
 
@@ -56,8 +66,24 @@ class ServeEngine:
         self.slots: List[Optional[_Slot]] = [None] * scfg.max_batch
         self.queue: List[Request] = []
         self.done: Dict[int, List[int]] = {}
-        self._prefill_cache: Dict[Tuple[int, int], Any] = {}
-        self._decode_fn = jax.jit(self._decode_step)
+
+        # one compile cache shared by both artifacts; entries are keyed by
+        # per-artifact fingerprint so prefill/decode never collide
+        self.compile_cache = CompileCache("serve", max_entries=64)
+        self._prefill_fn = disc_compile(
+            self._replay_prefill,
+            specs=[None,  # params pytree
+                   None,  # KV cache row pytree
+                   ArgSpec((1, Dim("S", max=scfg.max_seq)), jnp.int32,
+                           name="tokens"),
+                   None],  # lens (rides along, lens-aware fn)
+            options=CompileOptions(pipeline="jit", name="prefill",
+                                   policy=scfg.prefill_policy,
+                                   cache=self.compile_cache))
+        self._decode_fn = disc_compile(
+            self._decode_step,
+            options=CompileOptions(pipeline="jit", name="decode",
+                                   cache=self.compile_cache))
         self.stats = {"prefill_compiles": 0, "decode_steps": 0,
                       "prefill_calls": 0, "tokens_generated": 0}
 
@@ -86,24 +112,17 @@ class ServeEngine:
                 self._prefill(req, i)
 
     def _prefill(self, req: Request, slot: int) -> None:
-        """Bucket-compiled prefill: pad prompt to bucket, mask by true len."""
+        """Bucket-compiled prefill: the artifact's generated dispatch pads
+        the prompt to its bucket; true length rides along in ``lens``."""
         plen = len(req.tokens)
-        bucket = self.scfg.prefill_policy.bucket("S", plen)
-        bucket = min(bucket, self.scfg.max_seq)
-        key = (1, bucket)
-        fn = self._prefill_cache.get(key)
-        if fn is None:
-            fn = jax.jit(self._replay_prefill)
-            # force one compile per bucket (AOT) for honest accounting
-            self.stats["prefill_compiles"] += 1
-            self._prefill_cache[key] = fn
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :plen] = req.tokens
+        toks = np.asarray(req.tokens, np.int32)[None, :]
         lens = np.array([plen], np.int32)
         cache_row = jax.tree.map(lambda c: c[:, slot:slot + 1]
                                  if c.ndim > 1 else c, self.cache)
-        new_row, last_logits = fn(self.params, cache_row,
-                                  jnp.asarray(toks), jnp.asarray(lens))
+        new_row, last_logits = self._prefill_fn(self.params, cache_row,
+                                                toks, lens)
+        self.stats["prefill_compiles"] = \
+            self._prefill_fn.compile_counts()["total"]
         self.cache = jax.tree.map(
             lambda full, row: jax.lax.dynamic_update_slice_in_dim(
                 full, row.astype(full.dtype), slot, axis=1)

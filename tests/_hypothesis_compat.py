@@ -1,0 +1,134 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The property tests only use ``@given`` with ``st.integers`` ranges and
+``@settings(max_examples=..., deadline=None)``.  When the real library is
+available it is used unchanged; otherwise this shim replays each property
+over a fixed number of seeded-random samples (including the range
+endpoints), which keeps the properties exercised — with reproducible
+counterexamples — without adding a dependency.
+"""
+from __future__ import annotations
+
+import functools
+
+try:  # pragma: no cover - exercised only when hypothesis exists
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic replacement
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _IntStrategy:
+        def __init__(self, min_value: int, max_value: int) -> None:
+            self.min_value = min_value
+            self.max_value = max_value
+
+        def sample(self, rng) -> int:
+            # dtype=int64: ranges like (0, 2**31 - 1) overflow the default
+            return int(rng.randint(self.min_value, int(self.max_value) + 1,
+                                   dtype=np.int64))
+
+        def endpoints(self):
+            return (self.min_value, self.max_value)
+
+    class _BoolStrategy:
+        def sample(self, rng) -> bool:
+            return bool(rng.randint(2))
+
+        def endpoints(self):
+            return (False, True)
+
+    class _ListStrategy:
+        def __init__(self, elem, min_size=0, max_size=None) -> None:
+            self.elem = elem
+            self.min_size = min_size
+            self.max_size = max_size if max_size is not None else min_size + 10
+
+        def sample(self, rng):
+            n = int(rng.randint(self.min_size, self.max_size + 1))
+            return [self.elem.sample(rng) for _ in range(n)]
+
+        def endpoints(self):
+            lo, hi = self.elem.endpoints()
+            return ([lo] * self.min_size, [hi] * self.max_size)
+
+    class _TupleStrategy:
+        def __init__(self, *elems) -> None:
+            self.elems = elems
+
+        def sample(self, rng):
+            return tuple(e.sample(rng) for e in self.elems)
+
+        def endpoints(self):
+            return (tuple(e.endpoints()[0] for e in self.elems),
+                    tuple(e.endpoints()[1] for e in self.elems))
+
+    class _SampledFrom:
+        def __init__(self, choices) -> None:
+            self.choices = list(choices)
+
+        def sample(self, rng):
+            return self.choices[int(rng.randint(len(self.choices)))]
+
+        def endpoints(self):
+            return (self.choices[0], self.choices[-1])
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> "_IntStrategy":
+            return _IntStrategy(min_value, max_value)
+
+        @staticmethod
+        def booleans() -> "_BoolStrategy":
+            return _BoolStrategy()
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=None) -> "_ListStrategy":
+            return _ListStrategy(elem, min_size, max_size)
+
+        @staticmethod
+        def tuples(*elems) -> "_TupleStrategy":
+            return _TupleStrategy(*elems)
+
+        @staticmethod
+        def sampled_from(choices) -> "_SampledFrom":
+            return _SampledFrom(choices)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+
+            @functools.wraps(fn)
+            def run(*args):
+                # read at call time: @settings is conventionally applied
+                # ABOVE @given, i.e. to this wrapper, after deco ran
+                n = getattr(run, "_max_examples",
+                            getattr(fn, "_max_examples", 20))
+                names = list(strategies)
+                rng = np.random.RandomState(0xD15C)
+                # corner cases first: all-min and all-max
+                corner_lo = {k: s.endpoints()[0] for k, s in strategies.items()}
+                corner_hi = {k: s.endpoints()[1] for k, s in strategies.items()}
+                cases = [corner_lo, corner_hi]
+                for _ in range(max(n - len(cases), 0)):
+                    cases.append({k: strategies[k].sample(rng) for k in names})
+                for case in cases:
+                    try:
+                        fn(*args, **case)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"property falsified with {case}: {e}") from e
+
+            # pytest must not see the wrapped signature (it would try to
+            # inject the strategy parameters as fixtures)
+            del run.__wrapped__
+            return run
+        return deco

@@ -210,12 +210,12 @@ class TestNestedCallInlining:
         assert "max" in codes  # relu inlined down to lax.max
 
     def test_relu_engine_dynamic_shapes(self):
-        from repro.core.runtime import DiscEngine
+        from repro.api import compile as disc_compile
 
         def f(x):
             return jax.nn.relu(x - 0.5).sum(axis=1)
 
-        eng = DiscEngine(f, [ArgSpec(("B", 8))])
+        eng = disc_compile(f, [ArgSpec(("B", 8))])
         for b in (3, 37, 50):  # 37 = a representative prime (the regression)
             x = np.random.randn(b, 8).astype(np.float32)
             np.testing.assert_allclose(eng(x), f(jnp.asarray(x)),

@@ -5,11 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import ArgSpec, bridge, compile as disc_compile
 from repro.core.codegen import (_pallas_input_eligible,
                                 _pallas_loop_eligible)
 from repro.core.fusion import plan_fusion
-from repro.core.runtime import DiscEngine
-from repro.frontends import ArgSpec, bridge
 
 
 def _ew_chain(x, y):
@@ -45,7 +44,7 @@ class TestEligibility:
 class TestPallasBackendCorrectness:
     @pytest.mark.parametrize("shape", [(4, 16), (7, 33), (16, 64)])
     def test_elementwise_matches_xla(self, shape):
-        eng = DiscEngine(_ew_chain,
+        eng = disc_compile(_ew_chain,
                          [ArgSpec(("B", "D")), ArgSpec(("B", "D"))],
                          backend="pallas")
         assert eng.report()["pallas_eligible_clusters"] >= 1
@@ -59,7 +58,7 @@ class TestPallasBackendCorrectness:
 
     @pytest.mark.parametrize("shape", [(8, 32), (3, 17)])
     def test_reduce_matches_xla(self, shape):
-        eng = DiscEngine(_reduce_chain, [ArgSpec(("B", "S"))],
+        eng = disc_compile(_reduce_chain, [ArgSpec(("B", "S"))],
                          backend="pallas")
         rng = np.random.RandomState(1)
         x = rng.randn(*shape).astype(np.float32)
@@ -73,7 +72,7 @@ class TestPallasBackendCorrectness:
             z = h @ w                                # xla (library)
             return jax.nn.sigmoid(z) * z             # pallas cluster
 
-        eng = DiscEngine(f, [ArgSpec(("B", 16)), ArgSpec((16, 8))],
+        eng = disc_compile(f, [ArgSpec(("B", 16)), ArgSpec((16, 8))],
                          backend="pallas")
         rng = np.random.RandomState(2)
         x = rng.randn(5, 16).astype(np.float32)
@@ -86,7 +85,7 @@ class TestPallasBackendCorrectness:
     def test_dynamic_shapes_masked(self):
         # tainted padded region (exp) feeding a reduce: the Pallas kInput
         # kernel must mask with the actual column count
-        eng = DiscEngine(_reduce_chain, [ArgSpec(("B", "S"))],
+        eng = disc_compile(_reduce_chain, [ArgSpec(("B", "S"))],
                         backend="pallas")
         for b, s in [(3, 5), (6, 21), (2, 40)]:
             rng = np.random.RandomState(s)

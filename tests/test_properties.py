@@ -1,6 +1,6 @@
 """Hypothesis property tests on system invariants.
 
-* random elementwise/reduce programs: DiscEngine(bucket-padded, masked)
+* random elementwise/reduce programs: disc.compile artifact (bucket-padded, masked)
   output == direct jax execution at arbitrary shapes;
 * buffer plan safety: no two simultaneously-live values share a slot;
 * constraint store: equality is a congruence (symmetric/transitive,
@@ -11,14 +11,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
+from repro.api import ArgSpec, bridge, compile as disc_compile
 from repro.core.buffers import liveness, plan_buffers
 from repro.core.constraints import ShapeConstraintStore
-from repro.core.runtime import DiscEngine
 from repro.core.symshape import fresh_symdim
 from repro.data.pipeline import pack_sequences
-from repro.frontends import ArgSpec, bridge
 
 # ---- random program generator ------------------------------------------
 _UNARY = [jnp.tanh, jnp.exp, lambda x: x * 0.5, jnp.abs,
@@ -65,8 +64,8 @@ class TestEngineEqualsReferenceOnRandomPrograms:
            dseed=st.integers(0, 2**31 - 1))
     def test_random_program(self, seed, depth, with_reduce, b, s, dseed):
         fn = _random_program(seed, depth, with_reduce)
-        eng = DiscEngine(fn, [ArgSpec(("B", "S")), ArgSpec(("B", "S"))],
-                         name=f"prop{seed}")
+        eng = disc_compile(fn, [ArgSpec(("B", "S")), ArgSpec(("B", "S"))],
+                           name=f"prop{seed}")
         rng = np.random.RandomState(dseed)
         x = rng.randn(b, s).astype(np.float32)
         y = rng.randn(b, s).astype(np.float32)

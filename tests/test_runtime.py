@@ -3,13 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
-from repro.core.bucketing import BucketPolicy, pow2_bucket
+from repro.api import (ArgSpec, BucketPolicy, NimbleVM, bridge, pow2_bucket,
+                       compile as disc_compile)
 from repro.core.fusion import plan_fusion
-from repro.core.runtime import DiscEngine
-from repro.core.vm import NimbleVM
-from repro.frontends import ArgSpec, bridge
 
 F32 = jnp.float32
 
@@ -29,7 +27,7 @@ class TestEngineCorrectness:
         def f(x, y):
             return jnp.exp(x) * y + jnp.tanh(x)
 
-        eng = DiscEngine(f, [ArgSpec(("B", "D")), ArgSpec(("B", "D"))])
+        eng = disc_compile(f, [ArgSpec(("B", "D")), ArgSpec(("B", "D"))])
         for b, d in [(3, 5), (17, 9), (16, 16), (1, 1)]:
             x = np.random.randn(b, d).astype(np.float32)
             y = np.random.randn(b, d).astype(np.float32)
@@ -41,7 +39,7 @@ class TestEngineCorrectness:
         def f(x):
             return jnp.exp(x).sum(axis=1)
 
-        eng = DiscEngine(f, [ArgSpec(("B", "S"))])
+        eng = disc_compile(f, [ArgSpec(("B", "S"))])
         x = np.random.randn(5, 13).astype(np.float32)
         np.testing.assert_allclose(eng(x), f(x), rtol=1e-5)
 
@@ -49,7 +47,7 @@ class TestEngineCorrectness:
         def f(x):
             return jax.nn.softmax(x, axis=-1)
 
-        eng = DiscEngine(f, [ArgSpec(("B", "S"))])
+        eng = disc_compile(f, [ArgSpec(("B", "S"))])
         x = np.random.randn(3, 21).astype(np.float32)
         np.testing.assert_allclose(eng(x), f(x), rtol=1e-5, atol=1e-6)
 
@@ -57,13 +55,13 @@ class TestEngineCorrectness:
         def f(x, w):
             return jnp.exp(x) @ w  # tainted padded region feeds contraction
 
-        eng = DiscEngine(f, [ArgSpec(("B", "K")), ArgSpec(("K", 8))])
+        eng = disc_compile(f, [ArgSpec(("B", "K")), ArgSpec(("K", 8))])
         x = np.random.randn(5, 11).astype(np.float32)
         w = np.random.randn(11, 8).astype(np.float32)
         np.testing.assert_allclose(eng(x, w), f(x, w), rtol=1e-4)
 
     def test_mlp_block(self):
-        eng = DiscEngine(_mlp_block, [ArgSpec(("B", 16)), ArgSpec((16, 32)),
+        eng = disc_compile(_mlp_block, [ArgSpec(("B", 16)), ArgSpec((16, 32)),
                                       ArgSpec((32, 8))])
         w1 = np.random.randn(16, 32).astype(np.float32)
         w2 = np.random.randn(32, 8).astype(np.float32)
@@ -73,7 +71,7 @@ class TestEngineCorrectness:
                                        rtol=1e-4, atol=1e-6)
 
     def test_attention_scores_dynamic_seq(self):
-        eng = DiscEngine(_attention_scores, [ArgSpec(("S", 8)), ArgSpec(("S", 8))])
+        eng = disc_compile(_attention_scores, [ArgSpec(("S", 8)), ArgSpec(("S", 8))])
         for s in (3, 10, 31):
             q = np.random.randn(s, 8).astype(np.float32)
             k = np.random.randn(s, 8).astype(np.float32)
@@ -86,7 +84,7 @@ class TestEngineCorrectness:
             flat = x.reshape(-1, x.shape[-1])
             return jnp.exp(flat).max(axis=0)
 
-        eng = DiscEngine(f, [ArgSpec(("B", "S", 4))])
+        eng = disc_compile(f, [ArgSpec(("B", "S", 4))])
         x = np.random.randn(3, 5, 4).astype(np.float32)
         np.testing.assert_allclose(eng(x), f(x), rtol=1e-5)
 
@@ -94,7 +92,7 @@ class TestEngineCorrectness:
         def f(x, y):
             return jnp.concatenate([x, y], axis=0).sum(axis=0)
 
-        eng = DiscEngine(f, [ArgSpec(("M", 4)), ArgSpec(("N", 4))])
+        eng = disc_compile(f, [ArgSpec(("M", 4)), ArgSpec(("N", 4))])
         x = np.random.randn(5, 4).astype(np.float32)
         y = np.random.randn(9, 4).astype(np.float32)
         np.testing.assert_allclose(eng(x, y), f(x, y), rtol=1e-5)
@@ -103,7 +101,7 @@ class TestEngineCorrectness:
         def f(x, y):
             return jnp.concatenate([x, y], axis=0)
 
-        eng = DiscEngine(f, [ArgSpec(("M", 4)), ArgSpec(("N", 4))])
+        eng = disc_compile(f, [ArgSpec(("M", 4)), ArgSpec(("N", 4))])
         x = np.random.randn(3, 4).astype(np.float32)
         y = np.random.randn(6, 4).astype(np.float32)
         out = eng(x, y)
@@ -114,7 +112,7 @@ class TestEngineCorrectness:
         def f(x):
             return jnp.exp(x), x.sum(axis=0)
 
-        eng = DiscEngine(f, [ArgSpec(("N", 3))])
+        eng = disc_compile(f, [ArgSpec(("N", 3))])
         x = np.random.randn(7, 3).astype(np.float32)
         a, b = eng(x)
         np.testing.assert_allclose(a, jnp.exp(x), rtol=1e-6)
@@ -126,7 +124,7 @@ class TestCompileCount:
         def f(x):
             return jnp.tanh(x) * 2.0
 
-        eng = DiscEngine(f, [ArgSpec(("S", 8))],
+        eng = disc_compile(f, [ArgSpec(("S", 8))],
                          policy=BucketPolicy(kind="pow2", granule=16))
         shapes = list(range(1, 65))
         for s in shapes:
@@ -139,7 +137,7 @@ class TestCompileCount:
         def f(x):
             return jnp.tanh(x)
 
-        eng = DiscEngine(f, [ArgSpec(("S", 4))], policy=BucketPolicy(kind="exact"))
+        eng = disc_compile(f, [ArgSpec(("S", 4))], policy=BucketPolicy(kind="exact"))
         for s in (3, 4, 5, 6):
             eng(np.zeros((s, 4), np.float32))
         assert eng.n_compiles == 4  # one per emerging shape, like XLA
@@ -148,7 +146,7 @@ class TestCompileCount:
         def f(x):
             return jnp.exp(x) + 1.0
 
-        eng = DiscEngine(f, [ArgSpec(("S", 4))], escalation_threshold=3)
+        eng = disc_compile(f, [ArgSpec(("S", 4))], escalation_threshold=3)
         x = np.zeros((5, 4), np.float32)
         for _ in range(5):
             eng(x)
@@ -161,7 +159,7 @@ class TestGeneratedDispatch:
         def f(x):
             return x * 2.0
 
-        eng = DiscEngine(f, [ArgSpec(("B", 4))])
+        eng = disc_compile(f, [ArgSpec(("B", 4))])
         assert "def _dispatch" in eng.dispatch_source
         assert "key" in eng.dispatch_source
         # no per-op interpretation in the dispatch path
@@ -225,7 +223,7 @@ class TestNimbleVM:
 
         g, _ = bridge(f, [ArgSpec(("B", "S")), ArgSpec(("B", "S"))])
         vm = NimbleVM(g)
-        eng = DiscEngine(f, [ArgSpec(("B", "S")), ArgSpec(("B", "S"))])
+        eng = disc_compile(f, [ArgSpec(("B", "S")), ArgSpec(("B", "S"))])
         x = np.random.randn(4, 9).astype(np.float32)
         y = np.random.randn(4, 9).astype(np.float32)
         (vm_out,) = vm(x, y)
@@ -246,7 +244,7 @@ class TestPropertyBased:
             return jax.nn.softmax(y, axis=-1).sum(axis=0)
 
         if not hasattr(self, "_eng"):
-            type(self)._eng = DiscEngine(f, [ArgSpec(("B", "S"))])
+            type(self)._eng = disc_compile(f, [ArgSpec(("B", "S"))])
         rng = np.random.RandomState(seed)
         x = rng.randn(b, s).astype(np.float32)
         np.testing.assert_allclose(type(self)._eng(x), f(x),

@@ -10,9 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.bucketing import BucketPolicy
-from repro.core.runtime import DiscEngine
-from repro.frontends import ArgSpec
+from repro.api import ArgSpec, BucketPolicy, compile as disc_compile
 
 
 def transformer_ffn(x, w1, b1, w2, b2):
@@ -71,7 +69,7 @@ class TestTransformerLayerEndToEnd:
     def test_encoder_layer_dynamic_batch_and_seq(self):
         rng = np.random.RandomState(0)
         params = _layer_params(rng)
-        eng = DiscEngine(encoder_layer, _specs(), name="encoder_layer")
+        eng = disc_compile(encoder_layer, _specs(), name="encoder_layer")
         for b, s in [(1, 7), (2, 19), (4, 64), (3, 33)]:
             x = rng.randn(b, s, D).astype(np.float32)
             got = eng(x, *params)
@@ -83,7 +81,7 @@ class TestTransformerLayerEndToEnd:
         count stays at #buckets while correctness holds per request."""
         rng = np.random.RandomState(1)
         params = _layer_params(rng)
-        eng = DiscEngine(encoder_layer, _specs(), name="seq2seq",
+        eng = disc_compile(encoder_layer, _specs(), name="seq2seq",
                          policy=BucketPolicy(kind="pow2", granule=16))
         lengths = rng.randint(1, 128, size=24)
         for s in lengths:
@@ -97,7 +95,7 @@ class TestTransformerLayerEndToEnd:
         assert eng.n_compiles <= 4  # 16/32/64/128
 
     def test_fusion_collapses_memory_ops(self):
-        eng = DiscEngine(encoder_layer, _specs(), name="fusion_stats")
+        eng = disc_compile(encoder_layer, _specs(), name="fusion_stats")
         st = eng.plan.stats()
         # the paper's Table-3 effect: far fewer kernels than memory ops
         assert st["kernels_after_fusion"] < st["memory_ops"] / 2
