@@ -14,11 +14,11 @@ from repro.api import bridge
 from repro.core.buffers import CachedArena, plan_buffers  # internals bench
 from repro.core.codegen import dyn_symbols  # internals bench
 
-from .workloads import WORKLOADS
+from .workloads import active_workloads
 
 
-def main(csv: List[str]):
-    for name, maker in WORKLOADS.items():
+def main(csv: List[str], smoke: bool = False):
+    for name, maker in active_workloads(smoke).items():
         fn, specs, _ = maker()
         graph, _ = bridge(fn, specs, name=name)
         plan = plan_buffers(graph)
@@ -35,7 +35,8 @@ def main(csv: List[str]):
     # cached allocator (the TF/PyTorch-style allocator of §4.2.2)
     arena = CachedArena()
     rng = np.random.RandomState(0)
-    shapes = [(int(rng.choice([64, 128, 256])), 64) for _ in range(200)]
+    n_allocs = 40 if smoke else 200
+    shapes = [(int(rng.choice([64, 128, 256])), 64) for _ in range(n_allocs)]
     live = []
     for i, s in enumerate(shapes):
         live.append(arena.alloc(s, np.float32))

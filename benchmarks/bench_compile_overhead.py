@@ -16,15 +16,17 @@ import numpy as np
 
 from repro.api import BucketPolicy, compile as disc_compile
 
-from .workloads import WORKLOADS
+from .workloads import active_workloads
 
 N_REQS = 200
 
 
-def main(csv: List[str]):
-    fn, specs, gen = WORKLOADS["transformer"]()
+def main(csv: List[str], smoke: bool = False):
+    wl = active_workloads(smoke)
+    fn, specs, gen = wl.get("transformer", next(iter(wl.values())))()
     rng = np.random.RandomState(11)
-    lengths = rng.randint(8, 512, size=N_REQS)
+    n_reqs = 6 if smoke else N_REQS
+    lengths = rng.randint(8, 48 if smoke else 512, size=n_reqs)
 
     for label, policy in (
             ("static_per_shape", BucketPolicy(kind="exact")),
@@ -37,7 +39,7 @@ def main(csv: List[str]):
         total = time.perf_counter() - t0
         st = eng.cache.stats
         csv.append(
-            f"compile_{label},{total / N_REQS * 1e6:.0f},"
+            f"compile_{label},{total / n_reqs * 1e6:.0f},"
             f"compiles={st.compiles}"
             f" compile_s={st.compile_seconds:.1f}"
             f" total_s={total:.1f}"

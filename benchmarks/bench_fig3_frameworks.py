@@ -18,16 +18,17 @@ import numpy as np
 
 from repro.api import BucketPolicy, NimbleVM, compile as disc_compile
 
-from .workloads import WORKLOADS
+from .workloads import active_workloads
 
 N_WARM = 3
 N_REQS = 30
 
 
-def run_one(name: str, maker) -> Dict[str, float]:
+def run_one(name: str, maker, n_reqs: int = N_REQS,
+            max_len: int = 256) -> Dict[str, float]:
     fn, specs, gen = maker()
     rng = np.random.RandomState(7)
-    lengths = rng.randint(16, 256, size=N_REQS)
+    lengths = rng.randint(16, max_len, size=n_reqs)
 
     engine = disc_compile(fn, specs, name=name,
                           policy=BucketPolicy(kind="pow2", granule=32))
@@ -53,18 +54,20 @@ def run_one(name: str, maker) -> Dict[str, float]:
     t_disc = time.perf_counter() - t0
 
     return {
-        "eager_us": t_vm / N_REQS * 1e6,
-        "disc_us": t_disc / N_REQS * 1e6,
+        "eager_us": t_vm / n_reqs * 1e6,
+        "disc_us": t_disc / n_reqs * 1e6,
         "speedup": t_vm / t_disc,
         "eager_kernels": len(graph.ops),
         "disc_kernels": engine.plan.n_kernels,
     }
 
 
-def main(csv: List[str]):
+def main(csv: List[str], smoke: bool = False):
     speedups = []
-    for name, maker in WORKLOADS.items():
-        r = run_one(name, maker)
+    n_reqs = 2 if smoke else N_REQS
+    max_len = 48 if smoke else 256
+    for name, maker in active_workloads(smoke).items():
+        r = run_one(name, maker, n_reqs=n_reqs, max_len=max_len)
         speedups.append(r["speedup"])
         csv.append(f"fig3_{name},{r['disc_us']:.1f},"
                    f"speedup={r['speedup']:.2f}x"

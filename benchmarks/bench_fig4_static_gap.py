@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.api import BucketPolicy, compile as disc_compile
 
-from .workloads import WORKLOADS
+from .workloads import active_workloads
 
 N = 30
 
@@ -32,9 +32,11 @@ def _time(f, args, n=N):
     return (time.perf_counter() - t0) / n
 
 
-def main(csv: List[str]):
+def main(csv: List[str], smoke: bool = False):
+    n = 2 if smoke else N
+    s_aligned, s_worst = (32, 33) if smoke else (128, 129)
     aligned, worst, healed = [], [], []
-    for name, maker in WORKLOADS.items():
+    for name, maker in active_workloads(smoke).items():
         fn, specs, gen = maker()
         static_fn = jax.jit(fn)
         eng = disc_compile(fn, specs, name=name,
@@ -43,21 +45,21 @@ def main(csv: List[str]):
         eng_esc = disc_compile(fn, specs, name=name + "_esc",
                                policy=BucketPolicy(kind="pow2", granule=32),
                                escalation_threshold=3)
-        for label, s, sink in (("aligned", 128, aligned),
-                               ("worst", 129, worst)):
+        for label, s, sink in (("aligned", s_aligned, aligned),
+                               ("worst", s_worst, worst)):
             args = gen(np.random.RandomState(0), s)
-            t_static = _time(static_fn, args)
-            t_dyn = _time(eng, args)
+            t_static = _time(static_fn, args, n=n)
+            t_dyn = _time(eng, args, n=n)
             ratio = t_static / t_dyn
             sink.append(ratio)
             csv.append(f"fig4_{name}_{label},{t_dyn * 1e6:.1f},"
                        f"static_us={t_static * 1e6:.1f}"
                        f" dyn/static={ratio * 100:.1f}%")
-        args = gen(np.random.RandomState(0), 129)
-        t_static = _time(static_fn, args)
+        args = gen(np.random.RandomState(0), s_worst)
+        t_static = _time(static_fn, args, n=n)
         for _ in range(5):              # cross the escalation threshold so
             eng_esc(*args)              # the exact compile lands in warmup
-        t_heal = _time(eng_esc, args)   # steady state: §4.4 exact path
+        t_heal = _time(eng_esc, args, n=n)  # steady state: §4.4 exact path
         healed.append(t_static / t_heal)
         csv.append(f"fig4_{name}_worst_escalated,{t_heal * 1e6:.1f},"
                    f"dyn/static={t_static / t_heal * 100:.1f}%"

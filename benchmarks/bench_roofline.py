@@ -10,7 +10,7 @@ from typing import List
 REPORTS = pathlib.Path(__file__).resolve().parents[1] / "reports" / "dryrun"
 
 
-def main(csv: List[str]):
+def main(csv: List[str], smoke: bool = False):
     if not REPORTS.exists():
         csv.append("roofline,,(no dry-run reports; run launch/dryrun.py)")
         return

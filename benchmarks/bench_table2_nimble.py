@@ -20,7 +20,7 @@ import numpy as np
 from repro.api import (ArgSpec, BucketPolicy, NimbleVM,
                        compile as disc_compile)
 
-from .workloads import WORKLOADS
+from .workloads import active_workloads
 
 N = 100
 
@@ -37,12 +37,13 @@ def _host_overhead_graph():
     return fn, [ArgSpec(("B", 8)), ArgSpec(("B", 8))]
 
 
-def main(csv: List[str]):
+def main(csv: List[str], smoke: bool = False):
+    n = 5 if smoke else N
     fn, specs = _host_overhead_graph()
     eng = disc_compile(fn, specs, policy=BucketPolicy(kind="pow2", granule=8))
     vm = NimbleVM(eng.lower().graph, sync_per_op=True)
     rng = np.random.RandomState(0)
-    shapes = rng.randint(1, 64, size=N)
+    shapes = rng.randint(1, 16 if smoke else 64, size=n)
     for s in sorted({int(eng.policy.bucket("B", int(b))) for b in shapes}):
         eng(np.zeros((s, 8), np.float32), np.zeros((s, 8), np.float32))
 
@@ -52,35 +53,37 @@ def main(csv: List[str]):
     t0 = time.perf_counter()
     for a in args_list:
         vm(*a)
-    t_vm = (time.perf_counter() - t0) / N * 1e6
+    t_vm = (time.perf_counter() - t0) / n * 1e6
 
     t0 = time.perf_counter()
     for a in args_list:
         eng(*a)
-    t_disc = (time.perf_counter() - t0) / N * 1e6
+    t_disc = (time.perf_counter() - t0) / n * 1e6
 
     csv.append(f"table2_host_overhead_vm,{t_vm:.1f},interpreted per-op flow")
     csv.append(f"table2_host_overhead_disc,{t_disc:.1f},"
                f"generated dispatch = {t_disc / t_vm * 100:.1f}% of VM "
                f"(paper: 36.6%)")
 
-    # transformer workload at realistic sizes (paper Table 2 subject)
-    fnt, specst, gent = WORKLOADS["transformer"]()
+    # transformer workload at realistic sizes (paper Table 2 subject);
+    # smoke swaps in the cheap workload + a 2-request stream
+    wl = active_workloads(smoke)
+    fnt, specst, gent = wl.get("transformer", next(iter(wl.values())))()
     engt = disc_compile(fnt, specst,
                         policy=BucketPolicy(kind="pow2", granule=32))
     vmt = NimbleVM(engt.lower().graph, sync_per_op=True)
-    lens = rng.randint(16, 256, size=20)
+    lens = rng.randint(16, 48 if smoke else 256, size=2 if smoke else 20)
     for s in sorted({int(engt.policy.bucket("S", int(l))) for l in lens}):
         engt(*gent(np.random.RandomState(0), s))
         vmt(*gent(np.random.RandomState(0), s))
     t0 = time.perf_counter()
     for l in lens:
         vmt(*gent(rng, int(l)))
-    e2e_vm = (time.perf_counter() - t0) / 20 * 1e3
+    e2e_vm = (time.perf_counter() - t0) / len(lens) * 1e3
     t0 = time.perf_counter()
     for l in lens:
         engt(*gent(rng, int(l)))
-    e2e_disc = (time.perf_counter() - t0) / 20 * 1e3
+    e2e_disc = (time.perf_counter() - t0) / len(lens) * 1e3
     csv.append(f"table2_transformer_e2e_vm_ms,{e2e_vm * 1e3:.0f},")
     csv.append(f"table2_transformer_e2e_disc_ms,{e2e_disc * 1e3:.0f},"
                f"{e2e_vm / e2e_disc:.2f}x (paper E2E: 188.5->105.28ms)")

@@ -17,14 +17,14 @@ from repro.api import ArgSpec, bridge
 from repro.core.fusion import plan_fusion  # internals bench
 from repro.core.propagation import CostClass, op_info  # internals bench
 
-from .workloads import WORKLOADS
+from .workloads import active_workloads
 
 
-def main(csv: List[str]):
+def main(csv: List[str], smoke: bool = False):
     from repro.core.codegen import (_pallas_input_eligible,
                                     _pallas_loop_eligible)
     total_eager = total_disc = 0
-    for name, maker in WORKLOADS.items():
+    for name, maker in active_workloads(smoke).items():
         fn, specs, _ = maker()
         graph, _ = bridge(fn, specs, name=name)
         plan = plan_fusion(graph)

@@ -2,6 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Run:
     PYTHONPATH=src python -m benchmarks.run [--only fig3,table2,...]
+
+``--smoke`` runs every suite end-to-end at tiny sizes (one cheap
+workload, 1-2 iterations, CPU-friendly).  The numbers are meaningless;
+the point is that CI executes the real benchmark code paths on every
+push so they cannot bit-rot silently.
 """
 from __future__ import annotations
 
@@ -29,21 +34,27 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1-2 iters, no GPU assumptions (CI)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
 
     print("name,us_per_call,derived")
     csv: List[str] = []
+    failed = False
     for name in names:
         t0 = time.time()
         try:
-            SUITES[name](csv)
+            SUITES[name](csv, smoke=args.smoke)
         except Exception as e:  # pragma: no cover
             import traceback
             traceback.print_exc()
             csv.append(f"{name}_ERROR,,{e!r}")
+            failed = True
         csv.append(f"{name}_suite_seconds,,{time.time() - t0:.1f}")
     print("\n".join(csv))
+    if failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

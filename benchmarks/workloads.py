@@ -198,3 +198,16 @@ WORKLOADS: Dict[str, Callable] = {
     "ad_ranking": make_ad_ranking,
     "asr": make_asr,
 }
+
+
+def active_workloads(smoke: bool = False) -> Dict[str, Callable]:
+    """The full paper set, or the tiny CI-smoke subset.
+
+    Smoke mode (``benchmarks.run --smoke``) exists so the benchmark
+    scripts execute end-to-end on every CI run — it keeps one cheap
+    elementwise/reduce workload (tts) so numbers are meaningless but
+    bit-rot is impossible.
+    """
+    if smoke:
+        return {"tts": make_tts}
+    return dict(WORKLOADS)

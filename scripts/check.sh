@@ -1,15 +1,22 @@
 #!/usr/bin/env bash
-# Repo check: tier-1 tests + public-API import lint.
+# Repo check: public-API import lint + tier-1 tests (+ benchmark smoke).
 #
-#   scripts/check.sh            # everything
+#   scripts/check.sh            # lint + tests
 #   scripts/check.sh --lint     # lint only (fast)
+#   scripts/check.sh --smoke    # lint + tests + benchmark smoke run (CI gate)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+MODE="${1:-}"
+
 python scripts/import_lint.py
 
-if [[ "${1:-}" != "--lint" ]]; then
+if [[ "$MODE" != "--lint" ]]; then
     python -m pytest -q
+fi
+
+if [[ "$MODE" == "--smoke" ]]; then
+    python -m benchmarks.run --smoke
 fi

@@ -1,6 +1,7 @@
 #!/usr/bin/env python
-"""Import lint: examples/ and benchmarks/ must consume the compiler only
-through the public API (``disc`` / ``repro.api``).
+"""Import lint: examples/, benchmarks/, scripts/ and src/disc/ must
+consume the compiler only through the public API (``disc`` /
+``repro.api``).
 
 Workload definitions (``repro.models``, ``repro.configs``, ``repro.data``,
 ``repro.checkpoint``, ``repro.train``, ``repro.roofline``) are data/tooling,
@@ -18,7 +19,7 @@ import pathlib
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-SCANNED = ["examples", "benchmarks"]
+SCANNED = ["examples", "benchmarks", "scripts", "src/disc"]
 
 PUBLIC_PREFIXES = ("disc", "repro.api")
 ALLOWED_PREFIXES = PUBLIC_PREFIXES + (
@@ -64,7 +65,7 @@ def main() -> int:
                     continue
                 bad.append(f"{rel}:{lineno}: {mod} (use repro.api / disc)")
     if bad:
-        print("import lint: examples/benchmarks reach past the public API:")
+        print("import lint: scanned files reach past the public API:")
         print("\n".join("  " + b for b in bad))
         return 1
     print(f"import lint: OK ({sum(1 for d in SCANNED for _ in (ROOT / d).glob('*.py'))} files clean)")

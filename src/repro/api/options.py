@@ -81,8 +81,16 @@ class CompileOptions:
       ``"nimble_vm"``, or anything registered via
       :func:`repro.api.register_backend`
     * ``escalation_threshold`` — §4.4 static/dynamic mix: exact signatures
-      seen at least this many times get their own unmasked specialization
-      (``None`` disables)
+      seen at least this many times get their own unpadded, unmasked
+      specialization (``None`` disables).  Applies to *both* pipelines:
+      the ``"dhlo"`` path escalates to the backend's exact executor, the
+      ``"jit"`` path to a ``jax.jit`` of the raw function at the exact
+      (unpadded) shapes
+    * ``promote_on_change``    — spec-inference refinement: when specs
+      were inferred from the first call, dims that merely coincided there
+      are re-lowered as independent dims the moment a later call breaks
+      the coincidence, instead of erroring or over-padding (on by
+      default; only meaningful without declared specs)
     * ``max_cache_entries``    — LRU budget of the compile cache
     * ``donate``               — donate input buffers to the device
       executable (bucketed entries only)
@@ -100,6 +108,7 @@ class CompileOptions:
     policy: BucketPolicy = POW2
     backend: str = "xla"
     escalation_threshold: Optional[int] = None
+    promote_on_change: bool = True
     max_cache_entries: int = 256
     donate: bool = False
     pipeline: str = "dhlo"

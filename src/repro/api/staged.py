@@ -25,10 +25,15 @@ Two pipelines share this surface (selected by
   through untouched (spec ``None``), so whole models (params/KV-cache
   trees) get the O(#buckets) compile contract — this is what the serving
   engine builds prefill/decode on.
+
+Both pipelines share one host-dispatch emitter
+(:func:`repro.core.dispatcher.generate_dispatch`), parameterized by a
+``DispatchLens`` — so §4.4 static escalation (hot exact signatures get an
+unpadded specialization) and the tie guards behind promote-on-change work
+identically under either.
 """
 from __future__ import annotations
 
-import builtins
 import hashlib
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -39,7 +44,7 @@ import numpy as np
 from ..core.bucketing import BucketPolicy
 from ..core.cache import CompileCache
 from ..core.codegen import dyn_symbols
-from ..core.dispatcher import generate_dispatch
+from ..core.dispatcher import dhlo_lens, generate_dispatch, jit_lens
 from ..core.symshape import SymDim
 from ..frontends.jaxpr_frontend import ArgSpec, bridge
 from .backends import get_backend
@@ -162,15 +167,20 @@ class Lowered:
         h = hashlib.sha1((sig + "\x00" + _fn_token(self.fn)).encode())
         return f"jit:{self.options.name}:{h.hexdigest()[:16]}"
 
-    def compile(self, options: Optional[CompileOptions] = None) -> "Compiled":
+    def compile(self, options: Optional[CompileOptions] = None, *,
+                on_tie_break: Optional[Callable] = None) -> "Compiled":
         """Build the dispatcher (device code still compiles per bucket,
         lazily, through the backend registry).
 
         ``options`` may override backend / cache / escalation at this
         stage; the bucketing policy is part of the lowering contract
         (``Dim`` markers were folded into it) and stays fixed.
+        ``on_tie_break`` handles a call that breaks a multi-site symbol
+        tie (:class:`CompiledFunction` wires promote-on-change through
+        it); without a handler such a call raises a contract error.
         """
-        return Compiled(self, options or self.options)
+        return Compiled(self, options or self.options,
+                        on_tie_break=on_tie_break)
 
     def as_text(self) -> str:
         """Human-readable summary of the lowering (inspectable stage)."""
@@ -228,9 +238,19 @@ def _lower(fn: Callable, specs: Sequence[Optional[ArgSpec]],
 # -------------------------------------------------------------- compiled --
 
 class Compiled:
-    """The executable artifact: generated host dispatch + compile cache."""
+    """The executable artifact: generated host dispatch + compile cache.
 
-    def __init__(self, lowered: Lowered, options: CompileOptions) -> None:
+    Both pipelines flow through the one emitter in
+    :mod:`repro.core.dispatcher`; all that differs is the
+    :class:`~repro.core.dispatcher.DispatchLens` (how sizes are observed,
+    what gets padded, whether outputs are recovered) and the per-bucket /
+    exact compile callbacks (backend registry vs ``jax.jit``).  That means
+    the jit pipeline gets the §4.4 static-escalation branch and the tie
+    guards for free.
+    """
+
+    def __init__(self, lowered: Lowered, options: CompileOptions,
+                 on_tie_break: Optional[Callable] = None) -> None:
         self.lowered = lowered
         self.options = options
         self.backend = get_backend(options.backend)
@@ -241,15 +261,20 @@ class Compiled:
                          escalation_threshold=options.escalation_threshold)
         self._bucket_compiles = 0
         self._exact_compiles = 0
-        self._exact_fn = None
         if lowered.pipeline == "dhlo":
-            self._dispatch, self.dispatch_source = generate_dispatch(
-                lowered.graph, lowered.syms, lowered.policy, self.cache,
-                self._compile_bucket, self._compile_exact,
-                fingerprint=self._fingerprint,
-                escalation_threshold=options.escalation_threshold)
+            lens = dhlo_lens(lowered.graph, lowered.syms)
+            compile_bucket = self._compile_bucket
+            compile_exact = self._compile_exact
         else:
-            self._dispatch, self.dispatch_source = self._generate_jit_dispatch()
+            lens = jit_lens(lowered.specs, lowered.sym_names,
+                            name=options.name)
+            compile_bucket = self._compile_jit_bucket
+            compile_exact = self._compile_jit_exact
+        self._dispatch, self.dispatch_source = generate_dispatch(
+            lens, lowered.policy, self.cache, compile_bucket, compile_exact,
+            fingerprint=self._fingerprint,
+            escalation_threshold=options.escalation_threshold,
+            on_tie_break=on_tie_break)
 
     # ------------------------------------------------------------ public --
     def __call__(self, *arrays):
@@ -329,115 +354,96 @@ class Compiled:
                                          padded, self.options.donate)
 
     def _compile_exact(self):
-        if self._exact_fn is None:
-            self._exact_fn = self.backend.build_exact(self.lowered.graph,
-                                                      self.lowered.plan)
+        # a fresh executor per escalated signature (each cache entry is
+        # hit by exactly one exact shape): if the LRU evicts the entry —
+        # or promote-on-change purges it — its compiled executable is
+        # actually freed, instead of living on inside a shared wrapper's
+        # trace cache
         self._exact_compiles += 1
-        return self._exact_fn
+        return self.backend.build_exact(self.lowered.graph,
+                                        self.lowered.plan)
 
     # ----------------------------------------------------- jit pipeline --
-    def _generate_jit_dispatch(self) -> Tuple[Callable, str]:
-        """Generated host flow for the jit pipeline: extract sizes, bucket,
-        zero-pad declared dynamic args, call the per-bucket jax.jit entry.
-        No output recovery — jit-pipeline functions are lens-aware and
-        produce shape-stable outputs themselves."""
-        low = self.lowered
-        sym_index = {n: i for i, n in enumerate(low.sym_names)}
+    def _compile_jit_bucket(self, key: Tuple[int, ...]):
+        """One ``jax.jit`` entry per bucket signature: the dispatch pads
+        dynamic args to the bucket, so the entry traces exactly once."""
+        self._bucket_compiles += 1
+        return jax.jit(self.lowered.fn)
 
-        # first extraction site per symbol
-        extract: Dict[str, Tuple[int, int]] = {}
-        for ai, spec in enumerate(low.specs):
-            if spec is None:
-                continue
-            for ax, d in enumerate(spec.shape):
-                if isinstance(d, str) and d not in extract:
-                    extract[d] = (ai, ax)
-
-        lines = ["def _dispatch(args):"]
-        w = lines.append
-        for name in low.sym_names:
-            ai, ax = extract[name]
-            w(f"    s_{sym_index[name]} = args[{ai}].shape[{ax}]")
-        if low.sym_names:
-            w("    key = (" + ", ".join(
-                f"_b{i}(s_{i})" for i in range(len(low.sym_names))) + ",)")
-        else:
-            w("    key = ()")
-        w("    entry = _get(('bucket', _fp, key))")
-        w("    if entry is None:")
-        w("        entry = _compile(key)")
-
-        call_args = []
-        for ai, spec in enumerate(low.specs):
-            var = f"a{ai}"
-            if spec is None or not any(isinstance(d, str) for d in spec.shape):
-                call_args.append(f"args[{ai}]")
-                continue
-            shape_expr = []
-            dyn_axes = []
-            for ax, d in enumerate(spec.shape):
-                if isinstance(d, str):
-                    dyn_axes.append(ax)
-                    shape_expr.append(f"key[{sym_index[d]}]")
-                else:
-                    shape_expr.append(str(d))
-            pshape = "(" + ", ".join(shape_expr) + \
-                ("," if len(shape_expr) == 1 else "") + ")"
-            w(f"    {var} = args[{ai}]")
-            w(f"    if tuple({var}.shape) != {pshape}:")
-            w(f"        _buf = _np.zeros({pshape}, _dt{ai})")
-            idx = ", ".join(f":{var}.shape[{ax}]" if ax in dyn_axes else ":"
-                            for ax in range(len(spec.shape)))
-            w(f"        _buf[{idx}] = _np.asarray({var})")
-            w(f"        {var} = _buf")
-            call_args.append(var)
-
-        w("    return entry(" + ", ".join(call_args) + ")")
-        src = "\n".join(lines)
-
-        cache = self.cache
-        _entries_get = cache._entries.get
-        _move_to_end = cache._entries.move_to_end
-        _stats = cache.stats
-
-        def _get(key):
-            e = _entries_get(key)
-            if e is not None:
-                _stats.hits += 1
-                _move_to_end(key)  # keep hot buckets at the LRU tail
-            return e
-
-        def _make_entry():
-            self._bucket_compiles += 1
-            return jax.jit(low.fn)
-
-        def _compile(key):
-            return cache.get_or_compile(key, _make_entry,
-                                        fingerprint=self._fingerprint)
-
-        ns: Dict[str, Any] = {"_np": np, "_fp": self._fingerprint,
-                              "_get": _get, "_compile": _compile}
-        for i, name in enumerate(low.sym_names):
-            ns[f"_b{i}"] = (lambda v, _p=low.policy, _n=name:
-                            _p.bucket(_n, int(v)))
-        for ai, spec in enumerate(low.specs):
-            if spec is not None:
-                ns[f"_dt{ai}"] = np.dtype(spec.dtype)
-
-        code = builtins.compile(
-            src, f"<disc-jit-dispatch:{low.options.name}>", "exec")
-        exec(code, ns)
-        return ns["_dispatch"], src
+    def _compile_jit_exact(self):
+        """§4.4 for the jit pipeline: the escalated path calls the
+        function at *unpadded* shapes, so hot shapes get a mask/padding-
+        free compile.  One fresh ``jax.jit`` wrapper per escalated
+        signature: the cache's LRU budget then genuinely bounds escalated
+        executables (a single shared wrapper would retain every trace in
+        its own cache, immune to eviction)."""
+        self._exact_compiles += 1
+        return jax.jit(self.lowered.fn)
 
 
 # ------------------------------------------------------ public entrypoint --
+
+def _split_tied_specs(specs: Sequence[Optional[ArgSpec]],
+                      arrays: Sequence[Any]) -> Tuple[Optional[ArgSpec], ...]:
+    """Refine an inferred spec profile against one call's observed sizes.
+
+    Symbols whose sites no longer agree are split: each subgroup of sites
+    that share a size in *this* call gets its own symbol (the subgroup
+    containing the extraction site keeps the original name).  Sites that
+    still coincide stay tied — the profile refines monotonically, one
+    broken coincidence at a time, instead of over-constraining forever.
+    """
+    sizes: Dict[Tuple[int, int], int] = {}
+    groups: Dict[str, List[Tuple[int, int]]] = {}
+    for ai, spec in enumerate(specs):
+        if spec is None:
+            continue
+        shape = np.shape(arrays[ai])
+        for ax, d in enumerate(spec.shape):
+            if isinstance(d, str):
+                sizes[(ai, ax)] = int(shape[ax])
+                groups.setdefault(d, []).append((ai, ax))
+
+    used = set(groups)
+    renames: Dict[Tuple[int, int], str] = {}
+    for name, sites in groups.items():
+        by_size: Dict[int, List[Tuple[int, int]]] = {}
+        for site in sites:
+            by_size.setdefault(sizes[site], []).append(site)
+        if len(by_size) == 1:
+            continue  # this tie survived the call
+        keep = sizes[sites[0]]  # extraction-site subgroup keeps the name
+        for size, subsites in by_size.items():
+            if size == keep:
+                continue
+            new = f"{name}_{size}"
+            while new in used:
+                new += "_"
+            used.add(new)
+            for site in subsites:
+                renames[site] = new
+
+    out: List[Optional[ArgSpec]] = []
+    for ai, spec in enumerate(specs):
+        if spec is None:
+            out.append(None)
+            continue
+        shape = tuple(renames.get((ai, ax), d)
+                      for ax, d in enumerate(spec.shape))
+        out.append(ArgSpec(shape, spec.dtype, spec.name))
+    return tuple(out)
+
 
 class CompiledFunction:
     """What ``disc.compile`` returns: callable now, stageable explicitly.
 
     * with specs: lowering + dispatcher generation happen eagerly (device
       code still compiles per bucket on demand);
-    * without specs: the first call infers them (:func:`infer_specs`).
+    * without specs: the first call infers them (:func:`infer_specs`), and
+      the inferred profile *refines itself*: dims that merely coincided on
+      the first call are re-lowered as independent dims the moment a later
+      call breaks the coincidence (promote-on-change — disable with
+      ``CompileOptions(promote_on_change=False)``).
 
     Attribute access falls through to the underlying :class:`Compiled`
     artifact (``plan``, ``report()``, ``n_compiles``, ...), so migrating
@@ -454,6 +460,7 @@ class CompiledFunction:
         self.fn = fn
         self.options = options
         self._specs, self._dims = normalize_specs(specs)
+        self._inferred = False
         self._lowered: Optional[Lowered] = None
         self._compiled: Optional[Compiled] = None
         if self._specs is not None:
@@ -477,8 +484,58 @@ class CompiledFunction:
 
     def _ensure(self) -> Compiled:
         if self._compiled is None:
-            self._compiled = self.lower().compile()
+            handler = self._promote if (
+                self._inferred and self.options.promote_on_change) else None
+            self._compiled = self.lower().compile(on_tie_break=handler)
         return self._compiled
+
+    def _promote(self, arrays):
+        """Promote-on-change: a call broke a dim tie the first-call
+        inference assumed, so split the tied symbols by the observed sizes
+        and re-lower.  The compile cache carries over (stats continuity;
+        the refined artifact's keys carry strictly more symbols, so they
+        can never collide with the superseded artifact's — even under the
+        dhlo pipeline, whose shape-free graph fingerprint is *unchanged*
+        by the re-lower) and the superseded entries are purged."""
+        split = _split_tied_specs(self._specs, arrays)
+        if split == self._specs:
+            # a stale handle to a *superseded* artifact fired its guard,
+            # but the live profile already accommodates this call (its
+            # tied groups all agree on these sizes) — redispatch through
+            # the live artifact instead of re-lowering a third one
+            return self._ensure()._dispatch(arrays)
+        snapshot = (self._specs, self.options, self._lowered, self._compiled)
+        prev = self._compiled
+        self._specs = split
+        self.options = self.options.replace(cache=prev.cache)
+        self._lowered = None
+        self._compiled = None
+        try:
+            compiled = self._ensure()
+        except Exception as e:
+            # roll back: the pre-promotion artifact stays valid for calls
+            # that respect the original ties
+            self._specs, self.options, self._lowered, self._compiled = \
+                snapshot
+            raise ValueError(
+                f"promote-on-change failed for {self.options.name!r}: a "
+                f"call broke a dim tie inferred from the first call, but "
+                f"re-lowering with independent dims "
+                f"{[s.shape for s in split if s is not None]} did not "
+                f"succeed — the function itself may require the equality "
+                f"({e})") from e
+        prev.cache.stats.promotions += 1
+        # the superseded artifact's entries are unreachable — free the
+        # executables they pin.  This must happen before the refined
+        # artifact compiles its first bucket: under the dhlo pipeline the
+        # two artifacts share a (shape-free) fingerprint, and the refined
+        # artifact has compiled nothing yet, so everything under the old
+        # fingerprint is the old artifact's.
+        prev.cache.drop_fingerprint(prev._fingerprint)
+        # hand the triggering call to the refined artifact's dispatch (the
+        # raw dispatch-level result: the caller is the *old* artifact's
+        # generated flow, whose __call__ wrapper still post-processes it)
+        return compiled._dispatch(arrays)
 
     # ------------------------------------------------------------ calling --
     def __call__(self, *arrays):
@@ -489,6 +546,7 @@ class CompiledFunction:
                     self._specs = (None,) * len(arrays)
                 else:
                     self._specs = tuple(infer_specs(arrays))
+                    self._inferred = True
             self._ensure()
         return self._compiled(*arrays)
 

@@ -72,6 +72,29 @@ class BucketPolicy:
             b = min(b, c)
         return b
 
+    def emit_bucket_expr(self, symbol_name: str, var: str) -> Optional[str]:
+        """A Python expression computing ``self.bucket(symbol_name, v)``
+        for the source variable ``var`` — *sans* cap handling, which the
+        dispatch emitter layers on top.
+
+        This is how the bucket mapping gets *compiled into* the generated
+        host flow (DISC §4.2) instead of living behind a per-call closure.
+        Returns ``None`` for rules that cannot be inlined (the emitter
+        then falls back to a bound ``bucket`` closure).  The pow2 form is
+        pure integer math — ``ceil(v/g)`` rounded up to a power of two —
+        and agrees with :func:`pow2_bucket` everywhere (see the
+        equivalence test in ``tests/test_dispatch_unification.py``).
+        """
+        kind, g = self._rule(symbol_name)
+        if kind == "exact":
+            return var
+        if kind == "multiple":
+            return f"(-(-{var} // {g}) * {g})"
+        if kind == "pow2":
+            return (f"({g} if {var} <= {g} else "
+                    f"{g} * (1 << (-(-{var} // {g}) - 1).bit_length()))")
+        return None
+
     def max_buckets(self, symbol_name: str, max_value: int) -> int:
         """Upper bound on #buckets a symbol can produce up to max_value."""
         kind, g = self._rule(symbol_name)

@@ -27,6 +27,9 @@ class CacheStats:
     compile_seconds: float = 0.0
     escalations: int = 0
     evictions: int = 0
+    # promote-on-change re-lowerings: a call broke a dim tie inferred from
+    # the first call, so the artifact was re-lowered with independent dims
+    promotions: int = 0
 
     @property
     def compiles(self) -> int:
@@ -40,6 +43,7 @@ class CacheStats:
             "compile_seconds": round(self.compile_seconds, 4),
             "escalations": self.escalations,
             "evictions": self.evictions,
+            "promotions": self.promotions,
         }
 
 
@@ -107,6 +111,23 @@ class CompileCache:
         self._entries[key] = entry
         self._evict()
         return entry
+
+    def drop_fingerprint(self, fingerprint: str) -> int:
+        """Drop every entry (and escalation counter) keyed under
+        ``fingerprint``.
+
+        Used by promote-on-change: after a re-lower the old artifact's
+        entries are unreachable (its fingerprint is never asked for
+        again) but would otherwise pin compiled executables in the LRU
+        until enough newer entries forced them out.  Returns the number
+        of entries dropped.
+        """
+        dead = [k for k in self._entries if k[1] == fingerprint]
+        for k in dead:
+            del self._entries[k]
+        self._exact_hits = {k: v for k, v in self._exact_hits.items()
+                            if k[0] != fingerprint}
+        return len(dead)
 
     def _evict(self) -> None:
         while len(self._entries) > self.max_entries:

@@ -5,20 +5,43 @@
      (buffer management, kernel launch, et al.)."
 
 :func:`generate_dispatch` *generates Python source* for the host-side
-dispatch of one DHLO graph — shape extraction, bucket mapping, cache
-lookup, padding plan, device invocation, output recovery — and ``exec``s
-it once.  The per-call path is straight-line host code specialized to the
-graph: no graph walking, no per-op interpretation (contrast
-``vm.NimbleVM``).
+dispatch of one compiled artifact — shape extraction, bucket mapping,
+cache lookup, padding plan, device invocation, output recovery — and
+``exec``s it once.  The per-call path is straight-line host code
+specialized to the artifact: no graph walking, no per-op interpretation
+(contrast ``vm.NimbleVM``).
+
+One emitter serves both public pipelines.  Everything pipeline-specific is
+factored into a :class:`DispatchLens` — *how* dynamic sizes are observed,
+*which* arguments get bucket-padded, and *whether* outputs need recovery:
+
+* :func:`dhlo_lens` views a DHLO graph (``pipeline="dhlo"``): symbols are
+  canonicalized through the constraint store, the lens vector of true
+  lengths is threaded to the masked executor, and outputs are sliced back
+  to their true (possibly derived, §4.2.1) shapes.
+* :func:`jit_lens` views a spec signature over a jax-traceable function
+  (``pipeline="jit"``): declared dynamic args are bucket-padded, pytree
+  args pass through untouched, and the function's own outputs are
+  returned as-is (jit-pipeline functions are lens-aware).
+
+Both lenses flow through the same generated skeleton, including the §4.4
+static-escalation branch (hot exact signatures route to an unpadded
+specialization) and the tie guards that back promote-on-change: when a
+symbol is observable at several argument sites, the emitter checks the
+sites still agree and either re-lowers through ``on_tie_break`` (inferred
+specs) or raises a contract error (declared specs).
 
 This module is pure mechanism: *what* gets compiled per bucket (XLA,
-Pallas-fused, or an interpreted baseline) is supplied by the caller via
-``compile_bucket`` / ``compile_exact`` callbacks — the public API layer
-(``repro.api``) wires those to the backend registry.
+Pallas-fused, an interpreted baseline, or a per-bucket ``jax.jit``) is
+supplied by the caller via ``compile_bucket`` / ``compile_exact``
+callbacks — the public API layer (``repro.api``) wires those to the
+backend registry or to ``jax.jit``.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 import numpy as np
 
@@ -28,132 +51,340 @@ from .cache import CompileCache
 from .dhlo import DGraph
 from .symshape import SymDim
 
-__all__ = ["generate_dispatch"]
+__all__ = ["DynAxis", "ArgPlan", "DispatchLens", "dhlo_lens", "jit_lens",
+           "generate_dispatch"]
 
 
-def generate_dispatch(
-    graph: DGraph,
-    syms: Sequence[SymDim],
-    policy: BucketPolicy,
-    cache: CompileCache,
-    compile_bucket: Callable[[Tuple[int, ...]], Any],
-    compile_exact: Callable[[], Callable],
-    *,
-    fingerprint: Optional[str] = None,
-    escalation_threshold: Optional[int] = None,
-) -> Tuple[Callable, str]:
-    """Generate the per-call host flow for ``graph``.
+# ------------------------------------------------------------------ lens --
 
-    Returns ``(dispatch, source)`` where ``dispatch(arrays) -> [outputs]``
-    is the compiled host function and ``source`` the generated Python text
-    (kept as an inspectable artifact on the public ``Compiled`` object).
+@dataclass(frozen=True)
+class DynAxis:
+    """A dynamic axis inside an :class:`ArgPlan`, bound to symbol ``sym``
+    (an index into :attr:`DispatchLens.sym_names`)."""
 
-    ``fingerprint`` defaults to ``cache.fingerprint``; pass the artifact's
-    own fingerprint when several artifacts share one cache.
+    sym: int
+
+
+@dataclass(frozen=True)
+class ArgPlan:
+    """Pad plan for one positional argument.
+
+    ``shape`` entries are ints (static) or :class:`DynAxis` (zero-pad to
+    the symbol's bucket).  ``shape=None`` — or a shape with no dynamic
+    axis — marks a pass-through argument (e.g. pytrees in the jit
+    pipeline): it reaches the entry untouched, with no host copy.
     """
-    g = graph
-    fingerprint = fingerprint or cache.fingerprint
-    if escalation_threshold is None:
-        escalation_threshold = cache.escalation_threshold
-    store = g.store
+
+    shape: Optional[Tuple[Union[int, DynAxis], ...]] = None
+    dtype: Any = None
+
+    @property
+    def dynamic(self) -> bool:
+        return self.shape is not None and any(
+            isinstance(d, DynAxis) for d in self.shape)
+
+
+@dataclass(frozen=True)
+class DispatchLens:
+    """Everything pipeline-specific the dispatch emitter consumes.
+
+    * ``sym_names`` — dynamic symbols, in bucket-key order.
+    * ``sym_sites`` — per symbol, every ``(arg, axis)`` where its value is
+      observable.  The first site is the extraction site; the rest become
+      tie guards (two sites of one symbol must agree at call time).
+    * ``args``      — per positional argument, the :class:`ArgPlan`.
+    * ``outputs``   — per output, per-axis recovery: ``None`` (keep the
+      axis), an int symbol index (slice back to the true length), or a
+      callable ``exact -> int`` evaluating a derived dim (§4.2.1 host
+      shape calculation).  ``outputs=None`` disables recovery entirely:
+      the entry's result is returned as-is.
+    * ``pass_lens`` — prepend the i32 vector of true lengths to the entry
+      call (DHLO masked executors take it; jit-pipeline functions carry
+      lengths as ordinary arguments).
+    """
+
+    name: str
+    sym_names: Tuple[str, ...]
+    sym_sites: Tuple[Tuple[Tuple[int, int], ...], ...]
+    args: Tuple[ArgPlan, ...]
+    outputs: Optional[Tuple[Tuple[Any, ...], ...]] = None
+    pass_lens: bool = True
+
+
+def dhlo_lens(graph: DGraph, syms: Sequence[SymDim]) -> DispatchLens:
+    """View a DHLO graph through the emitter's lens.
+
+    Symbols are resolved through the constraint store's canonical map, so
+    two spec dims the propagation pass proved equal share one extraction
+    site + tie guard.
+    """
+    store = graph.store
     syms = list(syms)
     sym_index = {s.uid: i for i, s in enumerate(syms)}
 
-    # one extraction site per symbol: first (param, axis) where it occurs
-    extract: Dict[int, Tuple[int, int]] = {}
-    for pi, p in enumerate(g.params):
+    sites: List[List[Tuple[int, int]]] = [[] for _ in syms]
+    args: List[ArgPlan] = []
+    for pi, p in enumerate(graph.params):
+        shape: List[Union[int, DynAxis]] = []
         for ax, d in enumerate(p.shape):
-            if isinstance(d, SymDim):
-                c = store.canon_dim(d)
-                if isinstance(c, SymDim) and c.uid not in extract:
-                    extract[c.uid] = (pi, ax)
+            c = store.canon_dim(d) if isinstance(d, SymDim) else d
+            if isinstance(c, SymDim):
+                sites[sym_index[c.uid]].append((pi, ax))
+                shape.append(DynAxis(sym_index[c.uid]))
+            else:
+                shape.append(int(c))
+        args.append(ArgPlan(tuple(shape), np.dtype(p.dtype)))
+
+    for i, s in enumerate(syms):
+        if not sites[i]:
+            raise ValueError(
+                f"dynamic symbol {s.name!r} is not observable from any "
+                f"input argument; cannot generate dispatch for "
+                f"{graph.name!r}")
+
+    outputs: List[Tuple[Any, ...]] = []
+    for o in graph.outputs:
+        axes: List[Any] = []
+        for d in o.shape:
+            c = store.canon_dim(d) if isinstance(d, SymDim) else d
+            if isinstance(c, SymDim):
+                if c.uid in sym_index:
+                    axes.append(sym_index[c.uid])
+                else:
+                    axes.append(_derived_dim_evaluator(graph, syms, d))
+            else:
+                axes.append(None)
+        outputs.append(tuple(axes))
+
+    return DispatchLens(
+        name=graph.name, sym_names=tuple(s.name for s in syms),
+        sym_sites=tuple(tuple(s) for s in sites), args=tuple(args),
+        outputs=tuple(outputs), pass_lens=True)
+
+
+def jit_lens(specs: Sequence[Any], sym_names: Sequence[str],
+             name: str = "disc") -> DispatchLens:
+    """View a spec signature (``pipeline="jit"``) through the emitter's
+    lens: string dims are the symbols, ``None`` specs pass through, and
+    outputs need no recovery (the function is lens-aware)."""
+    sym_names = list(sym_names)
+    sym_index = {n: i for i, n in enumerate(sym_names)}
+    sites: List[List[Tuple[int, int]]] = [[] for _ in sym_names]
+    args: List[ArgPlan] = []
+    for ai, spec in enumerate(specs):
+        if spec is None:
+            args.append(ArgPlan())
+            continue
+        shape: List[Union[int, DynAxis]] = []
+        for ax, d in enumerate(spec.shape):
+            if isinstance(d, str):
+                sites[sym_index[d]].append((ai, ax))
+                shape.append(DynAxis(sym_index[d]))
+            else:
+                shape.append(int(d))
+        if any(isinstance(d, DynAxis) for d in shape):
+            args.append(ArgPlan(tuple(shape), np.dtype(spec.dtype)))
+        else:
+            args.append(ArgPlan())  # fully static: no host copy needed
+    for i, n in enumerate(sym_names):
+        if not sites[i]:
+            raise ValueError(
+                f"dynamic symbol {n!r} is not observable from any "
+                f"argument spec; cannot generate dispatch for {name!r}")
+    return DispatchLens(
+        name=name, sym_names=tuple(sym_names),
+        sym_sites=tuple(tuple(s) for s in sites), args=tuple(args),
+        outputs=None, pass_lens=False)
+
+
+def _derived_dim_evaluator(graph: DGraph, syms: Sequence[SymDim], dim):
+    """Host-side shape calculation for a derived output dim (§4.2.1)."""
+    syms = list(syms)
+
+    def _eval(exact: Tuple[int, ...]) -> int:
+        binds = {s.uid: v for s, v in zip(syms, exact)}
+        return eval_dim(graph, dim, binds)
+
+    return _eval
+
+
+def _tie_error(name: str, site_a: Tuple[int, int], va: int,
+               site_b: Tuple[int, int], vb: int):
+    raise ValueError(
+        f"dim {name!r} is tied across arguments (declared with one symbol, "
+        f"or inferred equal from the first call), but this call breaks the "
+        f"tie: arrays[{site_a[0]}].shape[{site_a[1]}] == {va} vs "
+        f"arrays[{site_b[0]}].shape[{site_b[1]}] == {vb}")
+
+
+def _cap_error(name: str, value: int, cap: int):
+    raise ValueError(f"dim {name}={value} exceeds its declared max={cap}")
+
+
+# --------------------------------------------------------------- emitter --
+
+def generate_dispatch(
+    lens: DispatchLens,
+    policy: BucketPolicy,
+    cache: CompileCache,
+    compile_bucket: Callable[[Tuple[int, ...]], Any],
+    compile_exact: Optional[Callable[[], Callable]] = None,
+    *,
+    fingerprint: Optional[str] = None,
+    escalation_threshold: Optional[int] = None,
+    on_tie_break: Optional[Callable[[Sequence[Any]], Any]] = None,
+) -> Tuple[Callable, str]:
+    """Generate the per-call host flow for one artifact, seen through
+    ``lens``.
+
+    Returns ``(dispatch, source)`` where ``dispatch(arrays)`` is the
+    compiled host function and ``source`` the generated Python text (kept
+    as an inspectable artifact on the public ``Compiled`` object).
+    ``dispatch`` returns a list of recovered outputs when the lens
+    declares output plans, or the entry's raw result when it doesn't.
+
+    ``fingerprint`` defaults to ``cache.fingerprint``; pass the artifact's
+    own fingerprint when several artifacts share one cache.  The §4.4
+    escalation branch is emitted when an ``escalation_threshold`` (or the
+    cache's default) and ``compile_exact`` are given.  ``on_tie_break``
+    handles a call that breaks a multi-site symbol tie (promote-on-change
+    re-lowering); without it such a call raises a contract error.
+    """
+    fingerprint = fingerprint or cache.fingerprint
+    if escalation_threshold is None:
+        escalation_threshold = cache.escalation_threshold
+    if compile_exact is None:
+        escalation_threshold = None
+    n_syms = len(lens.sym_names)
 
     lines: List[str] = ["def _dispatch(arrays):"]
     w = lines.append
-    names = []
-    for s in syms:
-        pi, ax = extract[s.uid]
-        nm = f"s_{s.uid}"
-        names.append(nm)
-        w(f"    {nm} = arrays[{pi}].shape[{ax}]")
-    if syms:
-        w("    key = (" + ", ".join(f"_b{i}({nm})" for i, nm in enumerate(names)) + ",)")
-        w("    exact = (" + ", ".join(names) + ",)")
+    ns: Dict[str, Any] = {
+        "_np": np,
+        "_fp": fingerprint,
+        "_esc": escalation_threshold,
+        "_cache": cache,
+        "_zero_lens": np.zeros((1,), np.int32),
+    }
+
+    # --- dynamic-size extraction: one site per symbol, straight-line ---
+    for i in range(n_syms):
+        pi, ax = lens.sym_sites[i][0]
+        w(f"    s_{i} = arrays[{pi}].shape[{ax}]")
+
+    # --- tie guards: remaining sites of a symbol must agree -----------
+    any_guard = False
+    for i, name in enumerate(lens.sym_names):
+        first = lens.sym_sites[i][0]
+        for (pi, ax) in lens.sym_sites[i][1:]:
+            any_guard = True
+            w(f"    if arrays[{pi}].shape[{ax}] != s_{i}:")
+            if on_tie_break is not None:
+                w("        return _tie_break(arrays)")
+            else:
+                w(f"        _tie_error({name!r}, {first!r}, s_{i}, "
+                  f"{(pi, ax)!r}, arrays[{pi}].shape[{ax}])")
+    if any_guard:
+        if on_tie_break is not None:
+            ns["_tie_break"] = on_tie_break
+        else:
+            ns["_tie_error"] = _tie_error
+
+    # --- bucket key: inlined bucket math where the policy supports it --
+    key_parts: List[str] = []
+    for i, name in enumerate(lens.sym_names):
+        expr = policy.emit_bucket_expr(name, f"s_{i}")
+        cap = policy.cap(name)
+        if expr is None:
+            # opaque rule: fall back to a bound closure (cap included)
+            ns[f"_b{i}"] = (lambda v, _p=policy, _n=name: _p.bucket(_n, int(v)))
+            key_parts.append(f"_b{i}(s_{i})")
+            continue
+        if cap is not None:
+            w(f"    if s_{i} > {cap}:")
+            w(f"        _cap_error({name!r}, s_{i}, {cap})")
+            ns["_cap_error"] = _cap_error
+            expr = f"min({expr}, {cap})"
+        key_parts.append(expr)
+    if n_syms:
+        w("    key = (" + ", ".join(key_parts) + ",)")
+        w("    exact = (" + ", ".join(f"s_{i}" for i in range(n_syms)) + ",)")
     else:
         w("    key = ()")
         w("    exact = ()")
 
-    # §4.4 static escalation branch
+    # --- §4.4 static escalation: hot exact signatures go unpadded ------
     if escalation_threshold is not None:
         w("    if _cache.should_escalate(exact, _fp, _esc):")
         w("        fn = _cache.get_or_compile_exact(exact, _compile_exact, _fp)")
-        w("        return list(fn(*arrays))")
+        if lens.outputs is None:
+            w("        return fn(*arrays)")
+        else:
+            w("        return list(fn(*arrays))")
+        ns["_compile_exact"] = compile_exact
 
     w("    entry = _get(('bucket', _fp, key))")
     w("    if entry is None:")
     w("        entry = _compile(key)")
-    if syms:
-        w(f"    lens = _np.array([{', '.join(names)}], _np.int32)")
-    else:
-        w("    lens = _zero_lens")
-
-    # padding plan: unrolled per param (host-side zero-fill)
-    call_args = []
-    for pi, p in enumerate(g.params):
-        dyn_axes = []
-        shape_expr = []
-        for ax, d in enumerate(p.shape):
-            if isinstance(d, SymDim):
-                c = store.canon_dim(d)
-                if isinstance(c, SymDim):
-                    dyn_axes.append((ax, sym_index[c.uid]))
-                    shape_expr.append(f"key[{sym_index[c.uid]}]")
-                else:
-                    shape_expr.append(str(c))
-            else:
-                shape_expr.append(str(d))
-        var = f"x{pi}"
-        if not dyn_axes:
-            w(f"    {var} = arrays[{pi}]")
+    if lens.pass_lens:
+        if n_syms:
+            w("    lens = _np.array(["
+              + ", ".join(f"s_{i}" for i in range(n_syms))
+              + "], _np.int32)")
         else:
-            pshape = "(" + ", ".join(shape_expr) + ("," if len(shape_expr) == 1 else "") + ")"
-            w(f"    {var} = arrays[{pi}]")
-            w(f"    if tuple({var}.shape) != {pshape}:")
-            w(f"        _buf = _np.zeros({pshape}, _dt{pi})")
-            idx = ", ".join(
-                (f":{var}.shape[{ax}]" if any(ax == a for a, _ in dyn_axes) else ":")
-                for ax in range(p.rank)
-            )
-            w(f"        _buf[{idx}] = _np.asarray({var})")
-            w(f"        {var} = _buf")
+            w("    lens = _zero_lens")
+
+    # --- padding plan: unrolled per argument (host-side zero-fill) -----
+    call_args: List[str] = []
+    for ai, ap in enumerate(lens.args):
+        if not ap.dynamic:
+            call_args.append(f"arrays[{ai}]")
+            continue
+        shape_expr = []
+        for d in ap.shape:
+            shape_expr.append(f"key[{d.sym}]" if isinstance(d, DynAxis)
+                              else str(d))
+        pshape = ("(" + ", ".join(shape_expr)
+                  + ("," if len(shape_expr) == 1 else "") + ")")
+        var = f"x{ai}"
+        w(f"    {var} = arrays[{ai}]")
+        w(f"    if tuple({var}.shape) != {pshape}:")
+        w(f"        _buf = _np.zeros({pshape}, _dt{ai})")
+        idx = ", ".join(
+            (f":{var}.shape[{ax}]" if isinstance(d, DynAxis) else ":")
+            for ax, d in enumerate(ap.shape))
+        w(f"        _buf[{idx}] = _np.asarray({var})")
+        w(f"        {var} = _buf")
+        ns[f"_dt{ai}"] = np.dtype(ap.dtype)
         call_args.append(var)
 
-    w(f"    outs = entry(lens, {', '.join(call_args)})" if call_args
-      else "    outs = entry(lens)")
+    entry_args = (["lens"] if lens.pass_lens else []) + call_args
+    call = f"entry({', '.join(entry_args)})"
 
-    # output recovery: slice back to true shapes
-    out_exprs = []
-    for oi, o in enumerate(g.outputs):
-        idx_parts = []
-        needs_slice = False
-        for ax, d in enumerate(o.shape):
-            if isinstance(d, int):
-                idx_parts.append(":")
-                continue
-            c = store.canon_dim(d)
-            if isinstance(c, int):
-                idx_parts.append(":")
-            elif c.uid in sym_index:
-                idx_parts.append(f":s_{c.uid}")
-                needs_slice = True
+    # --- output recovery: slice back to true shapes (dhlo only) --------
+    if lens.outputs is None:
+        w(f"    return {call}")
+    else:
+        w(f"    outs = {call}")
+        out_exprs = []
+        for oi, axes in enumerate(lens.outputs):
+            idx_parts = []
+            needs_slice = False
+            for ax, a in enumerate(axes):
+                if a is None:
+                    idx_parts.append(":")
+                elif isinstance(a, int):
+                    idx_parts.append(f":s_{a}")
+                    needs_slice = True
+                else:  # derived-dim evaluator (host shape calc, §4.2.1)
+                    idx_parts.append(f":_od{oi}_{ax}(exact)")
+                    ns[f"_od{oi}_{ax}"] = a
+                    needs_slice = True
+            if needs_slice:
+                out_exprs.append(f"outs[{oi}][{', '.join(idx_parts)}]")
             else:
-                idx_parts.append(f":_od{oi}_{ax}(exact)")
-                needs_slice = True
-        if needs_slice:
-            out_exprs.append(f"outs[{oi}][{', '.join(idx_parts)}]")
-        else:
-            out_exprs.append(f"outs[{oi}]")
-    w("    return [" + ", ".join(out_exprs) + "]")
+                out_exprs.append(f"outs[{oi}]")
+        w("    return [" + ", ".join(out_exprs) + "]")
 
     src = "\n".join(lines)
 
@@ -169,38 +400,12 @@ def generate_dispatch(
             _move_to_end(key)  # keep hot buckets at the LRU tail
         return e
 
-    ns: Dict[str, Any] = {
-        "_np": np,
-        "_fp": fingerprint,
-        "_esc": escalation_threshold,
-        "_get": _get,
-        "_cache": cache,
-        "_compile_exact": compile_exact,
-        "_zero_lens": np.zeros((1,), np.int32),
-    }
-    for i, s in enumerate(syms):
-        ns[f"_b{i}"] = (lambda v, _p=policy, _n=s.name: _p.bucket(_n, int(v)))
-    for pi, p in enumerate(g.params):
-        ns[f"_dt{pi}"] = np.dtype(p.dtype)
-
     def _compile(key):
         return cache.get_or_compile(key, lambda: compile_bucket(key),
                                     fingerprint=fingerprint)
 
+    ns["_get"] = _get
     ns["_compile"] = _compile
 
-    # derived-output-dim evaluators (host shape calculation, §4.2.1)
-    for oi, o in enumerate(g.outputs):
-        for ax, d in enumerate(o.shape):
-            if isinstance(d, SymDim):
-                c = store.canon_dim(d)
-                if isinstance(c, SymDim) and c.uid not in sym_index:
-                    def _mk(dim):
-                        def _f(exact):
-                            binds = {s.uid: v for s, v in zip(syms, exact)}
-                            return eval_dim(g, dim, binds)
-                        return _f
-                    ns[f"_od{oi}_{ax}"] = _mk(d)
-
-    exec(compile(src, f"<disc-dispatch:{g.name}>", "exec"), ns)
+    exec(compile(src, f"<disc-dispatch:{lens.name}>", "exec"), ns)
     return ns["_dispatch"], src

@@ -2,7 +2,8 @@
 
 The engine that used to live here was split apart:
 
-* host-dispatch code generation  → :mod:`repro.core.dispatcher`
+* host-dispatch code generation  → :mod:`repro.core.dispatcher` (one
+  lens-parameterized emitter serving both the DHLO and the jit pipeline)
 * backend selection              → :mod:`repro.api.backends` (registry)
 * staging / caching / options    → :mod:`repro.api.staged` /
   :class:`repro.api.CompileOptions`

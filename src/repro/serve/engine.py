@@ -11,7 +11,10 @@ solved here exactly as DISC prescribes, built entirely on the public
 * prefill is compiled once per length-bucket: the artifact's generated
   dispatch bucket-pads the prompt, true lengths ride along as an i32
   operand (one compile serves every prompt ≤ bucket, clamped by
-  ``Dim("S", max=max_seq)``);
+  ``Dim("S", max=max_seq)``); with
+  ``ServeConfig(escalation_threshold=...)``, prompt lengths that stay hot
+  escalate (§4.4) to unpadded prefill specializations — no replay steps
+  wasted past the true prompt;
 * decode is compiled once against the fixed-capacity KV cache; a step
   serves any mix of sequence lengths via the lens vector;
 * slot management is host-side compiled Python (no per-op
@@ -46,6 +49,10 @@ class ServeConfig:
     max_seq: int = 512
     prefill_policy: BucketPolicy = POW2
     eos_id: int = 1
+    # §4.4 static/dynamic mix on the serving path: prompt lengths seen at
+    # least this many times get an unpadded prefill specialization (no
+    # wasted replay steps past the prompt).  None disables.
+    escalation_threshold: Optional[int] = None
 
 
 @dataclass
@@ -79,13 +86,16 @@ class ServeEngine:
                    None],  # lens (rides along, lens-aware fn)
             options=CompileOptions(pipeline="jit", name="prefill",
                                    policy=scfg.prefill_policy,
+                                   escalation_threshold=
+                                   scfg.escalation_threshold,
                                    cache=self.compile_cache))
         self._decode_fn = disc_compile(
             self._decode_step,
             options=CompileOptions(pipeline="jit", name="decode",
                                    cache=self.compile_cache))
         self.stats = {"prefill_compiles": 0, "decode_steps": 0,
-                      "prefill_calls": 0, "tokens_generated": 0}
+                      "prefill_calls": 0, "tokens_generated": 0,
+                      "prefill_escalations": 0}
 
     # ------------------------------------------------------------ device --
     def _prefill_step(self, params, cache, tokens, lens, slot_idx):
@@ -123,6 +133,7 @@ class ServeEngine:
                                                 toks, lens)
         self.stats["prefill_compiles"] = \
             self._prefill_fn.compile_counts()["total"]
+        self.stats["prefill_escalations"] = self.compile_cache.stats.escalations
         self.cache = jax.tree.map(
             lambda full, row: jax.lax.dynamic_update_slice_in_dim(
                 full, row.astype(full.dtype), slot, axis=1)

@@ -1,0 +1,337 @@
+"""Tests for the unified dispatch emitter (one lens-parameterized
+generator for both pipelines), §4.4 escalation on the jit pipeline, and
+promote-on-change spec refinement.
+
+The contract under test: ``core/dispatcher.generate_dispatch`` is the
+*only* host-flow generator — ``pipeline="dhlo"`` and ``pipeline="jit"``
+differ solely in the :class:`~repro.core.dispatcher.DispatchLens` they
+hand it, so bucket-key computation, pad plans, escalation, and tie guards
+behave identically under either.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import disc
+from repro.api import ArgSpec
+from repro.core.bucketing import BucketPolicy, pow2_bucket
+from repro.core.cache import CompileCache
+from repro.core.dispatcher import (ArgPlan, DispatchLens, DynAxis,
+                                   generate_dispatch, jit_lens)
+
+
+def _lines(src, needle):
+    return [ln for ln in src.splitlines() if needle in ln]
+
+
+class TestEmitterParity:
+    def test_same_key_and_pad_logic_across_pipelines(self):
+        """For an equivalent function/spec, both pipelines must emit the
+        *identical* extraction, bucket-key, and pad-plan source."""
+        specs = [ArgSpec(("S", 4), jnp.float32)]
+        d = disc.compile(lambda x: jnp.tanh(x), specs)
+        j = disc.compile(lambda x: jnp.tanh(x), specs=specs,
+                         options=disc.CompileOptions(pipeline="jit"))
+        j(np.zeros((3, 4), np.float32))  # jit lowers lazily on first call
+
+        d_src, j_src = d.dispatch_source, j.dispatch_source
+        # extraction site
+        assert _lines(d_src, "s_0 = arrays[0].shape[0]") == \
+            _lines(j_src, "s_0 = arrays[0].shape[0]")
+        # bucket-key line (inlined pow2 math) is byte-identical
+        assert _lines(d_src, "key = ") == _lines(j_src, "key = ")
+        assert _lines(d_src, "key = ")[0].strip().startswith("key = ((16 if")
+        # pad plan is byte-identical (zero-fill to the bucket)
+        for needle in ("x0 = arrays[0]", "if tuple(x0.shape) != (key[0], 4):",
+                       "_buf = _np.zeros((key[0], 4), _dt0)",
+                       "_buf[:x0.shape[0], :]"):
+            assert _lines(d_src, needle) == _lines(j_src, needle) != []
+        # the two pipelines differ only in lens threading + output recovery
+        assert "lens = " in d_src and "lens = " not in j_src
+        assert "outs[0][" in d_src and "outs" not in j_src
+
+    def test_bucket_expr_matches_policy_everywhere(self):
+        """The inlined integer bucket math must agree with
+        ``BucketPolicy.bucket`` (the float-free form is what the emitter
+        compiles into the host flow)."""
+        for kind, granules in (("pow2", (1, 3, 16, 64)),
+                               ("multiple", (1, 7, 32)),
+                               ("exact", (1,))):
+            for g in granules:
+                pol = BucketPolicy(kind=kind, granule=g)
+                fn = eval(f"lambda v: {pol.emit_bucket_expr('S', 'v')}")
+                for v in list(range(1, 3000)) + [2**20, 2**20 + 1, 10**9]:
+                    assert fn(v) == pol.bucket("S", v), (kind, g, v)
+
+    def test_jit_lens_direct(self):
+        """The lens builder exposes the pipeline differences explicitly:
+        jit lenses carry no output plans and no lens vector."""
+        lens = jit_lens([None, ArgSpec(("S", 4), jnp.float32)], ["S"],
+                        name="t")
+        assert lens.outputs is None and lens.pass_lens is False
+        assert lens.args[0] == ArgPlan()            # pytree passthrough
+        assert lens.args[1].shape == (DynAxis(0), 4)
+        assert lens.sym_sites == (((1, 0),),)
+
+
+class TestJitEscalation:
+    def test_hot_exact_shape_escalates_unpadded(self):
+        calls = []
+
+        def f(x):
+            calls.append(x.shape)  # traced shapes only
+            return x * 2.0
+
+        cf = disc.compile(
+            f, specs=[ArgSpec(("S", 4))],
+            options=disc.CompileOptions(pipeline="jit",
+                                        escalation_threshold=3))
+        x = np.arange(20, dtype=np.float32).reshape(5, 4)
+        outs = [cf(x) for _ in range(5)]
+
+        st = cf.cache_stats()
+        assert st["escalations"] == 1
+        assert cf.compile_counts()["exact"] == 1
+        assert cf.compile_counts()["bucket"] == 1
+        # pre-escalation calls are bucket-padded (pow2/16), the escalated
+        # path is the unpadded §4.4 specialization
+        assert (16, 4) in calls and (5, 4) in calls
+        assert np.asarray(outs[-1]).shape == (5, 4)
+        np.testing.assert_allclose(outs[-1], x * 2.0, rtol=1e-6)
+        # valid region identical across both paths
+        np.testing.assert_allclose(np.asarray(outs[0])[:5], outs[-1],
+                                   rtol=1e-6)
+
+    def test_escalated_entries_are_independent(self):
+        """Each escalated signature gets its own entry object, so LRU
+        eviction (or a promotion purge) actually frees its executable —
+        a single shared jax.jit wrapper would retain every trace."""
+        cf = disc.compile(
+            lambda x: x * 2.0, specs=[ArgSpec(("S", 2))],
+            options=disc.CompileOptions(pipeline="jit",
+                                        escalation_threshold=2))
+        a, b = np.ones((3, 2), np.float32), np.ones((5, 2), np.float32)
+        for _ in range(3):
+            cf(a)
+            cf(b)
+        exact = [v for k, v in cf.cache._entries.items() if k[0] == "exact"]
+        assert len(exact) == 2 and exact[0] is not exact[1]
+        assert cf.compile_counts()["exact"] == 2
+
+    def test_escalation_disabled_by_default_in_jit(self):
+        cf = disc.compile(lambda x: x + 1.0, specs=[ArgSpec(("S", 2))],
+                          options=disc.CompileOptions(pipeline="jit"))
+        x = np.zeros((3, 2), np.float32)
+        for _ in range(10):
+            cf(x)
+        assert cf.cache_stats()["escalations"] == 0
+        assert "should_escalate" not in cf.dispatch_source
+
+    def test_dhlo_and_jit_escalate_identically(self):
+        """Same function, same threshold: both pipelines cross §4.4 at the
+        same call and agree numerically on the escalated result."""
+        def f(x):
+            return jnp.exp(x) + 1.0
+
+        opts = dict(escalation_threshold=3)
+        d = disc.compile(f, [ArgSpec(("S", 4))], **opts)
+        j = disc.compile(f, specs=[ArgSpec(("S", 4))],
+                         options=disc.CompileOptions(pipeline="jit", **opts))
+        x = np.random.randn(5, 4).astype(np.float32)
+        for _ in range(4):
+            d_out, j_out = d(x), j(x)
+        assert d.cache_stats()["escalations"] == 1
+        assert j.cache_stats()["escalations"] == 1
+        np.testing.assert_allclose(d_out, np.asarray(j_out)[:5], rtol=1e-6)
+
+
+class TestPromoteOnChange:
+    def test_tie_broken_relowers_instead_of_erroring(self):
+        def f(x, y):
+            return jnp.tanh(x).sum(axis=0), jnp.exp(y).sum(axis=0)
+
+        cf = disc.compile(f)  # no specs: first call infers + ties
+        x = np.random.randn(4, 3).astype(np.float32)
+        y = np.random.randn(4, 5).astype(np.float32)
+        cf(x, y)
+        assert cf.lower().specs[0].shape == ("d4", "d3")
+        assert cf.lower().specs[1].shape == ("d4", "d5")  # axis 0 tied
+        old_keys = set(cf.cache._entries)
+        assert old_keys  # the first call compiled under the tied profile
+
+        y2 = np.random.randn(6, 5).astype(np.float32)  # breaks the tie
+        a, b = cf(x, y2)
+        np.testing.assert_allclose(a, np.tanh(x).sum(0), rtol=1e-5)
+        np.testing.assert_allclose(b, np.exp(y2).sum(0), rtol=1e-4)
+        assert cf.cache_stats()["promotions"] == 1
+        # the superseded artifact's entries were purged from the carried
+        # cache (unreachable: refined keys carry strictly more symbols)
+        assert old_keys.isdisjoint(cf.cache._entries)
+        # profile refined: the coincidental tie became independent dims
+        s0, s1 = cf.lower().specs
+        assert s0.shape == ("d4", "d3")
+        assert s1.shape[0] not in ("d4",) and s1.shape[1] == "d5"
+
+        # both equality structures keep working, with no further promotion
+        cf(x, y)
+        cf(x, y2)
+        cf(np.random.randn(9, 3).astype(np.float32),
+           np.random.randn(2, 5).astype(np.float32))
+        assert cf.cache_stats()["promotions"] == 1
+
+    def test_promotion_preserves_surviving_ties(self):
+        """(4,4,4) infers one symbol over three args; a (4,6,6) call must
+        split only the broken site-group — the 6==6 coincidence observed
+        mid-promotion must NOT merge into the existing d6-style group."""
+        def f(x, y, z):
+            return x.sum(), y.sum(), z.sum()
+
+        cf = disc.compile(f)
+        mk = lambda n: np.random.randn(n, 2).astype(np.float32)
+        cf(mk(4), mk(4), mk(4))
+        assert [s.shape[0] for s in cf.lower().specs] == ["d4"] * 3
+
+        cf(mk(4), mk(6), mk(6))
+        names = [s.shape[0] for s in cf.lower().specs]
+        assert names[0] == "d4"
+        assert names[1] == names[2] != "d4"  # still tied to each other
+        assert cf.cache_stats()["promotions"] == 1
+
+        # ...and THAT tie can break later, promoting once more
+        cf(mk(4), mk(6), mk(8))
+        names = [s.shape[0] for s in cf.lower().specs]
+        assert len(set(names)) == 3
+        assert cf.cache_stats()["promotions"] == 2
+        # all three dims now independent: any size mix works
+        r = cf(mk(1), mk(2), mk(3))
+        assert len(r) == 3
+
+    def test_stale_handle_does_not_repromote(self):
+        """A kept reference to a superseded artifact must not trigger a
+        spurious second promotion (which would purge the live artifact's
+        entries): its guard redirects to the live dispatch instead."""
+        def f(x, y):
+            return jnp.tanh(x).sum(axis=0), jnp.exp(y).sum(axis=0)
+
+        cf = disc.compile(f)
+        x = np.random.randn(4, 3).astype(np.float32)
+        cf(x, np.random.randn(4, 5).astype(np.float32))
+        stale = cf._compiled  # pre-promotion artifact handle
+        y2 = np.random.randn(6, 5).astype(np.float32)
+        cf(x, y2)  # promotes
+        assert cf._compiled is not stale
+        live_keys = set(cf.cache._entries)
+
+        a, b = stale(x, y2)  # stale guard fires -> live dispatch serves it
+        np.testing.assert_allclose(b, np.exp(y2).sum(0), rtol=1e-4)
+        assert cf.cache_stats()["promotions"] == 1  # no double count
+        assert live_keys <= set(cf.cache._entries)  # nothing purged
+
+    def test_declared_tie_violation_raises_contract_error(self):
+        """Ties declared via a shared symbol are a contract, not a
+        coincidence: breaking one raises instead of promoting."""
+        cf = disc.compile(lambda u, v: (u.sum(), v.sum()),
+                          [("N", 2), ("N", 2)])
+        ok = np.zeros((3, 2), np.float32)
+        cf(ok, ok)
+        with pytest.raises(ValueError, match="tied across arguments"):
+            cf(ok, np.zeros((5, 2), np.float32))
+
+    def test_promote_disabled_raises(self):
+        cf = disc.compile(lambda x, y: (x.sum(), y.sum()),
+                          options=disc.CompileOptions(
+                              promote_on_change=False))
+        cf(np.zeros((4, 2), np.float32), np.zeros((4, 2), np.float32))
+        with pytest.raises(ValueError, match="tied across arguments"):
+            cf(np.zeros((4, 2), np.float32), np.zeros((6, 2), np.float32))
+
+    def test_promote_failure_explains_required_equality(self):
+        """If the function semantically requires the tied sizes (x + y),
+        promotion re-lowering fails with a pointed error, not a cryptic
+        trace-time shape mismatch."""
+        cf = disc.compile(lambda x, y: x + y)
+        ok = np.arange(4, dtype=np.float32)
+        np.testing.assert_allclose(cf(ok, ok), ok + ok)
+        with pytest.raises(ValueError, match="promote-on-change"):
+            cf(ok, np.zeros((6,), np.float32))
+        # failed promotion rolls back: the original tied profile (and its
+        # compiled artifact) keep serving valid calls, and the failed
+        # attempt is not counted as a promotion
+        np.testing.assert_allclose(cf(ok, ok), ok + ok)
+        assert cf.cache_stats()["promotions"] == 0
+
+
+class TestGenerateDispatchDirect:
+    """The emitter as pure mechanism: drive it with a hand-built lens."""
+
+    def test_custom_lens_round_trip(self):
+        lens = DispatchLens(
+            name="hand", sym_names=("S",), sym_sites=(((0, 0),),),
+            args=(ArgPlan((DynAxis(0), 2), np.float32),),
+            outputs=None, pass_lens=False)
+        cache = CompileCache("hand")
+        compiled_keys = []
+
+        def compile_bucket(key):
+            compiled_keys.append(key)
+            return lambda x: x.sum()
+
+        dispatch, src = generate_dispatch(
+            lens, BucketPolicy(kind="multiple", granule=4), cache,
+            compile_bucket)
+        out = dispatch([np.ones((3, 2), np.float32)])
+        assert out == pytest.approx(6.0)  # zero-padded to (4, 2), sum==6
+        assert compiled_keys == [(4,)]
+        dispatch([np.ones((4, 2), np.float32)])
+        assert cache.stats.hits == 1
+        assert "(-(-s_0 // 4) * 4)" in src  # inlined 'multiple' rule
+
+    def test_tie_break_handler_is_pipeline_agnostic(self):
+        """Tie guards + on_tie_break work for a jit lens too — the
+        mechanism is shared, not a dhlo special case."""
+        specs = [ArgSpec(("S", 1), np.float32), ArgSpec(("S", 1), np.float32)]
+        lens = jit_lens(specs, ["S"])
+        seen = []
+        dispatch, src = generate_dispatch(
+            lens, BucketPolicy(kind="exact"), CompileCache("t"),
+            lambda key: (lambda *a: sum(x.sum() for x in a)),
+            on_tie_break=lambda arrays: seen.append(
+                tuple(a.shape for a in arrays)) or "promoted")
+        a = np.ones((2, 1), np.float32)
+        assert dispatch([a, a]) == pytest.approx(4.0)
+        assert dispatch([a, np.ones((3, 1), np.float32)]) == "promoted"
+        assert seen == [((2, 1), (3, 1))]
+        assert "_tie_break(arrays)" in src
+
+    def test_cap_enforced_inline(self):
+        lens = jit_lens([ArgSpec(("S", 1), np.float32)], ["S"])
+        pol = BucketPolicy(kind="pow2", granule=4, caps=(("S", 8),))
+        dispatch, src = generate_dispatch(
+            lens, pol, CompileCache("cap"), lambda key: (lambda x: x))
+        assert dispatch([np.ones((5, 1), np.float32)]).shape == (8, 1)
+        with pytest.raises(ValueError, match="max"):
+            dispatch([np.ones((9, 1), np.float32)])
+        assert "min(" in src  # cap compiled into the key expression
+
+
+class TestServeEscalation:
+    def test_prefill_escalates_on_hot_prompt_length(self):
+        import jax
+        from repro.configs import get_config
+        from repro.data.pipeline import Request
+        from repro.models.registry import get_model
+        from repro.serve.engine import ServeConfig, ServeEngine
+
+        cfg = get_config("tinyllama_11b").reduced()
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(model, params,
+                          ServeConfig(max_batch=2, max_seq=64,
+                                      escalation_threshold=2))
+        # same prompt length 5, repeatedly: crosses the §4.4 threshold
+        for rid in range(3):
+            eng.submit([Request(rid=rid, tokens=[2, 3, 4, 5, 6],
+                                max_new_tokens=1)])
+            eng.run_until_done()
+        assert eng.stats["prefill_escalations"] >= 1
+        assert len(eng.done) == 3
