@@ -1,4 +1,5 @@
-"""Table 3 reproduction: kernel-count reduction from fusion.
+"""Table 3 reproduction: kernel-count reduction from fusion, plus the
+pallas-backend coverage/speedup report.
 
 Paper (Transformer): memory-bound kernels 8632 (Nimble) -> 6186 (DISC);
 TF eager launches 42884 memory-intensive kernels vs DISC 6186 (~7x).
@@ -6,14 +7,25 @@ We report, per workload: eager launches (= graph ops, one kernel per op),
 DISC kernels after shape-constraint fusion, and the reduction ratio, plus
 how many fusions were enabled *specifically* by frontend shape-constraint
 hints (re-planned with hints disabled).
+
+``pallas_coverage_case`` adds the per-bucket fused-kernel trajectory:
+for each cluster template (kLoop multi-output, non-last-axis kInput,
+kDot epilogue) it compiles the same function with ``backend="pallas"``
+and ``backend="xla"``, checks numeric parity, times both per bucket, and
+proves fused execution via the backend's ClusterKernel trace counters.
+
+Run directly:  python -m benchmarks.bench_table3_kernels [--smoke]
 """
 from __future__ import annotations
 
+import time
 from typing import List
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.api import ArgSpec, bridge
+from repro.api import ArgSpec, bridge, compile as disc_compile, get_backend
 from repro.core.fusion import plan_fusion  # internals bench
 from repro.core.propagation import CostClass, op_info  # internals bench
 
@@ -21,8 +33,6 @@ from .workloads import active_workloads
 
 
 def main(csv: List[str], smoke: bool = False):
-    from repro.core.codegen import (_pallas_input_eligible,
-                                    _pallas_loop_eligible)
     total_eager = total_disc = 0
     for name, maker in active_workloads(smoke).items():
         fn, specs, _ = maker()
@@ -32,9 +42,7 @@ def main(csv: List[str], smoke: bool = False):
         plan_nohints = plan_fusion(graph_nohints)
         mem_ops = sum(1 for op in graph.ops
                       if op_info(op.opcode).cost is CostClass.MEMORY)
-        n_pallas = sum(1 for c in plan.clusters
-                       if _pallas_loop_eligible(graph, c)
-                       or _pallas_input_eligible(graph, c))
+        templates = plan.template_counts()
         total_eager += len(graph.ops)
         total_disc += plan.n_kernels
         csv.append(
@@ -42,11 +50,101 @@ def main(csv: List[str], smoke: bool = False):
             f" mem_ops={mem_ops}"
             f" disc_kernels={plan.n_kernels}"
             f" mem_kernels={plan.n_memory_kernels}"
-            f" pallas_eligible={n_pallas}"
+            f" pallas_eligible={sum(templates.values())}"
+            f" templates={'+'.join(f'{k}:{v}' for k, v in sorted(templates.items())) or 'none'}"
             f" no_hint_kernels={plan_nohints.n_kernels}")
     csv.append(f"table3_total,,eager={total_eager} disc={total_disc}"
                f" reduction={total_eager / max(total_disc, 1):.2f}x"
                f" (paper mem-bound: 42884->6186 = 6.9x)")
+    pallas_coverage_case(csv, smoke=smoke)
+    split_hint_case(csv)
+
+
+# ------------------------------------------------- pallas trajectory --
+
+def _kloop_multi(x, y):
+    h = jnp.tanh(x) * y + 1.0
+    return h * 2.0, jnp.exp(h) - y
+
+
+def _kinput_axis0(x):
+    return (jnp.exp(x) * 0.5 + 1.0).sum(axis=0)
+
+
+def _kdot_epilogue(x, w, b):
+    return jax.nn.gelu(x @ w + b)
+
+
+def _coverage_cases(smoke: bool):
+    d = 16 if smoke else 64
+    batches = (6, 20) if smoke else (48, 200)
+    return [
+        ("kloop_multi_output", "kLoop", _kloop_multi,
+         [ArgSpec(("B", d)), ArgSpec(("B", d))],
+         lambda rng, b: (rng.randn(b, d).astype(np.float32),
+                         rng.randn(b, d).astype(np.float32)), batches),
+        ("kinput_axis0_reduce", "kInput", _kinput_axis0,
+         [ArgSpec(("B", d))],
+         lambda rng, b: (rng.randn(b, d).astype(np.float32),), batches),
+        ("kdot_bias_gelu", "kDot", _kdot_epilogue,
+         [ArgSpec(("B", d)), ArgSpec((d, 8)), ArgSpec((8,))],
+         lambda rng, b: (rng.randn(b, d).astype(np.float32),
+                         rng.randn(d, 8).astype(np.float32),
+                         rng.randn(8).astype(np.float32)), batches),
+    ]
+
+
+def _time_us(call, iters: int) -> float:
+    jax.block_until_ready(call())  # warmup: compile the bucket
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(call())  # async dispatch: time execution
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def pallas_coverage_case(csv: List[str], smoke: bool = False):
+    """Per-bucket pallas-vs-XLA parity + speedup for each cluster kind."""
+    kernels = get_backend("pallas").cluster_kernels
+    iters = 2 if smoke else 20
+    executed = set()
+    for name, template, fn, specs, make_args, batches in \
+            _coverage_cases(smoke):
+        eng_p = disc_compile(fn, specs, backend="pallas",
+                             name=f"bench_{name}_p")
+        eng_x = disc_compile(fn, specs, backend="xla",
+                             name=f"bench_{name}_x")
+        for b in batches:
+            rng = np.random.RandomState(b)
+            args = make_args(rng, b)
+            runs0 = kernels[template].runs
+            falls0 = kernels[template].fallbacks
+            got = eng_p(*args)
+            want = eng_x(*args)
+            got = got if isinstance(got, tuple) else (got,)
+            want = want if isinstance(want, tuple) else (want,)
+            for g, w in zip(got, want):
+                np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                           rtol=1e-4, atol=1e-5)
+            traced = kernels[template].runs - runs0
+            fell = kernels[template].fallbacks - falls0
+            if traced > 0 and fell == 0:
+                executed.add(template)
+            us_p = _time_us(lambda: eng_p(*args), iters)
+            us_x = _time_us(lambda: eng_x(*args), iters)
+            csv.append(
+                f"table3_pallas_{name}_B{b},{us_p:.1f},"
+                f"xla_us={us_x:.1f}"
+                f" speedup={us_x / max(us_p, 1e-9):.2f}x"
+                f" template={template}"
+                f" fused_traces=+{traced} fallbacks=+{fell}")
+    csv.append(
+        f"table3_pallas_coverage,,cluster_kinds_executed="
+        f"{'+'.join(sorted(executed)) or 'none'}"
+        f" ({len(executed)}/3)")
+    if len(executed) < 3:
+        raise AssertionError(
+            f"pallas backend executed only {sorted(executed)} of the three "
+            f"cluster kinds through fused kernels")
 
 
 # split-hint microbenchmark: fusion enabled only by the injected constraint
@@ -63,7 +161,12 @@ def split_hint_case(csv: List[str]):
 
 
 if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes / few iters (CI)")
+    args = ap.parse_args()
     out: List[str] = []
-    main(out)
-    split_hint_case(out)
+    main(out, smoke=args.smoke)
     print("\n".join(out))

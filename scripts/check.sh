@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
-# Repo check: public-API import lint + tier-1 tests (+ benchmark smoke).
+# Repo check: public-API import lint + docs check + tier-1 tests
+# (+ benchmark smoke).
 #
-#   scripts/check.sh            # lint + tests
+#   scripts/check.sh            # lint + docs + tests
 #   scripts/check.sh --lint     # lint only (fast)
-#   scripts/check.sh --smoke    # lint + tests + benchmark smoke run (CI gate)
+#   scripts/check.sh --docs     # docs link/anchor/stale-reference check only
+#   scripts/check.sh --smoke    # lint + docs + tests + benchmark smoke (CI gate)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -11,11 +13,20 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 MODE="${1:-}"
 
+if [[ "$MODE" == "--docs" ]]; then
+    python scripts/docs_check.py
+    exit 0
+fi
+
 python scripts/import_lint.py
 
-if [[ "$MODE" != "--lint" ]]; then
-    python -m pytest -q
+if [[ "$MODE" == "--lint" ]]; then
+    exit 0
 fi
+
+python scripts/docs_check.py
+
+python -m pytest -q
 
 if [[ "$MODE" == "--smoke" ]]; then
     python -m benchmarks.run --smoke

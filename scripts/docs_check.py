@@ -1,0 +1,183 @@
+#!/usr/bin/env python
+"""Docs checker: links, anchors, and stale code references — stdlib only.
+
+Scans ``README.md`` and ``docs/**/*.md`` for:
+
+* **relative links** ``[text](path)`` — the target file must exist;
+* **anchors** ``[text](path#anchor)`` / ``[text](#anchor)`` — the target
+  markdown must contain a heading whose GitHub slug matches;
+* **stale code references** — inline-code spans that *look like* code
+  identifiers must still exist in the source tree:
+
+  - spans containing ``/`` are treated as repo paths (checked relative to
+    the repo root, ``src/`` and ``src/repro/``);
+  - dotted names (``disc.compile``), CamelCase names (``CompileOptions``),
+    call forms (``plan_fusion()``), and snake_case names with an
+    underscore (``dispatch_source``) must appear as a word somewhere in
+    ``src/``, ``scripts/``, ``benchmarks/``, ``tests/`` or ``examples/``.
+
+  Plain single words (prose that happens to be in backticks) are skipped.
+
+Usage: python scripts/docs_check.py   (exit 1 on any violation)
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("**/*.md"))
+CORPUS_DIRS = ["src", "scripts", "benchmarks", "tests", "examples"]
+CORPUS_SUFFIXES = {".py", ".sh", ".toml", ".yml", ".md"}
+
+# spans that look like code but intentionally aren't repo identifiers
+ALLOWLIST = {
+    "pip", "jax", "numpy", "pytest", "git", "xla", "pallas", "disc",
+    "interpret=False", "interpret=True", "overwrite=True", "None",
+    "pipeline=\"jit\"", "pipeline=\"dhlo\"",
+}
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"^(```|~~~)")
+_CODE_SPAN = re.compile(r"`([^`\n]+)`")
+_DOTTED = re.compile(r"^[A-Za-z_][\w]*(\.[A-Za-z_][\w]*)+$")
+_CAMEL = re.compile(r"^[A-Z][A-Za-z0-9]*[a-z][A-Za-z0-9]*$")
+_SNAKE = re.compile(r"^[a-z_][a-z0-9_]*$")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug for a markdown heading."""
+    h = heading.strip().lower()
+    h = re.sub(r"`([^`]*)`", r"\1", h)
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _headings(md: pathlib.Path):
+    slugs = set()
+    in_fence = False
+    for line in md.read_text().splitlines():
+        if _FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if not in_fence and line.startswith("#"):
+            slugs.add(_slug(line.lstrip("#")))
+    return slugs
+
+
+def _prose_lines(md: pathlib.Path):
+    """(lineno, text) outside fenced code blocks."""
+    in_fence = False
+    for i, line in enumerate(md.read_text().splitlines(), 1):
+        if _FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            yield i, line
+
+
+def _build_corpus() -> str:
+    parts = []
+    for d in CORPUS_DIRS:
+        base = ROOT / d
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*")):
+            if p.is_file() and p.suffix in CORPUS_SUFFIXES and \
+                    "__pycache__" not in p.parts:
+                parts.append(p.read_text(errors="ignore"))
+    for p in sorted(ROOT.glob("*.toml")) + sorted(ROOT.glob("scripts/*")):
+        if p.is_file():
+            parts.append(p.read_text(errors="ignore"))
+    return "\n".join(parts)
+
+
+def _path_exists(token: str, doc: pathlib.Path) -> bool:
+    clean = token.split("#")[0].split("::")[0].rstrip("/")
+    if not clean:
+        return True
+    for base in (doc.parent, ROOT, ROOT / "src", ROOT / "src" / "repro"):
+        if (base / clean).exists():
+            return True
+    return False
+
+
+def _check_links(doc: pathlib.Path, errors):
+    for lineno, line in _prose_lines(doc):
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            if path_part:
+                resolved = (doc.parent / path_part).resolve()
+                if not resolved.is_relative_to(ROOT):
+                    continue  # GitHub-site-relative (e.g. CI badge): unverifiable
+                if not resolved.exists():
+                    errors.append(f"{doc.relative_to(ROOT)}:{lineno}: "
+                                  f"broken link {target!r}")
+                    continue
+            else:
+                resolved = doc
+            if anchor and resolved.suffix == ".md":
+                if anchor not in _headings(resolved):
+                    errors.append(f"{doc.relative_to(ROOT)}:{lineno}: "
+                                  f"missing anchor {target!r}")
+
+
+def _identifier_words(token: str):
+    """Words to verify in the corpus for a code-looking span (empty list
+    -> the span is prose/flag-like and is skipped)."""
+    t = token.strip()
+    if t in ALLOWLIST or t.startswith("-") or " " in t or '"' in t:
+        return []
+    t = t.rstrip(":,")
+    call = t.endswith("()")
+    t = t[:-2] if call else t
+    if _DOTTED.match(t):
+        return [t.split(".")[-1]]
+    if _CAMEL.match(t):
+        return [t]
+    if _SNAKE.match(t) and ("_" in t or call):
+        return [t]
+    return []
+
+
+def _check_code_refs(doc: pathlib.Path, corpus: str, errors):
+    for lineno, line in _prose_lines(doc):
+        for m in _CODE_SPAN.finditer(line):
+            token = m.group(1).strip()
+            if "/" in token and " " not in token:
+                if not _path_exists(token, doc):
+                    errors.append(f"{doc.relative_to(ROOT)}:{lineno}: "
+                                  f"stale path reference `{token}`")
+                continue
+            for word in _identifier_words(token):
+                if not re.search(rf"\b{re.escape(word)}\b", corpus):
+                    errors.append(f"{doc.relative_to(ROOT)}:{lineno}: "
+                                  f"stale code reference `{token}` "
+                                  f"({word!r} not found in source tree)")
+
+
+def main() -> int:
+    corpus = _build_corpus()
+    errors = []
+    checked = 0
+    for doc in DOC_FILES:
+        if not doc.exists():
+            errors.append(f"missing doc file: {doc.relative_to(ROOT)}")
+            continue
+        checked += 1
+        _check_links(doc, errors)
+        _check_code_refs(doc, corpus, errors)
+    if errors:
+        print("docs check: FAILED")
+        print("\n".join("  " + e for e in errors))
+        return 1
+    print(f"docs check: OK ({checked} files, links/anchors/code refs clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,8 @@
 #!/usr/bin/env python
 """Import lint: examples/, benchmarks/, scripts/ and src/disc/ must
 consume the compiler only through the public API (``disc`` /
-``repro.api``).
+``repro.api``).  Also rejects committed Python bytecode
+(``__pycache__`` directories / ``.pyc`` files in the git index).
 
 Workload definitions (``repro.models``, ``repro.configs``, ``repro.data``,
 ``repro.checkpoint``, ``repro.train``, ``repro.roofline``) are data/tooling,
@@ -16,6 +17,7 @@ from __future__ import annotations
 
 import ast
 import pathlib
+import subprocess
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -33,8 +35,7 @@ FILE_ALLOWLIST = {
     "benchmarks/bench_buffers.py": {"repro.core.buffers",
                                     "repro.core.codegen"},
     "benchmarks/bench_table3_kernels.py": {"repro.core.fusion",
-                                           "repro.core.propagation",
-                                           "repro.core.codegen"},
+                                           "repro.core.propagation"},
 }
 
 
@@ -49,8 +50,22 @@ def imports_of(path: pathlib.Path):
                 yield node.module, node.lineno
 
 
+def committed_bytecode() -> list:
+    """Python bytecode tracked by git (should be .gitignore'd instead)."""
+    try:
+        out = subprocess.run(["git", "ls-files"], cwd=ROOT, check=True,
+                             capture_output=True, text=True).stdout
+    except (OSError, subprocess.CalledProcessError):
+        return []  # not a git checkout (e.g. sdist): nothing to check
+    return [p for p in out.splitlines()
+            if p.endswith((".pyc", ".pyo")) or "__pycache__" in p.split("/")]
+
+
 def main() -> int:
     bad = []
+    for p in committed_bytecode():
+        bad.append(f"{p}: committed bytecode (add to .gitignore and "
+                   f"`git rm --cached` it)")
     for d in SCANNED:
         for path in sorted((ROOT / d).glob("*.py")):
             rel = path.relative_to(ROOT).as_posix()

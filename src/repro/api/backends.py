@@ -8,13 +8,21 @@ baseline was a separate class nobody could select uniformly.  Now a
 * ``build_bucket``: produce the per-bucket-signature entry
   ``entry(lens_i32, *padded_arrays) -> outputs`` for one padded binding;
 * ``build_exact``: produce the exact-shape executor used by §4.4 static
-  escalation.
+  escalation;
+* ``cluster_kernels``: the fused-kernel registrations — a mapping from
+  fusion-plan template (``"kLoop"`` / ``"kInput"`` / ``"kDot"``, see
+  ``Cluster.template`` in ``core/fusion.py``) to a
+  :class:`~repro.core.codegen.ClusterKernel` implementation.  Clusters
+  whose template a backend registers execute through that kernel; the
+  rest fall back to per-op XLA emission.  Codegen never string-checks the
+  backend name.
 
 Built-ins:
 
 * ``"xla"``       — DHLO graph emitted through XLA, AOT-compiled per bucket
-* ``"pallas"``    — eligible fusion clusters run through the fused Pallas
-  kernels, the rest through XLA; AOT-compiled per bucket
+  (no cluster kernels)
+* ``"pallas"``    — registers the three Pallas cluster kernels (kLoop /
+  kInput / kDot); AOT-compiled per bucket
 * ``"nimble_vm"`` — the interpreted baseline: the same masked executor, but
   *never jitted* — every call walks the graph op by op (Nimble's VM
   approach, kept selectable for honest §5.2 comparisons)
@@ -24,13 +32,14 @@ Third parties register their own with
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from ..core.codegen import build_exact_executor, build_padded_executor
+from ..core.codegen import (ClusterKernel, build_exact_executor,
+                            build_padded_executor, pallas_cluster_kernels)
 from ..core.dhlo import DGraph
 from ..core.symshape import SymDim
 
@@ -48,13 +57,16 @@ class Backend:
 
     ``build_bucket(graph, plan, syms, padded, donate)`` returns the entry
     for one bucket signature; ``build_exact(graph, plan)`` returns the
-    exact-shape executor for the static-escalation path.
+    exact-shape executor for the static-escalation path;
+    ``cluster_kernels`` maps fusion-plan templates to the
+    :class:`~repro.core.codegen.ClusterKernel` objects that execute them.
     """
 
     name: str
     build_bucket: Callable[..., Any]
     build_exact: Callable[..., Callable]
     description: str = ""
+    cluster_kernels: Mapping[str, ClusterKernel] = field(default_factory=dict)
 
 
 def _padded_arg_sds(graph: DGraph, padded: Dict[int, int]):
@@ -71,13 +83,17 @@ def _padded_arg_sds(graph: DGraph, padded: Dict[int, int]):
     return arg_sds
 
 
-def _make_aot_backend(name: str, emission: str, description: str) -> Backend:
-    """A backend that AOT-compiles each bucket entry through jax.jit."""
+def _make_aot_backend(name: str, description: str,
+                      cluster_kernels: Optional[Mapping[str, ClusterKernel]]
+                      = None) -> Backend:
+    """A backend that AOT-compiles each bucket entry through jax.jit,
+    executing clusters through its registered ``cluster_kernels``."""
+    kernels = dict(cluster_kernels or {})
 
     def build_bucket(graph: DGraph, plan, syms: Sequence[SymDim],
                      padded: Dict[int, int], donate: bool):
         executor = build_padded_executor(graph, padded, syms, plan=plan,
-                                         backend=emission)
+                                         kernels=kernels)
         lens_sds = jax.ShapeDtypeStruct((max(len(syms), 1),), jnp.int32)
         arg_sds = _padded_arg_sds(graph, padded)
         donate_nums = tuple(range(1, 1 + len(arg_sds))) if donate else ()
@@ -86,10 +102,11 @@ def _make_aot_backend(name: str, emission: str, description: str) -> Backend:
 
     def build_exact(graph: DGraph, plan):
         return jax.jit(build_exact_executor(graph, plan=plan,
-                                            backend=emission))
+                                            kernels=kernels))
 
     return Backend(name=name, build_bucket=build_bucket,
-                   build_exact=build_exact, description=description)
+                   build_exact=build_exact, description=description,
+                   cluster_kernels=kernels)
 
 
 def _make_vm_backend() -> Backend:
@@ -99,8 +116,7 @@ def _make_vm_backend() -> Backend:
     def build_bucket(graph: DGraph, plan, syms: Sequence[SymDim],
                      padded: Dict[int, int], donate: bool):
         # NOT jitted: per-call graph walk + one dispatch per op.
-        return build_padded_executor(graph, padded, syms, plan=None,
-                                     backend="xla")
+        return build_padded_executor(graph, padded, syms, plan=None)
 
     def build_exact(graph: DGraph, plan):
         return build_exact_executor(graph)
@@ -138,8 +154,9 @@ def list_backends() -> List[str]:
 
 
 register_backend("xla", _make_aot_backend(
-    "xla", "xla", "DHLO emitted through XLA, AOT-compiled per bucket"))
+    "xla", "DHLO emitted through XLA, AOT-compiled per bucket"))
 register_backend("pallas", _make_aot_backend(
-    "pallas", "pallas",
-    "eligible fusion clusters through fused Pallas kernels, rest XLA"))
+    "pallas",
+    "kLoop/kInput/kDot clusters through fused Pallas kernels, rest XLA",
+    cluster_kernels=pallas_cluster_kernels()))
 register_backend("nimble_vm", _make_vm_backend())

@@ -331,17 +331,19 @@ class Compiled:
         }
         low = self.lowered
         if low.graph is not None:
-            from ..core.codegen import (_pallas_input_eligible,
-                                        _pallas_loop_eligible)
-            n_pallas = sum(
-                1 for c in low.plan.clusters
-                if _pallas_loop_eligible(low.graph, c)
-                or _pallas_input_eligible(low.graph, c))
+            templates = low.plan.template_counts()
+            covered = sum(n for t, n in templates.items()
+                          if t in self.backend.cluster_kernels) \
+                if self.backend.cluster_kernels else 0
             rep.update({
                 "fusion": low.plan.stats(),
                 "placement": low.placement.report(),
                 "constraints": low.graph.store.stats(),
-                "pallas_eligible_clusters": n_pallas,
+                # clusters eligible for a fused-kernel template (plan
+                # property) vs covered by THIS backend's registrations
+                "pallas_eligible_clusters": sum(templates.values()),
+                "cluster_templates": templates,
+                "backend_covered_clusters": covered,
             })
         return rep
 

@@ -26,10 +26,31 @@ Two executors are generated from one graph:
   shape (≤ bucket), with launch-configuration decisions (here: mask/no-mask,
   vectorized variants in the Pallas backend) resolved from runtime shape
   scalars.
+
+Fused-cluster execution is organized around the :class:`ClusterKernel`
+protocol: the fusion plan marks each cluster with the codegen *template*
+it can execute as (``"kLoop"``, ``"kInput"``, ``"kDot"`` — see
+``core/fusion.py``), and a backend supplies one kernel object per
+template it implements.  The built-in Pallas set
+(:func:`pallas_cluster_kernels`) covers:
+
+* **kLoop**  — one flattened masked kernel over the element domain,
+  writing every live-out of the cluster (multi-output clusters do not
+  split);
+* **kInput** — elementwise producers recomputed inside a masked last-axis
+  reduce; any single reduce axis is normalized to last-axis with a
+  transpose (elementwise exprs commute with it);
+* **kDot**   — the tiled MXU matmul with the cluster's elementwise
+  epilogue (bias/activation/residual) applied on the accumulator tiles at
+  the final K step, with masked M/N/K tails from the runtime lens.
+
+Clusters whose template a backend does not register — or whose kernel
+raises — fall back to per-op XLA emission, so widening eligibility can
+never change numerics.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,10 +59,17 @@ from jax import lax
 
 from .dhlo import DGraph, DOp, DValue
 from .emit import emit_op
+from .fusion import REDUCE_ROOT_KINDS, Cluster, cluster_live_outs
 from .propagation import op_info
 from .symshape import SymDim
 
-__all__ = ["build_exact_executor", "build_padded_executor", "dyn_symbols"]
+__all__ = [
+    "build_exact_executor",
+    "build_padded_executor",
+    "dyn_symbols",
+    "ClusterKernel",
+    "pallas_cluster_kernels",
+]
 
 
 def dyn_symbols(graph: DGraph) -> List[SymDim]:
@@ -254,89 +282,17 @@ def _emit_masked(op: DOp, inputs, out_shapes, env: _ShapeEnv):
     return emit_op(op, inputs, out_shapes)
 
 
-# opcodes whose emission is shape-oblivious on a flattened block — the
-# eligibility set for the Pallas fused-elementwise backend (§4.3)
-_PALLAS_ELIGIBLE = {
-    "add", "sub", "mul", "div", "max", "min", "pow", "neg", "exp", "exp2",
-    "expm1", "log", "log1p", "tanh", "logistic", "sqrt", "rsqrt", "abs",
-    "sign", "floor", "ceil", "round", "erf", "sin", "cos", "square",
-    "integer_pow", "select", "convert", "stop_gradient", "copy",
-    "eq", "ne", "lt", "gt", "le", "ge", "and", "or", "not",
-}
+# --------------------------------------------------- cluster kernels --
 
-_REDUCE_KINDS = {"reduce_sum": "sum", "reduce_max": "max",
-                 "reduce_min": "min", "reduce_prod": "prod"}
+def _cluster_expr(ops: Sequence[DOp], input_vids: Sequence[int],
+                  scalar_consts: Mapping[int, Any],
+                  out_vids: Sequence[int]) -> Callable:
+    """Build the unrolled expression closure a fused kernel body executes.
 
-
-def _no_escaping_intermediates(graph: DGraph, cluster) -> bool:
-    """Only the root output may be consumed outside the cluster (a single
-    fused kernel materializes exactly one result)."""
-    member_ids = {op.oid for op in cluster.ops}
-    root_out = cluster.ops[-1].outputs[0].vid
-    users = graph.users()
-    out_ids = {o.vid for o in graph.outputs}
-    for op in cluster.ops:
-        for o in op.outputs:
-            if o.vid == root_out:
-                continue
-            if o.vid in out_ids:
-                return False
-            for user in users.get(o.vid, ()):
-                if user.oid not in member_ids:
-                    return False
-    return True
-
-
-def _pallas_loop_eligible(graph: DGraph, cluster) -> bool:
-    """kLoop cluster executable as ONE flattened masked Pallas kernel:
-    every op shape-oblivious elementwise, every non-scalar value the same
-    shape class (scalars are closure-captured)."""
-    if cluster.kind != "loop" or len(cluster.ops) < 2:
-        return False
-    store = graph.store
-    ref = cluster.ops[-1].outputs[0].shape
-    for op in cluster.ops:
-        if op.opcode not in _PALLAS_ELIGIBLE:
-            return False
-        for v in list(op.inputs) + list(op.outputs):
-            if v.rank == 0:
-                continue
-            if len(v.shape) != len(ref) or not store.shapes_equal(v.shape, ref):
-                return False
-    return _no_escaping_intermediates(graph, cluster)
-
-
-def _pallas_input_eligible(graph: DGraph, cluster) -> bool:
-    """kInput cluster: shape-oblivious producers + one last-axis reduce root."""
-    if cluster.kind != "input" or len(cluster.ops) < 2:
-        return False
-    root = cluster.ops[-1]
-    if root.opcode not in _REDUCE_KINDS:
-        return False
-    axes = root.attrs.get("axes", ())
-    src = root.inputs[0]
-    if tuple(axes) != (src.rank - 1,):
-        return False
-    store = graph.store
-    ref = src.shape
-    for op in cluster.ops[:-1]:
-        if op.opcode not in _PALLAS_ELIGIBLE:
-            return False
-        for v in list(op.inputs) + list(op.outputs):
-            if v.rank == 0:
-                continue
-            if len(v.shape) != len(ref) or not store.shapes_equal(v.shape, ref):
-                return False
-    return _no_escaping_intermediates(graph, cluster)
-
-
-def _cluster_expr(cluster, input_vids, scalar_consts, *, skip_root=False):
-    """Build the unrolled expression closure a Pallas kernel body executes.
-
-    The per-op emission happens at kernel TRACE time — zero runtime
-    interpretation, exactly the paper's compile-time codegen property."""
-    ops = cluster.ops[:-1] if skip_root else cluster.ops
-    last = cluster.ops[-1]
+    ``input_vids`` name the block operands (positionally), ``out_vids``
+    the values the closure returns (a tuple when several).  The per-op
+    emission happens at kernel TRACE time — zero runtime interpretation,
+    exactly the paper's compile-time codegen property."""
 
     def expr(*blocks):
         local: Dict[int, Any] = dict(zip(input_vids, blocks))
@@ -348,70 +304,247 @@ def _cluster_expr(cluster, input_vids, scalar_consts, *, skip_root=False):
             assert v.literal is not None, f"unbound {v!r}"
             return jnp.asarray(v.literal)
 
-        out = None
         for op in ops:
             res = emit_op(op, [rd(v) for v in op.inputs], [None])
             for o, val in zip(op.outputs, res):
                 local[o.vid] = val
-            out = res[0]
-        if skip_root:
-            return local[last.inputs[0].vid]
-        return out
+        outs = tuple(local[vid] for vid in out_vids)
+        return outs if len(outs) != 1 else outs[0]
 
     return expr
 
 
-def _run_pallas_cluster(graph: DGraph, cluster, read, env: _ShapeEnv,
-                        masked: bool):
-    """Execute an eligible cluster through the fused Pallas kernels."""
-    from ..kernels.fused_elementwise.ops import fused_elementwise
-    from ..kernels.fused_reduce.ops import fused_reduce
-
-    produced = {o.vid for op in cluster.ops for o in op.outputs}
-    # boundary inputs: non-literal values consumed but not produced inside
-    seen = []
-    for op in cluster.ops:
+def _cluster_io(ops: Sequence[DOp], read) -> Tuple[List[int], List[Any],
+                                                   Dict[int, Any]]:
+    """Boundary operands of a fused body: non-scalar values become kernel
+    tensor inputs (including non-scalar literals — they must stream in as
+    blocks, not be re-materialized at full shape inside the body); rank-0
+    values are closure-captured.  Scalar *literals* are captured as raw
+    numpy (they trace to in-kernel constants); a non-literal rank-0
+    boundary value would be a captured tracer, which Pallas rejects — the
+    kernel then raises and the cluster falls back to per-op emission."""
+    produced = {o.vid for op in ops for o in op.outputs}
+    tensor_ids: List[int] = []
+    tensors: List[Any] = []
+    scalars: Dict[int, Any] = {}
+    for op in ops:
         for v in op.inputs:
-            if v.vid not in produced and v.literal is None and \
-                    v.vid not in [s for s, _ in seen]:
-                seen.append((v.vid, v))
-    tensor_ids, scalar_consts = [], {}
-    tensors = []
-    for vid, v in seen:
-        arr = read(v)
-        if v.rank == 0:
-            scalar_consts[vid] = arr
+            if v.vid in produced or v.vid in scalars or v.vid in tensor_ids:
+                continue
+            if v.rank == 0:
+                scalars[v.vid] = (np.asarray(v.literal)
+                                  if v.literal is not None else read(v))
+            else:
+                tensor_ids.append(v.vid)
+                tensors.append(read(v))
+    return tensor_ids, tensors, scalars
+
+
+def _hoist_broadcasts(cluster: Cluster, read, env: "_ShapeEnv"):
+    """Emit the cluster's boundary ``broadcast_in_dim`` ops outside the
+    kernel (classification guarantees their operands are boundaries);
+    returns the remaining body ops and the materialized prologue values."""
+    vals: Dict[int, Any] = {}
+    body: List[DOp] = []
+    for op in cluster.ops:
+        if op.opcode == "broadcast_in_dim":
+            outs = emit_op(op, [read(v) for v in op.inputs],
+                           [env.padded_shape(o.shape) for o in op.outputs])
+            for o, val in zip(op.outputs, outs):
+                vals[o.vid] = val
         else:
-            tensor_ids.append(vid)
-            tensors.append(arr)
+            body.append(op)
+    return body, vals
 
-    root = cluster.ops[-1]
-    out_v = root.outputs[0]
 
-    if cluster.kind == "loop":
-        expr = _cluster_expr(cluster, tensor_ids, scalar_consts)
+def _to_blocks(tensors: Sequence[Any], padded_ref: Tuple[int, ...]):
+    """Pre-broadcast boundary operands to the kernel's block class (inside
+    the kernel everything is ref-shaped; size-1 dims broadcast here)."""
+    return [t if tuple(t.shape) == tuple(padded_ref)
+            else jnp.broadcast_to(t, padded_ref) for t in tensors]
+
+
+class ClusterKernel:
+    """One fused-kernel template implementation for a backend.
+
+    ``template`` names the fusion-plan template this kernel executes
+    (``Cluster.template``); :meth:`run` executes one cluster and returns
+    ``{vid: padded_array}`` for every value the cluster must materialize
+    (its live-outs).  ``runs``/``fallbacks`` count *traces* through the
+    kernel (one per compiled bucket signature, not per call) — they let
+    tests and benchmarks prove a cluster actually executed through the
+    fused path instead of silently falling back to per-op XLA.
+    """
+
+    template: str = ""
+
+    def __init__(self) -> None:
+        self.runs = 0
+        self.fallbacks = 0
+
+    def run(self, graph: DGraph, cluster: Cluster, read, env: "_ShapeEnv",
+            masked: bool) -> Dict[int, Any]:
+        raise NotImplementedError
+
+
+class PallasLoopKernel(ClusterKernel):
+    """kLoop: one flattened masked Pallas kernel writing every live-out."""
+
+    template = "kLoop"
+
+    def run(self, graph, cluster, read, env, masked):
+        from ..kernels.fused_elementwise.ops import fused_elementwise
+
+        body, pvals = _hoist_broadcasts(cluster, read, env)
+
+        def rd(v):
+            return pvals[v.vid] if v.vid in pvals else read(v)
+
+        tensor_ids, tensors, scalars = _cluster_io(body, rd)
+        live = cluster_live_outs(graph, cluster)
+        kernel_outs = [v for v in live if v.vid not in pvals]
+        result = {v.vid: pvals[v.vid] for v in live if v.vid in pvals}
+        pref = env.padded_shape(kernel_outs[0].shape)
+        tensors = _to_blocks(tensors, pref)
+        expr = _cluster_expr(body, tensor_ids, scalars,
+                             [v.vid for v in kernel_outs])
         # pointwise garbage stays confined to the padded region (which is
         # NOT a flat prefix under multi-dim padding) — downstream mixing
         # ops apply their own canonical masks, so no in-kernel mask here
-        n_valid = int(np.prod(env.padded_shape(out_v.shape), dtype=np.int64))
-        outs = fused_elementwise(expr, tensors, n_valid, [out_v.dtype])
-        return {out_v.vid: outs[0].reshape(env.padded_shape(out_v.shape))}
+        n_valid = int(np.prod(pref, dtype=np.int64))
+        outs = fused_elementwise(expr, tensors, n_valid,
+                                 [v.dtype for v in kernel_outs])
+        result.update({v.vid: o.reshape(pref)
+                       for v, o in zip(kernel_outs, outs)})
+        return result
 
-    # kInput: masked last-axis reduce root
-    expr = _cluster_expr(cluster, tensor_ids, scalar_consts, skip_root=True)
-    src = root.inputs[0]
-    last_dim = src.shape[-1]
-    if masked and env.is_dynamic(last_dim):
-        n_cols = env.actual_dim(last_dim)
-    else:
-        n_cols = env.padded_dim(last_dim)
-    kind = _REDUCE_KINDS[root.opcode]
-    out = fused_reduce(expr, tensors, n_cols, kind)
-    return {out_v.vid: out.reshape(env.padded_shape(out_v.shape))}
+
+class PallasInputKernel(ClusterKernel):
+    """kInput: fused producers + masked single-axis reduce root.  Non-last
+    reduce axes are normalized by transposing the (elementwise) producer
+    inputs — the expr commutes — so one last-axis kernel serves any axis."""
+
+    template = "kInput"
+
+    def run(self, graph, cluster, read, env, masked):
+        from ..kernels.fused_reduce.ops import fused_reduce
+
+        root = cluster.ops[-1]
+        (axis,) = tuple(root.attrs["axes"])
+        src = root.inputs[0]
+        body, pvals = _hoist_broadcasts(cluster, read, env)
+
+        def rd(v):
+            return pvals[v.vid] if v.vid in pvals else read(v)
+
+        tensor_ids, tensors, scalars = _cluster_io(body[:-1], rd)
+        # the reduce source itself may be a boundary/prologue value (no
+        # producer in the body): stream it in and reduce it as-is
+        src_vid = root.inputs[0].vid
+        if src_vid not in {o.vid for op in body[:-1] for o in op.outputs} \
+                and src_vid not in tensor_ids:
+            tensor_ids.append(src_vid)
+            tensors.append(rd(root.inputs[0]))
+        tensors = _to_blocks(tensors, env.padded_shape(src.shape))
+        expr = _cluster_expr(body[:-1], tensor_ids, scalars,
+                             [root.inputs[0].vid])
+        red_dim = src.shape[axis]
+        if masked and env.is_dynamic(red_dim):
+            n_cols = env.actual_dim(red_dim)
+        else:
+            n_cols = env.padded_dim(red_dim)
+        out = fused_reduce(expr, tensors, n_cols,
+                           REDUCE_ROOT_KINDS[root.opcode], axis=axis)
+        out_v = root.outputs[0]
+        return {out_v.vid: out.reshape(env.padded_shape(out_v.shape))}
+
+
+class PallasDotKernel(ClusterKernel):
+    """kDot: tiled MXU matmul with the elementwise epilogue fused into the
+    final-K-step store, M/N/K tails masked from the runtime lens.  Prologue
+    ops (values the epilogue consumes that do not depend on the dot, e.g. a
+    bias ``broadcast_in_dim``) are emitted outside the kernel."""
+
+    template = "kDot"
+
+    def run(self, graph, cluster, read, env, masked):
+        from ..kernels.matmul.ops import matmul_fused
+
+        dot = next(op for op in cluster.ops if op.opcode == "dot_general")
+        acc_v = dot.outputs[0]
+        dep = {acc_v.vid}
+        prologue: List[DOp] = []
+        epilogue: List[DOp] = []
+        for op in cluster.ops:  # topological
+            if op is dot:
+                continue
+            if any(v.vid in dep for v in op.inputs):
+                epilogue.append(op)
+                dep.update(o.vid for o in op.outputs)
+            else:
+                prologue.append(op)
+
+        vals: Dict[int, Any] = {}
+
+        def rd(v):
+            return vals[v.vid] if v.vid in vals else read(v)
+
+        for op in prologue:
+            outs = emit_op(op, [rd(v) for v in op.inputs],
+                           [env.padded_shape(o.shape) for o in op.outputs])
+            for o, val in zip(op.outputs, outs):
+                vals[o.vid] = val
+
+        lhs, rhs = rd(dot.inputs[0]), rd(dot.inputs[1])
+        # epilogue boundary operands beyond the accumulator, pre-broadcast
+        # to full (M, N) tiles
+        extra_ids: List[int] = []
+        extras: List[Any] = []
+        scalars: Dict[int, Any] = {}
+        for op in epilogue:
+            for v in op.inputs:
+                if v.vid in dep or v.vid in scalars or v.vid in extra_ids:
+                    continue
+                if v.rank == 0:
+                    scalars[v.vid] = (np.asarray(v.literal)
+                                      if v.literal is not None else rd(v))
+                else:
+                    extra_ids.append(v.vid)
+                    extras.append(rd(v))
+        extras = _to_blocks(extras, env.padded_shape(acc_v.shape))
+
+        live = cluster_live_outs(graph, cluster)
+        kernel_outs = [v for v in live if v.vid in dep]
+        result = {v.vid: vals[v.vid] for v in live if v.vid not in dep}
+        expr = _cluster_expr(epilogue, [acc_v.vid] + extra_ids, scalars,
+                             [v.vid for v in kernel_outs])
+
+        m_d, k_d = dot.inputs[0].shape
+        n_d = dot.inputs[1].shape[1]
+
+        def bound(d):
+            if masked and env.is_dynamic(d):
+                return env.actual_dim(d)
+            return env.padded_dim(d)
+
+        outs = matmul_fused(lhs, rhs, extras, expr,
+                            valid_mnk=(bound(m_d), bound(n_d), bound(k_d)),
+                            out_dtypes=[v.dtype for v in kernel_outs],
+                            acc_dtype=acc_v.dtype)
+        result.update({v.vid: o for v, o in zip(kernel_outs, outs)})
+        return result
+
+
+def pallas_cluster_kernels() -> Dict[str, ClusterKernel]:
+    """Fresh instances of the built-in Pallas cluster kernels, keyed by the
+    fusion-plan template they execute (what ``backend="pallas"`` registers)."""
+    kernels = (PallasLoopKernel(), PallasInputKernel(), PallasDotKernel())
+    return {k.template: k for k in kernels}
 
 
 def _run_graph(graph: DGraph, arrays, env: _ShapeEnv, masked: bool,
-               plan=None, backend: str = "xla"):
+               plan=None,
+               kernels: Optional[Mapping[str, ClusterKernel]] = None):
     vals: Dict[int, Any] = {}
     for p, a in zip(graph.params, arrays):
         vals[p.vid] = a
@@ -433,16 +566,16 @@ def _run_graph(graph: DGraph, arrays, env: _ShapeEnv, masked: bool,
         for o, val in zip(op.outputs, outs):
             vals[o.vid] = val
 
-    if backend == "pallas" and plan is not None:
+    if kernels and plan is not None:
         for cluster in plan.clusters:
-            if _pallas_loop_eligible(graph, cluster) or \
-                    _pallas_input_eligible(graph, cluster):
+            kern = kernels.get(cluster.template) if cluster.template else None
+            if kern is not None:
                 try:
-                    vals.update(_run_pallas_cluster(graph, cluster, read,
-                                                    env, masked))
+                    vals.update(kern.run(graph, cluster, read, env, masked))
+                    kern.runs += 1
                     continue
                 except Exception:
-                    pass  # conservative fallback to the XLA path
+                    kern.fallbacks += 1  # conservative fallback to XLA
             for op in cluster.ops:
                 run_op(op)
     else:
@@ -452,7 +585,8 @@ def _run_graph(graph: DGraph, arrays, env: _ShapeEnv, masked: bool,
 
 
 def build_exact_executor(graph: DGraph, plan=None,
-                         backend: str = "xla") -> Callable:
+                         kernels: Optional[Mapping[str, ClusterKernel]] = None,
+                         ) -> Callable:
     """Executor running at exact concrete shapes (static-fallback path)."""
     syms = dyn_symbols(graph)
 
@@ -466,21 +600,24 @@ def build_exact_executor(graph: DGraph, plan=None,
                         bindings[c.uid] = int(size)
         env = _ShapeEnv(graph, padded=bindings, actual=dict(bindings))
         return _run_graph(graph, arrays, env, masked=False, plan=plan,
-                          backend=backend)
+                          kernels=kernels)
 
     return run
 
 
 def build_padded_executor(graph: DGraph, padded_bindings: Dict[int, int],
                           sym_order: Sequence[SymDim], plan=None,
-                          backend: str = "xla") -> Callable:
+                          kernels: Optional[Mapping[str, ClusterKernel]] = None,
+                          ) -> Callable:
     """Executor for one bucket signature: ``run(lens_i32, *padded_arrays)``.
 
     ``padded_bindings`` maps canonical symbol uid -> padded size (static for
     this artifact); ``lens_i32`` carries the actual sizes at runtime in
     ``sym_order`` — the artifact is exact for any actuals ≤ the bucket.
-    With ``backend="pallas"``, eligible fusion clusters execute through the
-    fused Pallas kernels (§4.3 codegen), the rest through XLA.
+    ``kernels`` maps fusion-plan templates to :class:`ClusterKernel`
+    implementations (the backend's registration): clusters whose template
+    is covered execute through the fused kernels (§4.3 codegen), the rest
+    through per-op XLA emission.
     """
     uids = [s.uid for s in sym_order]
 
@@ -488,6 +625,6 @@ def build_padded_executor(graph: DGraph, padded_bindings: Dict[int, int],
         actual = {uid: lens[i] for i, uid in enumerate(uids)}
         env = _ShapeEnv(graph, padded=padded_bindings, actual=actual)
         return _run_graph(graph, arrays, env, masked=True, plan=plan,
-                          backend=backend)
+                          kernels=kernels)
 
     return run

@@ -6,7 +6,9 @@ elementwise expression DAG) over the flattened element domain:
 * the *expression program* is a Python closure built from the fusion
   cluster at compile time — it is unrolled into the kernel body during
   tracing, so there is zero runtime interpretation (the paper's
-  "compile-time generated" property);
+  "compile-time generated" property); a multi-output closure (a cluster
+  with several live-outs) stores every result ref from the same launch,
+  so multi-consumer clusters never split;
 * the actual element count arrives as a **scalar-prefetch operand**; the
   padded tail of the bucket is masked on store, so one compiled kernel is
   exact for every runtime size ≤ bucket;

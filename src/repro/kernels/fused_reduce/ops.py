@@ -1,4 +1,12 @@
-"""jit wrapper + row-block version selection for the kInput kernel."""
+"""jit wrapper + row-block version selection for the kInput kernel.
+
+The Pallas kernel itself only knows one layout — rows = kept axes,
+columns = reduced axis.  :func:`fused_reduce` normalizes *any single
+reduce axis* onto it with a transpose of the producer inputs: the fused
+producer expression is elementwise, so it commutes with the permutation,
+and the kept axes preserve their relative order (the transposed result
+reshapes directly to the reduce's output shape).
+"""
 from __future__ import annotations
 
 from typing import Callable, Sequence
@@ -22,8 +30,19 @@ def select_row_block(r: int, c: int, itemsize: int = 4) -> int:
 
 
 def fused_reduce(expr: Callable, inputs: Sequence[jax.Array], n_valid_cols,
-                 kind: str = "sum", *, interpret: bool = True) -> jax.Array:
-    """(..., C) inputs reduced over the last axis with dynamic valid cols."""
+                 kind: str = "sum", *, axis: int = -1,
+                 interpret: bool = True) -> jax.Array:
+    """Reduce ``expr(*inputs)`` over ``axis`` with dynamic valid length.
+
+    ``axis`` may be any single dimension; non-last axes are moved last by
+    transposing the inputs (legal because ``expr`` is elementwise).
+    Returns the reduced array with the kept axes in their original order.
+    """
+    rank = inputs[0].ndim
+    axis = axis % rank
+    if axis != rank - 1:
+        perm = [a for a in range(rank) if a != axis] + [axis]
+        inputs = [jnp.transpose(x, perm) for x in inputs]
     lead = inputs[0].shape[:-1]
     c = inputs[0].shape[-1]
     flat = [x.reshape(-1, c) for x in inputs]

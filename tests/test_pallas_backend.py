@@ -1,13 +1,25 @@
-"""§4.3 Pallas codegen backend: eligible fusion clusters execute through
-the fused kernels (interpret mode) and must match the XLA path exactly."""
+"""§4.3 Pallas codegen backend: clusters whose fusion-plan template is
+registered by the backend execute through the fused kernels (interpret
+mode) and must match the XLA path exactly.
+
+Fused execution is *proved*, not assumed: the backend's
+:class:`~repro.core.codegen.ClusterKernel` objects count traces
+(``runs``) and silent per-op fallbacks (``fallbacks``), so a parity test
+that accidentally exercises the XLA fallback fails loudly instead of
+passing vacuously.
+
+``TestDocsCoverageTable`` keeps ``docs/backends.md`` honest: every row of
+its coverage table is recomputed from a real fusion plan.
+"""
+import pathlib
+import re
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.api import ArgSpec, bridge, compile as disc_compile
-from repro.core.codegen import (_pallas_input_eligible,
-                                _pallas_loop_eligible)
+from repro.api import ArgSpec, bridge, compile as disc_compile, get_backend
 from repro.core.fusion import plan_fusion
 
 
@@ -15,39 +27,102 @@ def _ew_chain(x, y):
     return jnp.tanh(x) * y + jnp.exp(x * 0.5) - y
 
 
+def _ew_multi(x, y):
+    h = jnp.tanh(x) * y + 1.0
+    return h * 2.0, jnp.exp(h) - y
+
+
 def _reduce_chain(x):
     return (jnp.exp(x) * 0.5 + 1.0).sum(axis=-1)
 
 
+def _reduce_axis0(x):
+    return (jnp.exp(x) * 0.5 + 1.0).sum(axis=0)
+
+
+def _reduce_mid(x):
+    return (jnp.tanh(x) * 2.0).sum(axis=1)
+
+
+def _dot_bias_gelu(x, w, b):
+    return jax.nn.gelu(x @ w + b)
+
+
+def _dot_residual_multi(x, w, r):
+    h = x @ w
+    a = jnp.tanh(h + r)
+    return a, a * h
+
+
+def _pallas_kernels():
+    return get_backend("pallas").cluster_kernels
+
+
+def _counters():
+    return {t: (k.runs, k.fallbacks) for t, k in _pallas_kernels().items()}
+
+
+def _assert_ran_fused(before, template):
+    """The given template traced at least once since ``before``, with no
+    new fallbacks anywhere."""
+    after = _counters()
+    assert after[template][0] > before[template][0], \
+        f"{template} never executed through the fused kernel"
+    for t in after:
+        assert after[t][1] == before[t][1], \
+            f"{t} silently fell back to per-op XLA"
+
+
 class TestEligibility:
-    def test_elementwise_chain_is_loop_eligible(self):
+    def test_elementwise_chain_is_loop_template(self):
         g, _ = bridge(_ew_chain, [ArgSpec(("B", "D")), ArgSpec(("B", "D"))])
-        plan = plan_fusion(g)
-        assert any(_pallas_loop_eligible(g, c) for c in plan.clusters)
+        assert "kLoop" in plan_fusion(g).template_counts()
 
-    def test_reduce_chain_is_input_eligible(self):
+    def test_multi_output_chain_is_loop_template(self):
+        g, _ = bridge(_ew_multi, [ArgSpec(("B", "D")), ArgSpec(("B", "D"))])
+        plan = plan_fusion(g)
+        (cl,) = [c for c in plan.clusters if c.template == "kLoop"]
+        assert len(cl.ops) >= 4  # the multi-consumer cluster did not split
+
+    def test_reduce_chain_is_input_template(self):
         g, _ = bridge(_reduce_chain, [ArgSpec(("B", "S"))])
-        plan = plan_fusion(g)
-        assert any(_pallas_input_eligible(g, c) for c in plan.clusters)
+        assert "kInput" in plan_fusion(g).template_counts()
 
-    def test_matmul_cluster_not_eligible(self):
+    @pytest.mark.parametrize("fn,spec", [
+        (_reduce_axis0, ("B", "S")),
+        (_reduce_mid, ("B", "S", 4)),
+    ])
+    def test_non_last_axis_reduce_is_input_template(self, fn, spec):
+        g, _ = bridge(fn, [ArgSpec(spec)])
+        assert "kInput" in plan_fusion(g).template_counts()
+
+    def test_dot_epilogue_is_dot_template(self):
+        g, _ = bridge(_dot_bias_gelu,
+                      [ArgSpec(("B", 16)), ArgSpec((16, 8)), ArgSpec((8,))])
+        assert "kDot" in plan_fusion(g).template_counts()
+
+    def test_batched_dot_cluster_not_templated(self):
         def f(x, w):
-            return jnp.tanh(x @ w)
+            return jnp.tanh(jnp.einsum("bmk,bkn->bmn", x, w))
 
-        g, _ = bridge(f, [ArgSpec(("B", 8)), ArgSpec((8, 8))])
+        g, _ = bridge(f, [ArgSpec(("B", 4, 8)), ArgSpec(("B", 8, 4))])
         plan = plan_fusion(g)
         for c in plan.clusters:
             if any(op.opcode == "dot_general" for op in c.ops):
-                assert not _pallas_loop_eligible(g, c)
+                assert c.template is None  # falls back to per-op execution
+
+    def test_backend_registers_all_three_templates(self):
+        assert set(_pallas_kernels()) == {"kLoop", "kInput", "kDot"}
 
 
 class TestPallasBackendCorrectness:
     @pytest.mark.parametrize("shape", [(4, 16), (7, 33), (16, 64)])
     def test_elementwise_matches_xla(self, shape):
         eng = disc_compile(_ew_chain,
-                         [ArgSpec(("B", "D")), ArgSpec(("B", "D"))],
-                         backend="pallas")
+                           [ArgSpec(("B", "D")), ArgSpec(("B", "D"))],
+                           backend="pallas")
         assert eng.report()["pallas_eligible_clusters"] >= 1
+        before = _counters()
         rng = np.random.RandomState(0)
         x = rng.randn(*shape).astype(np.float32)
         y = rng.randn(*shape).astype(np.float32)
@@ -55,25 +130,129 @@ class TestPallasBackendCorrectness:
                                    np.asarray(_ew_chain(jnp.asarray(x),
                                                         jnp.asarray(y))),
                                    rtol=1e-5, atol=1e-6)
+        _assert_ran_fused(before, "kLoop")
+
+    @pytest.mark.parametrize("shape", [(4, 16), (6, 40)])
+    def test_multi_output_loop_matches_xla(self, shape):
+        # two live-outs from one cluster: a single flattened kernel writes
+        # both refs instead of splitting the cluster
+        eng = disc_compile(_ew_multi,
+                           [ArgSpec(("B", "D")), ArgSpec(("B", "D"))],
+                           backend="pallas")
+        before = _counters()
+        rng = np.random.RandomState(1)
+        x = rng.randn(*shape).astype(np.float32)
+        y = rng.randn(*shape).astype(np.float32)
+        got = eng(x, y)
+        want = _ew_multi(jnp.asarray(x), jnp.asarray(y))
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-5, atol=1e-6)
+        _assert_ran_fused(before, "kLoop")
 
     @pytest.mark.parametrize("shape", [(8, 32), (3, 17)])
     def test_reduce_matches_xla(self, shape):
         eng = disc_compile(_reduce_chain, [ArgSpec(("B", "S"))],
-                         backend="pallas")
+                           backend="pallas")
+        before = _counters()
         rng = np.random.RandomState(1)
         x = rng.randn(*shape).astype(np.float32)
         np.testing.assert_allclose(np.asarray(eng(x)),
                                    np.asarray(_reduce_chain(jnp.asarray(x))),
                                    rtol=1e-5, atol=1e-5)
+        _assert_ran_fused(before, "kInput")
+
+    @pytest.mark.parametrize("shape", [(5, 9), (12, 40)])
+    def test_axis0_reduce_matches_xla(self, shape):
+        # exp taints the padded region of BOTH axes; reducing axis 0 must
+        # mask with the actual row count after the transpose normalization
+        eng = disc_compile(_reduce_axis0, [ArgSpec(("B", "S"))],
+                           backend="pallas")
+        before = _counters()
+        rng = np.random.RandomState(2)
+        x = rng.randn(*shape).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(eng(x)),
+                                   np.asarray(_reduce_axis0(jnp.asarray(x))),
+                                   rtol=1e-5, atol=1e-5)
+        _assert_ran_fused(before, "kInput")
+
+    @pytest.mark.parametrize("shape", [(3, 11, 4), (6, 23, 4)])
+    def test_middle_axis_reduce_matches_xla(self, shape):
+        eng = disc_compile(_reduce_mid, [ArgSpec(("B", "S", 4))],
+                           backend="pallas")
+        before = _counters()
+        rng = np.random.RandomState(3)
+        x = rng.randn(*shape).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(eng(x)),
+                                   np.asarray(_reduce_mid(jnp.asarray(x))),
+                                   rtol=1e-5, atol=1e-5)
+        _assert_ran_fused(before, "kInput")
+
+    @pytest.mark.parametrize("b", [5, 21])
+    def test_dot_bias_gelu_matches_xla(self, b):
+        # bias broadcast is hoisted to the prologue; gelu's elementwise
+        # expansion runs on the accumulator tiles at the final K step
+        eng = disc_compile(_dot_bias_gelu,
+                           [ArgSpec(("B", 16)), ArgSpec((16, 8)),
+                            ArgSpec((8,))],
+                           backend="pallas")
+        before = _counters()
+        rng = np.random.RandomState(4)
+        x = rng.randn(b, 16).astype(np.float32)
+        w = rng.randn(16, 8).astype(np.float32)
+        bias = rng.randn(8).astype(np.float32)
+        np.testing.assert_allclose(
+            np.asarray(eng(x, w, bias)),
+            np.asarray(_dot_bias_gelu(jnp.asarray(x), jnp.asarray(w),
+                                      jnp.asarray(bias))),
+            rtol=1e-4, atol=1e-5)
+        _assert_ran_fused(before, "kDot")
+
+    @pytest.mark.parametrize("b", [6, 13])
+    def test_dot_residual_multi_output_matches_xla(self, b):
+        # residual extra streamed as (M, N) tiles + TWO kernel outputs
+        eng = disc_compile(_dot_residual_multi,
+                           [ArgSpec(("B", 16)), ArgSpec((16, 8)),
+                            ArgSpec(("B", 8))],
+                           backend="pallas")
+        before = _counters()
+        rng = np.random.RandomState(5)
+        x = rng.randn(b, 16).astype(np.float32)
+        w = rng.randn(16, 8).astype(np.float32)
+        r = rng.randn(b, 8).astype(np.float32)
+        got = eng(x, w, r)
+        want = _dot_residual_multi(jnp.asarray(x), jnp.asarray(w),
+                                   jnp.asarray(r))
+        for g, w_ in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w_),
+                                       rtol=1e-4, atol=1e-5)
+        _assert_ran_fused(before, "kDot")
+
+    def test_dynamic_k_is_masked(self):
+        # dynamic contraction dim: padded-K garbage from an upstream
+        # cluster must not leak into the accumulator
+        def f(x, w):
+            return jnp.tanh(jnp.exp(x) @ w) * 2.0
+
+        eng = disc_compile(f, [ArgSpec(("B", "K")), ArgSpec(("K", 8))],
+                           backend="pallas")
+        for b, k in [(3, 5), (6, 21)]:
+            rng = np.random.RandomState(k)
+            x = rng.randn(b, k).astype(np.float32)
+            w = rng.randn(k, 8).astype(np.float32)
+            np.testing.assert_allclose(
+                np.asarray(eng(x, w)),
+                np.asarray(f(jnp.asarray(x), jnp.asarray(w))),
+                rtol=1e-4, atol=1e-5)
 
     def test_mixed_graph_with_matmul(self):
         def f(x, w):
-            h = jnp.tanh(x) * 2.0 + jnp.abs(x)      # pallas cluster
-            z = h @ w                                # xla (library)
-            return jax.nn.sigmoid(z) * z             # pallas cluster
+            h = jnp.tanh(x) * 2.0 + jnp.abs(x)      # kLoop cluster
+            z = h @ w                                # kDot root
+            return jax.nn.sigmoid(z) * z             # ... with epilogue
 
         eng = disc_compile(f, [ArgSpec(("B", 16)), ArgSpec((16, 8))],
-                         backend="pallas")
+                           backend="pallas")
         rng = np.random.RandomState(2)
         x = rng.randn(5, 16).astype(np.float32)
         w = rng.randn(16, 8).astype(np.float32)
@@ -82,11 +261,26 @@ class TestPallasBackendCorrectness:
             np.asarray(f(jnp.asarray(x), jnp.asarray(w))),
             rtol=1e-4, atol=1e-5)
 
+    def test_interleaved_cluster_order(self):
+        # the elementwise cluster here consumes the reduce cluster's
+        # output although its first op (tanh) traces earlier — clusters
+        # must execute in cluster-DAG topological order, not first-op
+        # order (regression: KeyError "undefined value" at lowering)
+        def f(x):
+            return jnp.tanh(x) * (x * x).sum(axis=-1)[:, None] + jnp.tanh(x)
+
+        eng = disc_compile(f, [ArgSpec(("B", 8))], backend="pallas")
+        rng = np.random.RandomState(7)
+        x = rng.randn(5, 8).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(eng(x)),
+                                   np.asarray(f(jnp.asarray(x))),
+                                   rtol=1e-5, atol=1e-5)
+
     def test_dynamic_shapes_masked(self):
         # tainted padded region (exp) feeding a reduce: the Pallas kInput
         # kernel must mask with the actual column count
         eng = disc_compile(_reduce_chain, [ArgSpec(("B", "S"))],
-                        backend="pallas")
+                           backend="pallas")
         for b, s in [(3, 5), (6, 21), (2, 40)]:
             rng = np.random.RandomState(s)
             x = rng.randn(b, s).astype(np.float32)
@@ -94,3 +288,71 @@ class TestPallasBackendCorrectness:
                 np.asarray(eng(x)),
                 np.asarray(_reduce_chain(jnp.asarray(x))),
                 rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------- docs --
+
+_DOCS = pathlib.Path(__file__).resolve().parent.parent / "docs" / "backends.md"
+
+# one example per coverage-table row: case key -> (fn, specs)
+_COVERAGE_EXAMPLES = {
+    "elementwise chain, one output":
+        (_ew_chain, [ArgSpec(("B", "D")), ArgSpec(("B", "D"))]),
+    "elementwise chain, multiple outputs":
+        (_ew_multi, [ArgSpec(("B", "D")), ArgSpec(("B", "D"))]),
+    "elementwise chain with broadcast bias":
+        (lambda x, b: jnp.tanh(x + b) * 2.0,
+         [ArgSpec(("B", 8)), ArgSpec((8,))]),
+    "last-axis reduce with elementwise producers":
+        (_reduce_chain, [ArgSpec(("B", "S"))]),
+    "non-last single-axis reduce":
+        (_reduce_axis0, [ArgSpec(("B", "S"))]),
+    "multi-axis reduce":
+        (lambda x: jnp.exp(x).sum(), [ArgSpec(("B", "S"))]),
+    "2-D dot_general with elementwise epilogue":
+        (_dot_bias_gelu, [ArgSpec(("B", 16)), ArgSpec((16, 8)),
+                          ArgSpec((8,))]),
+    "batched dot_general with epilogue":
+        (lambda x, w: jnp.tanh(jnp.einsum("bmk,bkn->bmn", x, w)),
+         [ArgSpec(("B", 4, 8)), ArgSpec(("B", 8, 4))]),
+    "sort / gather clusters":
+        (lambda x: jnp.sort(x, axis=-1) * 2.0, [ArgSpec(("B", 8))]),
+    "single-op clusters":
+        (lambda x: jnp.tanh(x), [ArgSpec(("B", 8))]),
+}
+
+
+def _parse_coverage_table(text):
+    """Rows between the coverage markers: case -> (template, fused)."""
+    m = re.search(r"<!-- coverage:begin -->(.*?)<!-- coverage:end -->",
+                  text, re.S)
+    assert m, "docs/backends.md lost its coverage markers"
+    rows = {}
+    for line in m.group(1).splitlines():
+        cells = [c.strip() for c in line.strip().strip("|").split("|")]
+        if len(cells) != 3 or cells[0] in ("case", "") or \
+                set(cells[1]) <= {"-"}:
+            continue
+        rows[cells[0]] = (cells[1], cells[2])
+    return rows
+
+
+class TestDocsCoverageTable:
+    def test_table_matches_fusion_plan(self):
+        doc_rows = _parse_coverage_table(_DOCS.read_text())
+        assert set(doc_rows) == set(_COVERAGE_EXAMPLES), (
+            "docs/backends.md coverage table rows and the test registry "
+            "diverged")
+        registered = set(_pallas_kernels())
+        for case, (fn, specs) in _COVERAGE_EXAMPLES.items():
+            g, _ = bridge(fn, specs)
+            counts = plan_fusion(g).template_counts()
+            actual_template = next(iter(counts), "—")
+            actual_fused = "yes" if (counts and
+                                     set(counts) <= registered) else "no"
+            doc_template, doc_fused = doc_rows[case]
+            assert (doc_template, doc_fused) == \
+                (actual_template, actual_fused), (
+                f"docs/backends.md row {case!r} says "
+                f"({doc_template}, {doc_fused}) but the fusion plan says "
+                f"({actual_template}, {actual_fused}) — update the docs")

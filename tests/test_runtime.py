@@ -185,9 +185,24 @@ class TestFusionPlan:
         kinds = [c.kind for c in plan.clusters if len(c.ops) > 1]
         assert kinds == ["input"]
 
-    def test_dot_never_fused_into_loop(self):
+    def test_dot_absorbs_elementwise_epilogue(self):
+        # a dot_general fuses its elementwise consumer into a kDot cluster
+        # (§4.3 epilogue fusion) — but never into a plain loop cluster
         def f(x, w):
             return jnp.tanh(x @ w)
+
+        g, _ = bridge(f, [ArgSpec(("B", 8)), ArgSpec((8, 8))])
+        plan = plan_fusion(g)
+        (dc,) = [c for c in plan.clusters
+                 if any(op.opcode == "dot_general" for op in c.ops)]
+        assert dc.kind == "dot" and dc.template == "kDot"
+        assert all(c.kind != "loop" or
+                   not any(op.opcode == "dot_general" for op in c.ops)
+                   for c in plan.clusters)
+
+    def test_bare_dot_stays_library_call(self):
+        def f(x, w):
+            return x @ w
 
         g, _ = bridge(f, [ArgSpec(("B", 8)), ArgSpec((8, 8))])
         plan = plan_fusion(g)
