@@ -16,8 +16,8 @@ import time
 from typing import List
 
 from . import (bench_buffers, bench_compile_overhead, bench_fig3_frameworks,
-               bench_fig4_static_gap, bench_roofline, bench_table2_nimble,
-               bench_table3_kernels)
+               bench_fig4_static_gap, bench_roofline, bench_serve,
+               bench_table2_nimble, bench_table3_kernels)
 
 SUITES = {
     "fig3": bench_fig3_frameworks.main,
@@ -27,6 +27,7 @@ SUITES = {
     "compile": bench_compile_overhead.main,
     "buffers": bench_buffers.main,
     "roofline": bench_roofline.main,
+    "serve": bench_serve.main,
 }
 
 

@@ -20,6 +20,7 @@ from repro.api import (  # noqa: F401
     Lowered,
     NimbleVM,
     POW2,
+    TreeSpec,
     UnknownBackendError,
     bridge,
     compile,

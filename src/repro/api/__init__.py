@@ -34,14 +34,14 @@ from .backends import (  # noqa: F401
     list_backends,
     register_backend,
 )
-from .options import CompileOptions, Dim  # noqa: F401
+from .options import CompileOptions, Dim, TreeSpec  # noqa: F401
 from .staged import Compiled, CompiledFunction, Lowered, compile, infer_specs  # noqa: F401
 
 __all__ = [
     # staged pipeline
     "compile", "CompiledFunction", "Lowered", "Compiled", "infer_specs",
     # options
-    "CompileOptions", "Dim", "ArgSpec",
+    "CompileOptions", "Dim", "TreeSpec", "ArgSpec",
     # backends
     "Backend", "register_backend", "get_backend", "list_backends",
     "UnknownBackendError",
@@ -50,6 +50,7 @@ __all__ = [
     "CacheStats",
     # baselines & serving
     "NimbleVM", "bridge", "ServeEngine", "ServeConfig",
+    "ADMISSION_POLICIES",
 ]
 
 
@@ -59,4 +60,7 @@ def __getattr__(name):
     if name in ("ServeEngine", "ServeConfig"):
         from ..serve.engine import ServeConfig, ServeEngine
         return {"ServeEngine": ServeEngine, "ServeConfig": ServeConfig}[name]
+    if name == "ADMISSION_POLICIES":
+        from ..serve.policies import ADMISSION_POLICIES
+        return ADMISSION_POLICIES
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -17,9 +17,9 @@ import jax.numpy as jnp
 
 from ..core.bucketing import BucketPolicy, POW2
 from ..core.cache import CompileCache
-from ..frontends.jaxpr_frontend import ArgSpec
+from ..frontends.jaxpr_frontend import ArgSpec, TreeSpec
 
-__all__ = ["Dim", "CompileOptions", "normalize_specs"]
+__all__ = ["Dim", "TreeSpec", "CompileOptions", "normalize_specs"]
 
 
 @dataclass(frozen=True)
@@ -68,7 +68,7 @@ class Dim:
 
 
 DimLike = Union[int, str, Dim]
-SpecLike = Union[ArgSpec, Tuple[DimLike, ...], None]
+SpecLike = Union[ArgSpec, TreeSpec, Tuple[DimLike, ...], None]
 
 
 @dataclass(frozen=True)
@@ -145,19 +145,41 @@ def normalize_specs(specs: Optional[Sequence[SpecLike]],
     """Normalize user-facing specs into ``ArgSpec``s + the ``Dim``s found.
 
     Accepts per argument: an :class:`ArgSpec`, a bare shape tuple whose
-    entries are ints / symbol-name strings / :class:`Dim` objects, or
-    ``None`` (pass-through argument — only meaningful for the ``"jit"``
-    pipeline).  Returns ``(normalized, dims)``; ``normalized`` is ``None``
-    when ``specs`` is ``None`` (defer to first-call inference).
+    entries are ints / symbol-name strings / :class:`Dim` objects, a
+    :class:`TreeSpec` (pytree whose leaves share bucketed axes — jit
+    pipeline only), or ``None`` (pass-through argument — only meaningful
+    for the ``"jit"`` pipeline).  Returns ``(normalized, dims)``;
+    ``normalized`` is ``None`` when ``specs`` is ``None`` (defer to
+    first-call inference).
     """
     if specs is None:
         return None, ()
     dims: dict = {}
     explicit: set = set()  # names declared via a Dim object (vs bare string)
+
+    def register(d: Union[str, Dim]) -> str:
+        """Record one symbolic-dim occurrence; returns its name."""
+        if isinstance(d, Dim):
+            # only two *explicit* contracts can conflict — a bare string
+            # occurrence of the same name just references this Dim
+            if d.name in explicit and dims[d.name] != d:
+                raise ValueError(
+                    f"Dim {d.name!r} declared twice with different "
+                    f"contracts: {dims[d.name]} vs {d}")
+            dims[d.name] = d
+            explicit.add(d.name)
+            return d.name
+        dims.setdefault(d, Dim(d))
+        return d
+
     out = []
     for spec in specs:
         if spec is None:
             out.append(None)
+            continue
+        if isinstance(spec, TreeSpec):
+            out.append(TreeSpec(tuple(
+                (axis, register(d)) for axis, d in spec.axes)))
             continue
         if isinstance(spec, ArgSpec):
             shape, dtype, name = spec.shape, spec.dtype, spec.name
@@ -174,19 +196,8 @@ def normalize_specs(specs: Optional[Sequence[SpecLike]],
                 f"tuple, (shape, dtype[, name]) or None")
         norm_shape = []
         for d in shape:
-            if isinstance(d, Dim):
-                # only two *explicit* contracts can conflict — a bare string
-                # occurrence of the same name just references this Dim
-                if d.name in explicit and dims[d.name] != d:
-                    raise ValueError(
-                        f"Dim {d.name!r} declared twice with different "
-                        f"contracts: {dims[d.name]} vs {d}")
-                dims[d.name] = d
-                explicit.add(d.name)
-                norm_shape.append(d.name)
-            elif isinstance(d, str):
-                dims.setdefault(d, Dim(d))
-                norm_shape.append(d)
+            if isinstance(d, (Dim, str)):
+                norm_shape.append(register(d))
             else:
                 norm_shape.append(int(d))
         out.append(ArgSpec(tuple(norm_shape), dtype, name))

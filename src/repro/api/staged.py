@@ -46,7 +46,7 @@ from ..core.cache import CompileCache
 from ..core.codegen import dyn_symbols
 from ..core.dispatcher import dhlo_lens, generate_dispatch, jit_lens
 from ..core.symshape import SymDim
-from ..frontends.jaxpr_frontend import ArgSpec, bridge
+from ..frontends.jaxpr_frontend import ArgSpec, TreeSpec, bridge
 from .backends import get_backend
 from .options import CompileOptions, Dim, normalize_specs
 
@@ -162,8 +162,14 @@ class Lowered:
         # artifact by the *function* (code + closure + bound self) plus the
         # spec signature, so distinct functions sharing one CompileCache
         # can never hit each other's entries
-        sig = repr([(None if s is None else (s.shape, str(np.dtype(s.dtype))))
-                    for s in self.specs])
+        def _sig(s):
+            if s is None:
+                return None
+            if isinstance(s, TreeSpec):
+                return ("tree", s.axes)
+            return (s.shape, str(np.dtype(s.dtype)))
+
+        sig = repr([_sig(s) for s in self.specs])
         h = hashlib.sha1((sig + "\x00" + _fn_token(self.fn)).encode())
         return f"jit:{self.options.name}:{h.hexdigest()[:16]}"
 
@@ -208,18 +214,20 @@ def _lower(fn: Callable, specs: Sequence[Optional[ArgSpec]],
         for s in specs:
             if s is None:
                 continue
-            for d in s.shape:
-                if isinstance(d, str) and d not in sym_names:
+            names = ([d for _, d in s.axes] if isinstance(s, TreeSpec)
+                     else [d for d in s.shape if isinstance(d, str)])
+            for d in names:
+                if d not in sym_names:
                     sym_names.append(d)
         return Lowered(fn=fn, specs=tuple(specs), options=options,
                        policy=policy, pipeline="jit",
                        sym_names=tuple(sym_names))
 
-    if any(s is None for s in specs):
+    if any(not isinstance(s, ArgSpec) for s in specs):
         raise ValueError(
             "the 'dhlo' pipeline needs an ArgSpec for every argument "
-            "(None pass-through specs are only supported by "
-            "CompileOptions(pipeline='jit'))")
+            "(None pass-through and TreeSpec pytree specs are only "
+            "supported by CompileOptions(pipeline='jit'))")
     from ..core.fusion import plan_fusion
     from ..core.placer import place
     from ..core.buffers import plan_buffers

@@ -45,7 +45,7 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
 
 import numpy as np
 
-from ..frontends.jaxpr_frontend import eval_dim
+from ..frontends.jaxpr_frontend import TreeSpec, eval_dim
 from .bucketing import BucketPolicy
 from .cache import CompileCache
 from .dhlo import DGraph
@@ -73,10 +73,17 @@ class ArgPlan:
     the symbol's bucket).  ``shape=None`` — or a shape with no dynamic
     axis — marks a pass-through argument (e.g. pytrees in the jit
     pipeline): it reaches the entry untouched, with no host copy.
+
+    ``tree_axes`` marks a *pytree* argument instead (jit-pipeline
+    :class:`~repro.frontends.jaxpr_frontend.TreeSpec`): every array leaf
+    is zero-padded along each ``(axis, sym)`` pair to the symbol's
+    bucket, device-side.  Such an argument contributes no extraction
+    sites or tie guards — a pytree has no single shape to observe.
     """
 
     shape: Optional[Tuple[Union[int, DynAxis], ...]] = None
     dtype: Any = None
+    tree_axes: Optional[Tuple[Tuple[int, int], ...]] = None
 
     @property
     def dynamic(self) -> bool:
@@ -165,8 +172,9 @@ def dhlo_lens(graph: DGraph, syms: Sequence[SymDim]) -> DispatchLens:
 def jit_lens(specs: Sequence[Any], sym_names: Sequence[str],
              name: str = "disc") -> DispatchLens:
     """View a spec signature (``pipeline="jit"``) through the emitter's
-    lens: string dims are the symbols, ``None`` specs pass through, and
-    outputs need no recovery (the function is lens-aware)."""
+    lens: string dims are the symbols, ``None`` specs pass through,
+    ``TreeSpec`` pytrees are leaf-padded, and outputs need no recovery
+    (the function is lens-aware)."""
     sym_names = list(sym_names)
     sym_index = {n: i for i, n in enumerate(sym_names)}
     sites: List[List[Tuple[int, int]]] = [[] for _ in sym_names]
@@ -174,6 +182,10 @@ def jit_lens(specs: Sequence[Any], sym_names: Sequence[str],
     for ai, spec in enumerate(specs):
         if spec is None:
             args.append(ArgPlan())
+            continue
+        if isinstance(spec, TreeSpec):
+            args.append(ArgPlan(tree_axes=tuple(
+                (axis, sym_index[d]) for axis, d in spec.axes)))
             continue
         shape: List[Union[int, DynAxis]] = []
         for ax, d in enumerate(spec.shape):
@@ -219,6 +231,34 @@ def _tie_error(name: str, site_a: Tuple[int, int], va: int,
 
 def _cap_error(name: str, value: int, cap: int):
     raise ValueError(f"dim {name}={value} exceeds its declared max={cap}")
+
+
+def _tree_padder(tree_axes: Tuple[Tuple[int, int], ...]) -> Callable:
+    """Bucket-pad every array leaf of a pytree argument (``TreeSpec``).
+
+    Runs device-side (``jnp.pad``): the leaves are typically resident
+    device arrays (e.g. gathered KV-cache rows) and a host round-trip per
+    call would dwarf the padding itself.
+    """
+    def pad(tree, key):
+        import jax
+        import jax.numpy as jnp
+
+        def pad_leaf(x):
+            shape = getattr(x, "shape", None)
+            if shape is None:
+                return x
+            widths = None
+            for axis, sym in tree_axes:
+                if axis < len(shape) and shape[axis] < key[sym]:
+                    if widths is None:
+                        widths = [(0, 0)] * len(shape)
+                    widths[axis] = (0, key[sym] - shape[axis])
+            return x if widths is None else jnp.pad(x, widths)
+
+        return jax.tree.map(pad_leaf, tree)
+
+    return pad
 
 
 # --------------------------------------------------------------- emitter --
@@ -337,6 +377,12 @@ def generate_dispatch(
     # --- padding plan: unrolled per argument (host-side zero-fill) -----
     call_args: List[str] = []
     for ai, ap in enumerate(lens.args):
+        if ap.tree_axes:
+            # pytree argument (TreeSpec): leaf-pad to the bucket key
+            w(f"    x{ai} = _padtree{ai}(arrays[{ai}], key)")
+            ns[f"_padtree{ai}"] = _tree_padder(ap.tree_axes)
+            call_args.append(f"x{ai}")
+            continue
         if not ap.dynamic:
             call_args.append(f"arrays[{ai}]")
             continue

@@ -14,7 +14,8 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["SyntheticLMStream", "VarLenRequestStream", "pack_sequences"]
+__all__ = ["SyntheticLMStream", "VarLenRequestStream", "Request",
+           "pack_sequences"]
 
 
 class SyntheticLMStream:
@@ -66,6 +67,11 @@ class Request:
     rid: int
     tokens: np.ndarray          # (prompt_len,)
     max_new_tokens: int
+    # serve-path scheduling metadata: higher priority admits first under
+    # the "priority" admission policy; arrival is the request's offset (in
+    # seconds) into a synthetic trace (0.0 = available immediately)
+    priority: int = 0
+    arrival: float = 0.0
 
 
 class VarLenRequestStream:
@@ -93,9 +99,26 @@ class VarLenRequestStream:
                 ln = int(rng.randint(self.min_len, self.max_len + 1))
             toks = rng.randint(0, self.vocab, size=ln).astype(np.int32)
             out.append(Request(rid=self._next_rid, tokens=toks,
-                               max_new_tokens=int(rng.randint(4, 64))))
+                               max_new_tokens=int(rng.randint(4, 64)),
+                               priority=int(rng.randint(0, 4))))
             self._next_rid += 1
         return out
+
+    def sample_trace(self, n: int, *, burst: int = 4,
+                     mean_gap: float = 0.05) -> List[Request]:
+        """A bursty arrival trace: requests land in bursts of ``burst``
+        separated by exponential gaps with mean ``mean_gap`` seconds —
+        the serve benchmark's synthetic heavy-traffic workload.
+        Deterministic in (seed, cursor), like :meth:`sample`."""
+        reqs = self.sample(n)
+        t = 0.0
+        for i, r in enumerate(reqs):
+            if i and i % burst == 0:
+                rng = np.random.RandomState(
+                    (self.seed * 13_131_313 + r.rid) % 2**31)
+                t += float(rng.exponential(mean_gap))
+            r.arrival = t
+        return reqs
 
 
 def pack_sequences(seqs: List[np.ndarray], seq_len: int,

@@ -40,7 +40,7 @@ from ..core.dhlo import DGraph, DOp, DValue
 from ..core.propagation import collect_semantic_constraints
 from ..core.symshape import Dim, SymDim, SymShape, dim_value, fresh_symdim
 
-__all__ = ["ArgSpec", "bridge", "eval_dim"]
+__all__ = ["ArgSpec", "TreeSpec", "bridge", "eval_dim"]
 
 
 @dataclass(frozen=True)
@@ -50,6 +50,35 @@ class ArgSpec:
     shape: Tuple[Union[int, str], ...]
     dtype: Any = jnp.float32
     name: str = ""
+
+
+class TreeSpec:
+    """Spec for a pytree argument whose array leaves share bucketed axes
+    (``pipeline="jit"`` only).
+
+    ``axes`` maps a leaf axis index to a symbolic dim (a name string, or a
+    ``Dim`` at the public-API layer): the generated dispatch zero-pads
+    every array leaf of the argument along those axes to the dim's current
+    bucket.  The dim itself must also be declared on some :class:`ArgSpec`
+    argument — a pytree has no single ``.shape`` to extract the symbol
+    from.  The serving engine uses this to thread a gathered batch of
+    KV-cache rows (a params-shaped pytree) through a ``Dim("B")``-bucketed
+    prefill artifact.
+    """
+
+    def __init__(self, axes):
+        items = sorted(axes.items()) if isinstance(axes, dict) else list(axes)
+        self.axes: Tuple[Tuple[int, Any], ...] = tuple(
+            (int(a), d) for a, d in items)
+
+    def __repr__(self) -> str:
+        return f"TreeSpec({dict(self.axes)!r})"
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, TreeSpec) and self.axes == other.axes
+
+    def __hash__(self) -> int:
+        return hash(self.axes)
 
 
 # representative primes for symbols — chosen to avoid common static dims

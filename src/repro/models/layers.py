@@ -134,6 +134,16 @@ def _pick_chunk(s: int, prefer: int = 1024) -> int:
     return 1
 
 
+def _q_positions(sq: int, q_offset) -> jax.Array:
+    """Absolute query positions (1|B, Sq): ``q_offset`` is a scalar or a
+    per-row (B,) vector of cache offsets (batched prefill)."""
+    off = jnp.asarray(q_offset)
+    base = jnp.arange(sq)
+    if off.ndim == 0:
+        return (base + off)[None, :]
+    return off[:, None] + base[None, :]
+
+
 def _sdpa_chunked(q, k, v, *, causal: bool, lens, q_offset,
                   scale: Optional[float] = None) -> jax.Array:
     """FlashAttention-style online-softmax in pure jnp (XLA path).
@@ -157,7 +167,7 @@ def _sdpa_chunked(q, k, v, *, causal: bool, lens, q_offset,
 
     def q_step(_, iq):
         qi = jax.lax.dynamic_index_in_dim(qf, iq, axis=3, keepdims=False)
-        q_idx = (iq * qc + jnp.arange(qc) + q_offset)[None, None, None, :, None]
+        q_idx = (_q_positions(qc, q_offset) + iq * qc)[:, None, None, :, None]
 
         def k_step(carry, ik):
             # NOTE (§Perf H2 iter2, REFUTED): casting these einsum operands
@@ -214,7 +224,7 @@ def _sdpa(q, k, v, *, causal: bool, lens: Optional[jax.Array],
     if lens is not None:
         s = jnp.where(k_idx < lens[:, None, None, None, None], s, neg)
     if causal:
-        q_idx = (jnp.arange(sq) + q_offset)[None, None, None, :, None]
+        q_idx = _q_positions(sq, q_offset)[:, None, None, :, None]
         s = jnp.where(k_idx <= q_idx, s, neg)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bgnqk,bgkd->bgnqd", p, v.astype(jnp.float32))
@@ -224,8 +234,16 @@ def _sdpa(q, k, v, *, causal: bool, lens: Optional[jax.Array],
 def attn_apply(cfg: ArchConfig, p: Params, x: jax.Array, *,
                positions: jax.Array, lens: Optional[jax.Array] = None,
                cache: Optional[Params] = None, causal: bool = True,
-               kv_source: Optional[jax.Array] = None):
+               kv_source: Optional[jax.Array] = None,
+               offsets: Optional[jax.Array] = None):
     """Full attention; ``cache`` switches to decode mode (x is (B,1,D)).
+
+    ``cache`` + ``offsets`` switches to *batched prefill* mode instead
+    (serve path): x is a (B, S, D) chunk whose row r holds ``lens[r]``
+    true tokens destined for absolute cache positions
+    ``[offsets[r], offsets[r] + lens[r])``; the chunk's K/V are scattered
+    into the cache in one pass and queries attend causally against the
+    whole cache at absolute positions.
 
     ``kv_source`` enables cross-attention (whisper decoder)."""
     b, s, d = x.shape
@@ -243,7 +261,25 @@ def attn_apply(cfg: ArchConfig, p: Params, x: jax.Array, *,
     k = k.transpose(0, 2, 1, 3)
     v = v.transpose(0, 2, 1, 3)
     new_cache = None
-    if cache is not None:
+    if cache is not None and offsets is not None:
+        # batched prefill: scatter the chunk's K/V to absolute positions
+        # [offset, offset+len) per row — padded chunk positions are never
+        # written — then attend causally against the whole cache
+        kc, vc = cache["k"], cache["v"]
+        lc = kc.shape[2]
+        j = jnp.arange(lc)[None, :] - offsets[:, None]          # (B, Lc)
+        written = (j >= 0) & (j < lens[:, None])
+        jc = jnp.clip(j, 0, s - 1)
+        idx = jnp.broadcast_to(jc[:, None, :, None], (b, hkv, lc, hd))
+        wmask = written[:, None, :, None]
+        kc = jnp.where(wmask, jnp.take_along_axis(k, idx, axis=2)
+                       .astype(kc.dtype), kc)
+        vc = jnp.where(wmask, jnp.take_along_axis(v, idx, axis=2)
+                       .astype(vc.dtype), vc)
+        new_cache = {"k": kc, "v": vc}
+        o = _sdpa(q, kc.astype(q.dtype), vc.astype(q.dtype), causal=True,
+                  lens=None, q_offset=offsets)
+    elif cache is not None:
         # decode: append to cache at position lens (per batch row)
         kc, vc = cache["k"], cache["v"]
         idx = lens[:, None, None, None]  # (B,1,1,1) write position
@@ -304,8 +340,15 @@ def mla_specs(cfg: ArchConfig) -> Params:
 
 
 def mla_apply(cfg: ArchConfig, p: Params, x: jax.Array, *,
-              positions: jax.Array, lens=None, cache=None):
-    """Multi-head latent attention: cache holds the 512-d compressed kv."""
+              positions: jax.Array, lens=None, cache=None,
+              offsets: Optional[jax.Array] = None):
+    """Multi-head latent attention: cache holds the 512-d compressed kv.
+
+    ``cache`` + ``offsets`` is batched prefill mode (see
+    :func:`attn_apply`): the chunk's compressed K/V are scattered to
+    absolute cache positions and queries attend causally at absolute
+    positions through the expansion path (never the absorbed-decode
+    shortcut)."""
     b, s, d = x.shape
     h, hd, rdim = cfg.n_heads, cfg.hd, cfg.mla_rope_dim
     q = (x @ p["wq"]).reshape(b, s, h, hd + rdim)
@@ -317,7 +360,27 @@ def mla_apply(cfg: ArchConfig, p: Params, x: jax.Array, *,
     k_pe = apply_rope(k_pe, cos, sin)
     k_pe = k_pe[..., 0, :]                      # (B,S,rdim)
     new_cache = None
-    if cache is not None:
+    if cache is not None and offsets is not None:
+        # batched prefill: scatter the chunk's compressed K/V to absolute
+        # positions [offset, offset+len) per row (padded positions are
+        # never written), then attend causally at absolute positions
+        lc = cache["kv_c"].shape[1]
+        j = jnp.arange(lc)[None, :] - offsets[:, None]          # (B, Lc)
+        written = ((j >= 0) & (j < lens[:, None]))[:, :, None]
+        jc = jnp.clip(j, 0, s - 1)
+        kv_al = jnp.take_along_axis(
+            kv_c, jnp.broadcast_to(jc[:, :, None], (b, lc, kv_c.shape[-1])),
+            axis=1)
+        kpe_al = jnp.take_along_axis(
+            k_pe, jnp.broadcast_to(jc[:, :, None], (b, lc, rdim)), axis=1)
+        kv_all = jnp.where(written, kv_al.astype(cache["kv_c"].dtype),
+                           cache["kv_c"])
+        kpe_all = jnp.where(written, kpe_al.astype(cache["k_pe"].dtype),
+                            cache["k_pe"])
+        new_cache = {"kv_c": kv_all, "k_pe": kpe_all}
+        eff_lens = None
+        causal = True
+    elif cache is not None:
         pos = jnp.arange(cache["kv_c"].shape[1])[None, :, None]
         write = pos == lens[:, None, None]
         kv_all = jnp.where(write, kv_c.astype(cache["kv_c"].dtype),
@@ -331,7 +394,8 @@ def mla_apply(cfg: ArchConfig, p: Params, x: jax.Array, *,
         kv_all, kpe_all = kv_c, k_pe
         eff_lens = lens
         causal = True
-    if cache is not None and s == 1 and MLA_ABSORBED_DECODE:
+    if cache is not None and offsets is None and s == 1 \
+            and MLA_ABSORBED_DECODE:
         # §Perf H3: ABSORBED decode — W_uk folds into the query and W_uv
         # into the output, so attention runs directly against the 512-d
         # latent cache; the (B, S, H, hd) K/V expansion never exists.
@@ -373,9 +437,10 @@ def mla_apply(cfg: ArchConfig, p: Params, x: jax.Array, *,
     k_eff = k_eff.transpose(0, 2, 1, 3)
     v_t = v.transpose(0, 2, 1, 3)
     scale = 1.0 / math.sqrt(hd + rdim)
+    q_off = 0 if offsets is None else offsets
     if s >= _CHUNK_THRESHOLD or sk > 4 * _CHUNK_THRESHOLD:
         o = _sdpa_chunked(q_eff, k_eff, v_t, causal=causal, lens=eff_lens,
-                          q_offset=0, scale=scale)
+                          q_offset=q_off, scale=scale)
     else:
         sc = jnp.einsum("bhqd,bhkd->bhqk", q_eff.astype(jnp.float32),
                         k_eff.astype(jnp.float32)) * scale
@@ -384,7 +449,7 @@ def mla_apply(cfg: ArchConfig, p: Params, x: jax.Array, *,
         if eff_lens is not None:
             sc = jnp.where(k_idx < eff_lens[:, None, None, None], sc, neg)
         if causal:
-            q_idx = jnp.arange(s)[None, None, :, None]
+            q_idx = _q_positions(s, q_off)[:, None, :, None]
             sc = jnp.where(k_idx <= q_idx, sc, neg)
         prob = jax.nn.softmax(sc, axis=-1)
         o = jnp.einsum("bhqk,bhkd->bhqd", prob,

@@ -5,6 +5,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
 import jax
+import jax.numpy as jnp
 
 from . import rwkv, transformer, whisper, zamba
 from .common import ArchConfig
@@ -22,6 +23,60 @@ class Model:
     init_cache: Callable      # (batch, max_len) -> cache
     cache_specs: Callable     # () -> PartitionSpec tree
     decode_step: Callable     # (params, cache, tokens, lens, **kw) -> (logits, cache)
+    prefill: Callable         # (params, cache, tokens, lens, offsets) -> (last_logits, cache)
+
+
+def row_keep_mask(keep: jax.Array, leaf: jax.Array) -> jax.Array:
+    """Broadcast a per-row mask (B,) against a cache leaf.
+
+    Cache leaves are layer-stacked ``(L, B, ...)`` in every model family
+    (``init_cache`` stacks per-layer trees), so the batch axis is axis 1;
+    a leaf whose axis 1 doesn't match falls back to a leading batch axis.
+    Used to gate cache updates so inactive rows (mid-prefill slots,
+    padded batch rows) are never touched by a step they didn't take.
+    """
+    b = keep.shape[0]
+    nd = len(leaf.shape)
+    if nd >= 2 and leaf.shape[1] == b:
+        return keep.reshape((1, b) + (1,) * (nd - 2))
+    if nd >= 1 and leaf.shape[0] == b:
+        return keep.reshape((b,) + (1,) * (nd - 1))
+    raise ValueError(
+        f"cache leaf of shape {tuple(leaf.shape)} has no axis matching "
+        f"batch={b}; cannot gate per-row updates")
+
+
+def replay_prefill(decode_step: Callable) -> Callable:
+    """Batched prefill by replaying the chunk through decode steps.
+
+    The fallback for model families without a native single-pass
+    ``prefill`` (recurrent caches need sequential state updates anyway) —
+    and the serve benchmark's O(prompt_len)-launches baseline.  Row
+    updates are gated by ``j < lens`` so padded chunk positions never
+    touch the cache: critical for recurrent state, which is overwritten
+    (not positionally masked) by every step.
+    """
+    def prefill(params, cache, tokens, lens, offsets):
+        b, s = tokens.shape
+
+        def step(carry, j):
+            tok = jax.lax.dynamic_slice_in_dim(tokens, j, 1, axis=1)
+            logits, new_cache = decode_step(params, carry, tok, offsets + j)
+            keep = j < lens
+            gated = jax.tree.map(
+                lambda n, o: jnp.where(row_keep_mask(keep, o),
+                                       n.astype(o.dtype), o),
+                new_cache, carry)
+            return gated, logits[:, 0]
+
+        cache, logits = jax.lax.scan(step, cache, jnp.arange(s))
+        idx = jnp.maximum(lens - 1, 0)[:, None, None]
+        last = jnp.take_along_axis(
+            logits.transpose(1, 0, 2),
+            jnp.broadcast_to(idx, (b, 1, logits.shape[-1])), axis=1)
+        return last[:, 0], cache
+
+    return prefill
 
 
 def _lm_bundle(mod, cfg: ArchConfig) -> Model:
@@ -29,6 +84,15 @@ def _lm_bundle(mod, cfg: ArchConfig) -> Model:
         return mod.forward(cfg, params, batch["tokens"],
                            lens=batch.get("lens"),
                            extra_embeds=batch.get("image_embeds"))
+
+    def decode(params, cache, tokens, lens, **kw):
+        return mod.decode_step(cfg, params, cache, tokens, lens, **kw)
+
+    if hasattr(mod, "prefill"):
+        pf = lambda params, cache, tokens, lens, offsets: \
+            mod.prefill(cfg, params, cache, tokens, lens, offsets)
+    else:
+        pf = replay_prefill(decode)
 
     return Model(
         cfg=cfg,
@@ -38,8 +102,8 @@ def _lm_bundle(mod, cfg: ArchConfig) -> Model:
         loss=lambda params, batch: mod.loss_fn(cfg, params, batch),
         init_cache=lambda b, s: mod.init_cache(cfg, b, s),
         cache_specs=lambda: mod.cache_specs(cfg),
-        decode_step=lambda params, cache, tokens, lens, **kw:
-            mod.decode_step(cfg, params, cache, tokens, lens, **kw),
+        decode_step=decode,
+        prefill=pf,
     )
 
 
@@ -49,6 +113,9 @@ def _whisper_bundle(cfg: ArchConfig) -> Model:
                                frames=batch["frames"],
                                lens=batch.get("lens"))
 
+    def decode(params, cache, tokens, lens, **kw):
+        return whisper.decode_step(cfg, params, cache, tokens, lens, **kw)
+
     return Model(
         cfg=cfg,
         init=lambda rng: whisper.init(cfg, rng),
@@ -57,8 +124,10 @@ def _whisper_bundle(cfg: ArchConfig) -> Model:
         loss=lambda params, batch: whisper.loss_fn(cfg, params, batch),
         init_cache=lambda b, s: whisper.init_cache(cfg, b, s),
         cache_specs=lambda: whisper.cache_specs(cfg),
-        decode_step=lambda params, cache, tokens, lens, **kw:
-            whisper.decode_step(cfg, params, cache, tokens, lens, **kw),
+        decode_step=decode,
+        # decoder-side replay only; callers must thread enc_out through
+        # decode_step kwargs themselves (the serve engine is LM-only)
+        prefill=replay_prefill(decode),
     )
 
 

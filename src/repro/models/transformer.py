@@ -40,14 +40,14 @@ def block_specs(cfg: ArchConfig) -> Params:
 
 
 def block_apply(cfg: ArchConfig, p: Params, x, *, positions, lens,
-                cache: Optional[Params] = None):
+                cache: Optional[Params] = None, offsets=None):
     h = L.norm_apply(cfg, p["ln1"], x)
     if cfg.mla_kv_lora:
         a, new_cache = L.mla_apply(cfg, p["attn"], h, positions=positions,
-                                   lens=lens, cache=cache)
+                                   lens=lens, cache=cache, offsets=offsets)
     else:
         a, new_cache = L.attn_apply(cfg, p["attn"], h, positions=positions,
-                                    lens=lens, cache=cache)
+                                    lens=lens, cache=cache, offsets=offsets)
     x = x + a
     h = L.norm_apply(cfg, p["ln2"], x)
     f = L.moe_apply(cfg, p["ffn"], h) if cfg.is_moe \
@@ -94,7 +94,7 @@ def specs(cfg: ArchConfig) -> Params:
 
 
 def _run_blocks(cfg: ArchConfig, blocks: Params, x, *, positions, lens,
-                caches: Optional[Params] = None):
+                caches: Optional[Params] = None, offsets=None):
     if caches is None:
         def body(h, bp):
             h2, _ = block_apply(cfg, bp, h, positions=positions, lens=lens)
@@ -107,7 +107,7 @@ def _run_blocks(cfg: ArchConfig, blocks: Params, x, *, positions, lens,
     def body(h, xs):
         bp, c = xs
         h2, c2 = block_apply(cfg, bp, h, positions=positions, lens=lens,
-                             cache=c)
+                             cache=c, offsets=offsets)
         return h2, c2
 
     x, new_caches = jax.lax.scan(body, x, (blocks, caches))
@@ -151,6 +151,31 @@ def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]):
     if batch.get("image_embeds") is not None:
         logits = logits[:, -labels.shape[1]:]
     return cross_entropy_loss(logits, labels, batch.get("mask"))
+
+
+# -------------------------------------------------------------- prefill --
+def prefill(cfg: ArchConfig, params: Params, cache: Params, tokens, lens,
+            offsets) -> Tuple[jax.Array, Params]:
+    """Single-pass batched prefill with cache offset (the serve path).
+
+    ``tokens`` (B, S) right-padded prompt chunks; ``lens`` (B,) true chunk
+    lengths; ``offsets`` (B,) current per-row cache fill (0 = fresh).  One
+    launch computes every chunk position's K/V, writes them at absolute
+    cache positions ``[offset, offset+len)``, and returns
+    ``(last_logits, new_cache)`` where ``last_logits[r]`` is the logits at
+    row r's final valid position — the head runs on that single hidden
+    state per row, never on the full (B, S, vocab) tensor.
+    """
+    x = embed_tokens(cfg, params, tokens)
+    b, s, _ = x.shape
+    positions = offsets[:, None] + jnp.arange(s)[None, :]
+    x, new_cache = _run_blocks(cfg, params["blocks"], x, positions=positions,
+                               lens=lens, caches=cache, offsets=offsets)
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    idx = jnp.maximum(lens - 1, 0)[:, None, None]
+    last = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
+    return logits_from_hidden(cfg, params, last)[:, 0], new_cache
 
 
 # --------------------------------------------------------------- decode --

@@ -1,70 +1,134 @@
-"""Serving engine: continuous batching over DISC shape buckets.
+"""Serving engine: continuous batching over 2-D DISC shape buckets.
 
 The paper's serving problem — requests with varying prompt lengths force
 either per-shape recompilation (XLA) or interpretation (Nimble VM) — is
 solved here exactly as DISC prescribes, built entirely on the public
 ``disc.compile`` API:
 
-* **prefill** and **decode** are two ``disc.compile`` artifacts
-  (``CompileOptions(pipeline="jit")`` — whole-model pytree functions)
-  sharing **one** :class:`CompileCache`;
-* prefill is compiled once per length-bucket: the artifact's generated
-  dispatch bucket-pads the prompt, true lengths ride along as an i32
-  operand (one compile serves every prompt ≤ bucket, clamped by
-  ``Dim("S", max=max_seq)``); with
-  ``ServeConfig(escalation_threshold=...)``, prompt lengths that stay hot
-  escalate (§4.4) to unpadded prefill specializations — no replay steps
-  wasted past the true prompt;
-* decode is compiled once against the fixed-capacity KV cache; a step
-  serves any mix of sequence lengths via the lens vector;
-* slot management is host-side compiled Python (no per-op
-  interpretation), mirroring the core dispatcher's generated flow.
+* **prefill** is ONE single-pass batched artifact with two dynamic dims,
+  ``Dim("B", max=max_batch)`` × ``Dim("S", max=max_seq)``: waiting
+  requests are admitted together, grouped by prompt-chunk bucket, and one
+  launch computes every prompt position's K/V plus last-position logits
+  for the whole group (``model.prefill``).  Per-request true lengths ride
+  the ``lens`` vector; the gathered KV-cache rows thread through a
+  ``TreeSpec`` so the generated dispatch bucket-pads the batch axis of
+  every leaf.  Compile count stays O(#(B, S) buckets); hot exact (B, S)
+  signatures still escalate (§4.4) to unpadded specializations via
+  ``ServeConfig(escalation_threshold=...)``.
+* **chunked prefill**: ``ServeConfig(prefill_chunk=...)`` splits long
+  prompts into fixed-size chunks interleaved with decode steps
+  (``prefill_interleave`` decode steps owed between launches), so a long
+  prompt no longer stalls every active decode slot.  The model layer
+  supports this through prefill-with-cache-offset entry points
+  (``offsets`` = current per-row cache fill).
+* **admission** is pluggable (:mod:`repro.serve.policies`): ``"fifo"``,
+  ``"shortest-prompt-first"``, ``"priority"`` (``Request.priority``), or
+  any callable ordering the waiting queue.
+* **decode** is compiled once against the fixed-capacity KV cache; a step
+  serves any mix of sequence lengths via the lens vector, and an
+  ``active`` row mask gates cache writes so mid-prefill and empty slots
+  are never touched by a decode step.
+* ``ServeConfig(prefill_mode="replay")`` keeps the previous
+  O(prompt_len)-sequential-launches prefill as a benchmark baseline
+  (``benchmarks/bench_serve.py`` measures the gap).
 
-Compile counts come from the artifacts' ``compile_counts()`` so
-benchmarks can verify the O(#buckets) contract end-to-end on a real
-model.
+Both artifacts share one :class:`CompileCache` (entries keyed by
+per-artifact fingerprint); compile counts come from the artifacts'
+``compile_counts()`` so benchmarks and tests can verify the O(#buckets)
+contract end-to-end on a real model.  Every ``stats`` key is documented
+in :data:`STATS_KEYS`.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..api.options import CompileOptions, Dim
+from ..api.options import CompileOptions, Dim, TreeSpec
 from ..api.staged import compile as disc_compile
 from ..core.bucketing import BucketPolicy, POW2
 from ..core.cache import CompileCache
 from ..data.pipeline import Request
 from ..frontends.jaxpr_frontend import ArgSpec
-from ..models.registry import Model
+from ..models.registry import Model, replay_prefill, row_keep_mask
+from .policies import get_admission_policy
+
+# admission groups bucket to powers of two starting at 1 (1, 2, 4, ...,
+# clamped to max_batch) — log-many batch buckets
+BATCH_POW2 = BucketPolicy(kind="pow2", granule=1)
+
+#: every ``ServeEngine.stats`` key, documented in one place.  Counters
+#: reset via :meth:`ServeEngine.reset_stats` except where noted.
+STATS_KEYS: Dict[str, str] = {
+    "prefill_calls": "prefill launches (any group size)",
+    "batched_prefills": "prefill launches serving >1 request in one pass",
+    "prefill_chunks": "prefill launches that touched a partially-prefilled "
+                      "prompt (chunked prefill active)",
+    "prefill_compiles": "prefill artifact compiles, bucket + exact "
+                        "(artifact-lifetime: not reset)",
+    "prefill_escalations": "§4.4 exact specializations of the prefill "
+                           "artifact (artifact-lifetime: not reset)",
+    "prefill_bucket_pairs": "distinct (B, S) bucket pairs launched "
+                            "(artifact-lifetime: not reset)",
+    "decode_steps": "decode launches (whole active batch per launch)",
+    "tokens_generated": "tokens produced (incl. each prompt's first token "
+                        "at prefill completion)",
+    "tokens_per_sec": "tokens_generated / busy seconds inside step()",
+    "max_decode_gap_s": "longest wall-clock gap between decode launches "
+                        "while decode work was pending (decode stall)",
+    "requests_completed": "requests retired into done",
+}
 
 
 @dataclass(frozen=True)
 class ServeConfig:
     max_batch: int = 8
     max_seq: int = 512
+    # S (prompt/chunk length) buckets; B (admission group) buckets
     prefill_policy: BucketPolicy = POW2
+    batch_policy: BucketPolicy = BATCH_POW2
     eos_id: int = 1
-    # §4.4 static/dynamic mix on the serving path: prompt lengths seen at
-    # least this many times get an unpadded prefill specialization (no
-    # wasted replay steps past the prompt).  None disables.
+    # §4.4 static/dynamic mix on the serving path: exact (B, S) prefill
+    # signatures seen at least this many times get an unpadded
+    # specialization.  None disables.
     escalation_threshold: Optional[int] = None
+    # "batched" = single-pass model.prefill; "replay" = the sequential
+    # decode-step replay baseline (one request per launch)
+    prefill_mode: str = "batched"
+    # split prompts into chunks of at most this many tokens, interleaved
+    # with decode steps; None prefills whole prompts in one launch
+    prefill_chunk: Optional[int] = None
+    # decode steps owed between prefill launches when both are pending
+    prefill_interleave: int = 1
+    # admission policy name (repro.serve.policies) or callable
+    admission: Union[str, Callable] = "fifo"
 
 
 @dataclass
 class _Slot:
+    """One KV-cache row's scheduler state: admitted requests move
+    prefill -> decode -> retired (slot freed)."""
+
     rid: int
-    length: int
+    tokens: np.ndarray
+    plen: int
     remaining: int
+    pos: int = 0                  # prompt tokens prefilled so far
+    state: str = "prefill"        # "prefill" | "decode"
     generated: List[int] = field(default_factory=list)
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, scfg: ServeConfig):
+        if scfg.prefill_mode not in ("batched", "replay"):
+            raise ValueError(
+                f"unknown prefill_mode {scfg.prefill_mode!r} "
+                f"(expected 'batched' or 'replay')")
         self.model = model
         self.params = params
         self.scfg = scfg
@@ -73,19 +137,32 @@ class ServeEngine:
         self.slots: List[Optional[_Slot]] = [None] * scfg.max_batch
         self.queue: List[Request] = []
         self.done: Dict[int, List[int]] = {}
+        self._admit_order = get_admission_policy(scfg.admission)
+        self._prefill_impl = (model.prefill if scfg.prefill_mode == "batched"
+                              else replay_prefill(model.decode_step))
+        self._decode_credit = 0
+        self._bucket_pairs: Set[Tuple[int, int]] = set()
+        self._busy_s = 0.0
+        self._last_decode_t: Optional[float] = None
 
         # one compile cache shared by both artifacts; entries are keyed by
         # per-artifact fingerprint so prefill/decode never collide
         self.compile_cache = CompileCache("serve", max_entries=64)
+        pol = dataclasses.replace(
+            scfg.prefill_policy,
+            overrides=tuple(scfg.prefill_policy.overrides) + (
+                ("B", (scfg.batch_policy.kind, scfg.batch_policy.granule)),))
+        dim_b = Dim("B", max=scfg.max_batch)
         self._prefill_fn = disc_compile(
-            self._replay_prefill,
-            specs=[None,  # params pytree
-                   None,  # KV cache row pytree
-                   ArgSpec((1, Dim("S", max=scfg.max_seq)), jnp.int32,
+            self._prefill_call,
+            specs=[None,                 # params pytree
+                   TreeSpec({1: "B"}),   # gathered cache rows (L, B, ...)
+                   ArgSpec((dim_b, Dim("S", max=scfg.max_seq)), jnp.int32,
                            name="tokens"),
-                   None],  # lens (rides along, lens-aware fn)
+                   ArgSpec((dim_b,), jnp.int32, name="lens"),
+                   ArgSpec((dim_b,), jnp.int32, name="offsets")],
             options=CompileOptions(pipeline="jit", name="prefill",
-                                   policy=scfg.prefill_policy,
+                                   policy=pol,
                                    escalation_threshold=
                                    scfg.escalation_threshold,
                                    cache=self.compile_cache))
@@ -93,99 +170,189 @@ class ServeEngine:
             self._decode_step,
             options=CompileOptions(pipeline="jit", name="decode",
                                    cache=self.compile_cache))
-        self.stats = {"prefill_compiles": 0, "decode_steps": 0,
-                      "prefill_calls": 0, "tokens_generated": 0,
-                      "prefill_escalations": 0}
+        self.stats: Dict[str, Any] = {k: 0 for k in STATS_KEYS}
+        self.stats["tokens_per_sec"] = 0.0
+        self.stats["max_decode_gap_s"] = 0.0
 
     # ------------------------------------------------------------ device --
-    def _prefill_step(self, params, cache, tokens, lens, slot_idx):
-        """Prefill one request into cache row ``slot_idx`` (padded length)."""
-        logits = self.model.forward(params, {"tokens": tokens, "lens": lens})
-        # write prompt K/V by replaying through decode is wasteful; here we
-        # recompute K/V inside forward and cache only via decode path for
-        # clarity.  Production path: forward returns per-layer K/V too.
-        last = jnp.take_along_axis(
-            logits, (lens[:, None, None] - 1).astype(jnp.int32), axis=1)
-        return last[:, 0]
+    def _prefill_call(self, params, rows, tokens, lens, offsets):
+        """Single-pass prefill over a gathered group of cache rows.
 
-    def _decode_step(self, params, cache, tokens, lens):
-        return self.model.decode_step(params, cache, tokens, lens)
+        Fresh rows (offset 0) are zeroed first so a previous occupant's
+        state can never leak into a new request — positional KV caches
+        mask stale entries anyway, but recurrent state is overwritten,
+        not masked."""
+        fresh = offsets == 0
+        rows = jax.tree.map(
+            lambda c: jnp.where(row_keep_mask(fresh, c),
+                                jnp.zeros_like(c), c), rows)
+        logits, rows = self._prefill_impl(params, rows, tokens, lens,
+                                          offsets)
+        return logits, rows
+
+    def _decode_step(self, params, cache, tokens, lens, active):
+        """One decode step; cache writes gated to ``active`` rows so
+        mid-prefill and empty slots keep their state untouched."""
+        logits, new_cache = self.model.decode_step(params, cache, tokens,
+                                                   lens)
+        new_cache = jax.tree.map(
+            lambda n, o: jnp.where(row_keep_mask(active, o),
+                                   n.astype(o.dtype), o),
+            new_cache, cache)
+        return logits, new_cache
 
     # -------------------------------------------------------------- host --
     def submit(self, reqs: List[Request]) -> None:
+        for r in reqs:
+            if len(r.tokens) > self.scfg.max_seq:
+                # chunking would otherwise clamp every launch under the
+                # artifact's S cap and the overflow would scatter nowhere:
+                # the request "completes" with garbage.  Fail loudly here
+                # (the pre-chunking engine failed via the dispatch cap).
+                raise ValueError(
+                    f"request {r.rid}: prompt length {len(r.tokens)} "
+                    f"exceeds ServeConfig(max_seq={self.scfg.max_seq})")
         self.queue.extend(reqs)
 
     def _admit(self) -> None:
-        for i in range(self.scfg.max_batch):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.pop(0)
-                self._prefill(req, i)
-
-    def _prefill(self, req: Request, slot: int) -> None:
-        """Bucket-compiled prefill: the artifact's generated dispatch pads
-        the prompt to its bucket; true length rides along in ``lens``."""
-        plen = len(req.tokens)
-        toks = np.asarray(req.tokens, np.int32)[None, :]
-        lens = np.array([plen], np.int32)
-        cache_row = jax.tree.map(lambda c: c[:, slot:slot + 1]
-                                 if c.ndim > 1 else c, self.cache)
-        new_row, last_logits = self._prefill_fn(self.params, cache_row,
-                                                toks, lens)
-        self.stats["prefill_compiles"] = \
-            self._prefill_fn.compile_counts()["total"]
-        self.stats["prefill_escalations"] = self.compile_cache.stats.escalations
-        self.cache = jax.tree.map(
-            lambda full, row: jax.lax.dynamic_update_slice_in_dim(
-                full, row.astype(full.dtype), slot, axis=1)
-            if full.ndim > 1 else full,
-            self.cache, new_row)
-        self.lens[slot] = plen
-        nxt = int(jnp.argmax(last_logits[0]))
-        self.slots[slot] = _Slot(rid=req.rid, length=plen,
-                                 remaining=req.max_new_tokens,
-                                 generated=[nxt])
-        self.stats["prefill_calls"] += 1
-
-    def _replay_prefill(self, params, cache_row, tokens, lens):
-        """Prefill by replaying tokens through decode steps (lax.scan) —
-        keeps one code path for cache writes on every model family."""
-        def step(carry, tok):
-            cache, pos = carry
-            logits, cache = self.model.decode_step(
-                params, cache, tok[None, None], pos)
-            return (cache, pos + 1), logits[:, 0]
-
-        (cache_row, _), logits = jax.lax.scan(
-            step, (cache_row, jnp.zeros((1,), jnp.int32)),
-            tokens[0])
-        last = logits[lens[0] - 1]
-        return cache_row, last[None]
-
-    def step(self) -> None:
-        """One engine iteration: admit, decode active slots, retire."""
-        self._admit()
-        active = [i for i, s in enumerate(self.slots) if s is not None]
-        if not active:
+        """Claim free slots for waiting requests in policy order; admitted
+        requests enter the prefill state (launched by the next
+        :meth:`_prefill_group` calls, grouped by chunk bucket)."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.queue:
             return
+        take = self._admit_order(self.queue)[:len(free)]
+        # remove by identity: Request's dataclass __eq__ compares numpy
+        # token arrays, so list.remove() would be both O(n·plen) and
+        # ambiguous-truth-value prone
+        taken = {id(r) for r in take}
+        self.queue = [r for r in self.queue if id(r) not in taken]
+        for req in take:
+            i = free.pop(0)
+            toks = np.asarray(req.tokens, np.int32)
+            self.slots[i] = _Slot(rid=req.rid, tokens=toks,
+                                  plen=int(toks.shape[0]),
+                                  remaining=req.max_new_tokens)
+            self.lens[i] = 0
+
+    def _prefill_group(self) -> None:
+        """One prefill launch: group prefill-state slots by the bucket of
+        their next chunk length and launch the largest group in a single
+        batched pass (replay mode launches one request at a time)."""
+        chunk_cap = self.scfg.prefill_chunk or self.scfg.max_seq
+        groups: Dict[int, List[Tuple[int, int]]] = {}
+        for i, s in enumerate(self.slots):
+            if s is None or s.state != "prefill":
+                continue
+            cl = min(s.plen - s.pos, chunk_cap)
+            sb = min(self.scfg.prefill_policy.bucket("S", max(cl, 1)),
+                     self.scfg.max_seq)
+            groups.setdefault(sb, []).append((i, cl))
+        if not groups:
+            return
+        _, members = max(groups.items(), key=lambda kv: (len(kv[1]), -kv[0]))
+        if self.scfg.prefill_mode == "replay":
+            members = members[:1]
+        idx = np.asarray([i for i, _ in members])
+        nb = len(members)
+        smax = max(cl for _, cl in members)
+        tokens = np.zeros((nb, smax), np.int32)
+        lens = np.zeros((nb,), np.int32)
+        offsets = np.zeros((nb,), np.int32)
+        for r, (i, cl) in enumerate(members):
+            s = self.slots[i]
+            tokens[r, :cl] = s.tokens[s.pos:s.pos + cl]
+            lens[r] = cl
+            offsets[r] = s.pos
+
+        rows = jax.tree.map(lambda c: c[:, idx] if c.ndim > 1 else c,
+                            self.cache)
+        logits, new_rows = self._prefill_fn(self.params, rows, tokens,
+                                            lens, offsets)
+        self.cache = jax.tree.map(
+            lambda full, row: full.at[:, idx].set(
+                row[:, :nb].astype(full.dtype)) if full.ndim > 1 else full,
+            self.cache, new_rows)
+        last = np.asarray(logits[:nb])
+
+        self._bucket_pairs.add((
+            min(self.scfg.batch_policy.bucket("B", nb), self.scfg.max_batch),
+            min(self.scfg.prefill_policy.bucket("S", smax),
+                self.scfg.max_seq)))
+        self.stats["prefill_calls"] += 1
+        if nb > 1:
+            self.stats["batched_prefills"] += 1
+        chunked = bool(np.any(offsets > 0))
+        for r, (i, cl) in enumerate(members):
+            s = self.slots[i]
+            s.pos += cl
+            self.lens[i] = s.pos
+            if s.pos >= s.plen:
+                s.state = "decode"
+                s.generated.append(int(np.argmax(last[r])))
+                self.stats["tokens_generated"] += 1
+                self._maybe_retire(i)
+            else:
+                chunked = True
+        if chunked:
+            self.stats["prefill_chunks"] += 1
+
+    def _decode(self) -> None:
+        active_idx = [i for i, s in enumerate(self.slots)
+                      if s is not None and s.state == "decode"]
         tokens = np.zeros((self.scfg.max_batch, 1), np.int32)
-        for i in active:
+        active = np.zeros((self.scfg.max_batch,), bool)
+        for i in active_idx:
             tokens[i, 0] = self.slots[i].generated[-1]
+            active[i] = True
         logits, self.cache = self._decode_fn(
             self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(self.lens))
+            jnp.asarray(self.lens), jnp.asarray(active))
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        now = time.monotonic()
+        if self._last_decode_t is not None:
+            self.stats["max_decode_gap_s"] = max(
+                self.stats["max_decode_gap_s"], now - self._last_decode_t)
+        self._last_decode_t = now
         self.stats["decode_steps"] += 1
-        for i in active:
+        for i in active_idx:
             slot = self.slots[i]
             self.lens[i] += 1
             slot.generated.append(int(nxt[i]))
             slot.remaining -= 1
             self.stats["tokens_generated"] += 1
-            if (slot.remaining <= 0 or nxt[i] == self.scfg.eos_id
-                    or self.lens[i] >= self.scfg.max_seq - 1):
-                self.done[slot.rid] = slot.generated
-                self.slots[i] = None
-                self.lens[i] = 0
+            self._maybe_retire(i)
+
+    def _maybe_retire(self, i: int) -> None:
+        slot = self.slots[i]
+        if (slot.remaining <= 0 or slot.generated[-1] == self.scfg.eos_id
+                or self.lens[i] >= self.scfg.max_seq - 1):
+            self.done[slot.rid] = slot.generated
+            self.stats["requests_completed"] += 1
+            self.slots[i] = None
+            self.lens[i] = 0
+
+    def step(self) -> None:
+        """One engine iteration: admit, then either a prefill launch or a
+        decode step — the ``prefill_interleave`` budget decides which when
+        both kinds of work are pending."""
+        t0 = time.monotonic()
+        self._admit()
+        has_p = any(s is not None and s.state == "prefill"
+                    for s in self.slots)
+        has_d = any(s is not None and s.state == "decode"
+                    for s in self.slots)
+        if has_p and (not has_d or self._decode_credit <= 0):
+            self._prefill_group()
+            self._decode_credit = max(self.scfg.prefill_interleave, 0)
+        elif has_d:
+            self._decode()
+            self._decode_credit -= 1
+        if not any(s is not None and s.state == "decode"
+                   for s in self.slots):
+            self._last_decode_t = None  # decode idle: gaps don't count
+        self._busy_s += time.monotonic() - t0
+        self._refresh_stats()
 
     def run_until_done(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         steps = 0
@@ -195,3 +362,39 @@ class ServeEngine:
             if steps > max_steps:
                 break
         return self.done
+
+    # ------------------------------------------------------ introspection --
+    def compile_counts(self) -> Dict[str, Dict[str, int]]:
+        """Per-artifact compile counts (``{"bucket", "exact", "total"}``
+        each) — the observable O(#buckets) contract."""
+        zero = {"bucket": 0, "exact": 0, "total": 0}
+
+        def counts(fn):
+            try:
+                return fn.compile_counts()
+            except AttributeError:  # not compiled yet (no calls)
+                return dict(zero)
+
+        return {"prefill": counts(self._prefill_fn),
+                "decode": counts(self._decode_fn)}
+
+    def reset_stats(self) -> None:
+        """Zero the per-run counters (benchmark warmup boundary).
+        Artifact-lifetime counters — compiles, escalations, bucket pairs —
+        are re-derived from the artifacts and keep accumulating."""
+        for k in STATS_KEYS:
+            self.stats[k] = 0
+        self.stats["tokens_per_sec"] = 0.0
+        self.stats["max_decode_gap_s"] = 0.0
+        self._busy_s = 0.0
+        self._last_decode_t = None
+        self._refresh_stats()
+
+    def _refresh_stats(self) -> None:
+        pc = self.compile_counts()["prefill"]
+        self.stats["prefill_compiles"] = pc["total"]
+        self.stats["prefill_escalations"] = pc["exact"]
+        self.stats["prefill_bucket_pairs"] = len(self._bucket_pairs)
+        if self._busy_s > 0:
+            self.stats["tokens_per_sec"] = \
+                self.stats["tokens_generated"] / self._busy_s

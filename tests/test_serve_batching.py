@@ -1,0 +1,243 @@
+"""Serve-path batching tests.
+
+Covers the continuous-batching serve path end to end: single-pass batched
+prefill parity against the sequential replay baseline (model- and
+engine-level, across ≥2 (batch, seq) buckets), chunked prefill vs
+unchunked, admission-policy ordering, O(#(B, S) buckets) compile counts
+under varying batch composition, §4.4 escalation on the batched artifact,
+and the ``TreeSpec`` pytree padding it rides on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import disc
+from repro.configs import get_config
+from repro.data.pipeline import Request
+from repro.models.registry import get_model, replay_prefill
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.policies import (ADMISSION_POLICIES, get_admission_policy,
+                                  priority_first, shortest_prompt_first)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinyllama_11b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(vocab, lens, max_new=4, prios=None):
+    rng = np.random.RandomState(7)
+    return [Request(rid=i,
+                    tokens=rng.randint(0, vocab, size=ln).astype(np.int32),
+                    max_new_tokens=max_new,
+                    priority=0 if prios is None else prios[i])
+            for i, ln in enumerate(lens)]
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_seq", 96)
+    return ServeEngine(model, params, ServeConfig(**kw))
+
+
+# ----------------------------------------------------------------- parity --
+
+class TestPrefillParity:
+    @pytest.mark.parametrize("lens_set", [[5, 12, 16], [33, 20, 40]])
+    def test_single_pass_matches_replay_model_level(self, tiny, lens_set):
+        """model.prefill ≡ decode-step replay: logits and every valid
+        cache position, across two different (B, S) shapes."""
+        cfg, model, params = tiny
+        b, smax = len(lens_set), max(lens_set)
+        rng = np.random.RandomState(1)
+        tokens = np.zeros((b, smax), np.int32)
+        for r, ln in enumerate(lens_set):
+            tokens[r, :ln] = rng.randint(0, cfg.vocab, size=ln)
+        tokens = jnp.asarray(tokens)
+        lens = jnp.asarray(lens_set, jnp.int32)
+        offsets = jnp.zeros((b,), jnp.int32)
+        cache0 = model.init_cache(b, 96)
+
+        log_sp, cache_sp = model.prefill(params, cache0, tokens, lens,
+                                         offsets)
+        log_rp, cache_rp = replay_prefill(model.decode_step)(
+            params, cache0, tokens, lens, offsets)
+
+        np.testing.assert_allclose(np.asarray(log_sp), np.asarray(log_rp),
+                                   atol=2e-4, rtol=2e-4)
+        for leaf_sp, leaf_rp in zip(jax.tree.leaves(cache_sp),
+                                    jax.tree.leaves(cache_rp)):
+            a, c = np.asarray(leaf_sp), np.asarray(leaf_rp)
+            for r, ln in enumerate(lens_set):  # (L, B, hkv, Lc, hd)
+                np.testing.assert_allclose(a[:, r, :, :ln], c[:, r, :, :ln],
+                                           atol=2e-4, rtol=2e-4)
+
+    def test_engine_generations_match_replay(self, tiny):
+        """End to end: same requests, same generated ids, while the
+        batched engine launches strictly fewer prefills."""
+        cfg, model, params = tiny
+        lens = [5, 9, 14, 40, 33, 12]  # spans S buckets 16 and 64
+        outs, calls = {}, {}
+        for mode in ("batched", "replay"):
+            eng = _engine(model, params, prefill_mode=mode)
+            eng.submit(_requests(cfg.vocab, lens))
+            outs[mode] = eng.run_until_done(max_steps=500)
+            calls[mode] = eng.stats["prefill_calls"]
+        assert outs["batched"] == outs["replay"]
+        assert len(outs["batched"]) == len(lens)
+        assert calls["batched"] < calls["replay"] == len(lens)
+
+    def test_chunked_prefill_matches_unchunked(self, tiny):
+        """Chunk-offset continuation reproduces the one-shot prefill, at
+        the model level (explicit offsets) and through the engine."""
+        cfg, model, params = tiny
+        # model level: 24-token prompt in two 12-token chunks
+        rng = np.random.RandomState(3)
+        toks = rng.randint(0, cfg.vocab, size=(1, 24)).astype(np.int32)
+        cache0 = model.init_cache(1, 96)
+        one = jnp.asarray([12], jnp.int32)
+        log_a, cache_a = model.prefill(
+            params, cache0, jnp.asarray(toks), jnp.asarray([24], jnp.int32),
+            jnp.zeros((1,), jnp.int32))
+        _, cache_h = model.prefill(params, cache0, jnp.asarray(toks[:, :12]),
+                                   one, jnp.zeros((1,), jnp.int32))
+        log_b, cache_b = model.prefill(params, cache_h,
+                                       jnp.asarray(toks[:, 12:]), one,
+                                       jnp.asarray([12], jnp.int32))
+        np.testing.assert_allclose(np.asarray(log_a), np.asarray(log_b),
+                                   atol=2e-4, rtol=2e-4)
+        for la, lb in zip(jax.tree.leaves(cache_a), jax.tree.leaves(cache_b)):
+            np.testing.assert_allclose(np.asarray(la)[:, :, :, :24],
+                                       np.asarray(lb)[:, :, :, :24],
+                                       atol=2e-4, rtol=2e-4)
+
+        # engine level: long prompts forced through 8-token chunks
+        lens = [30, 22, 6, 17]
+        base, chunked = {}, {}
+        for chunk, sink in ((None, base), (8, chunked)):
+            eng = _engine(model, params, prefill_chunk=chunk)
+            eng.submit(_requests(cfg.vocab, lens))
+            sink.update(eng.run_until_done(max_steps=500))
+            if chunk:
+                assert eng.stats["prefill_chunks"] > 0
+        assert base == chunked
+
+
+# -------------------------------------------------------------- admission --
+
+class TestAdmission:
+    def test_policy_orderings(self):
+        reqs = _requests(64, [24, 6, 12], prios=[0, 1, 3])
+        assert [r.rid for r in ADMISSION_POLICIES["fifo"](reqs)] == [0, 1, 2]
+        assert [r.rid for r in shortest_prompt_first(reqs)] == [1, 2, 0]
+        assert [r.rid for r in priority_first(reqs)] == [2, 1, 0]
+        assert get_admission_policy(shortest_prompt_first) \
+            is shortest_prompt_first
+        with pytest.raises(ValueError, match="unknown admission policy"):
+            get_admission_policy("nope")
+
+    def test_overlong_prompt_rejected_at_submit(self, tiny):
+        """Chunking must not let a prompt longer than max_seq 'complete'
+        with garbage: submit fails loudly instead."""
+        cfg, model, params = tiny
+        eng = _engine(model, params, max_seq=64, prefill_chunk=16)
+        with pytest.raises(ValueError, match="exceeds ServeConfig"):
+            eng.submit(_requests(cfg.vocab, [65]))
+
+    def test_duplicate_requests_admit_by_identity(self, tiny):
+        """Equal-rid, equal-length requests must not trip Request's
+        dataclass __eq__ (ndarray ambiguous truth value) during
+        admission."""
+        cfg, model, params = tiny
+        eng = _engine(model, params, max_batch=2)
+        a, b = _requests(cfg.vocab, [8, 8], max_new=2)
+        b.rid = a.rid
+        eng.submit([a, b])
+        eng.run_until_done(max_steps=100)
+        assert eng.stats["requests_completed"] == 2
+
+    @pytest.mark.parametrize("policy,expected", [
+        ("fifo", [0, 1, 2]),
+        ("shortest-prompt-first", [1, 2, 0]),
+        ("priority", [2, 1, 0]),
+    ])
+    def test_engine_completion_order(self, tiny, policy, expected):
+        """With one slot, completion order is exactly admission order."""
+        cfg, model, params = tiny
+        eng = _engine(model, params, max_batch=1, admission=policy)
+        eng.submit(_requests(cfg.vocab, [24, 6, 12], max_new=2,
+                             prios=[0, 1, 3]))
+        done = eng.run_until_done(max_steps=300)
+        assert list(done) == expected
+
+
+# ---------------------------------------------------------- compile counts --
+
+class TestCompileCounts:
+    def test_o_buckets_across_batch_compositions(self, tiny):
+        """A mixed trace re-using (B, S) buckets never recompiles; a new
+        group size does — exactly once per new pair."""
+        cfg, model, params = tiny
+        eng = _engine(model, params)
+        eng.submit(_requests(cfg.vocab, [9, 12, 14, 10]))   # (4, 16)
+        eng.run_until_done(max_steps=300)
+        first = eng.compile_counts()["prefill"]["bucket"]
+        assert first == 1
+
+        eng.submit(_requests(cfg.vocab, [13, 10, 15, 11]))  # (4, 16) again
+        eng.run_until_done(max_steps=300)
+        assert eng.compile_counts()["prefill"]["bucket"] == first
+
+        eng.submit(_requests(cfg.vocab, [12, 12]))          # (2, 16): new B
+        eng.run_until_done(max_steps=300)
+        counts = eng.compile_counts()["prefill"]
+        assert counts["bucket"] == first + 1
+        assert counts["bucket"] == eng.stats["prefill_bucket_pairs"] == 2
+
+    def test_escalation_on_hot_batched_signature(self, tiny):
+        """§4.4 still works on the 2-D artifact: a hot exact (B, S)
+        signature gets an unpadded specialization."""
+        cfg, model, params = tiny
+        eng = _engine(model, params, max_batch=2, max_seq=64,
+                      escalation_threshold=2)
+        for round_ in range(3):
+            eng.submit(_requests(cfg.vocab, [7, 5], max_new=2))
+            eng.run_until_done(max_steps=200)
+        assert eng.stats["prefill_escalations"] >= 1
+        assert eng.stats["requests_completed"] == 6
+
+    def test_stats_keys_documented(self, tiny):
+        from repro.serve.engine import STATS_KEYS
+        cfg, model, params = tiny
+        eng = _engine(model, params)
+        assert set(eng.stats) == set(STATS_KEYS)
+
+
+# --------------------------------------------------------------- TreeSpec --
+
+class TestTreeSpec:
+    def test_pads_pytree_leaves_to_bucket(self):
+        seen = []
+
+        def f(tree, x):
+            seen.append((tree["a"].shape, x.shape))
+            return tree["a"].sum() + x.sum()
+
+        fn = disc.compile(
+            f, specs=[disc.TreeSpec({0: "B"}),
+                      disc.ArgSpec(("B", 2), jnp.float32)],
+            options=disc.CompileOptions(pipeline="jit"))
+        assert float(fn({"a": jnp.ones((3, 2))}, jnp.ones((3, 2)))) == 12.0
+        assert seen[0] == ((16, 2), (16, 2))  # POW2 granule-16 bucket
+        # in-bucket second call: padded shapes identical, no new compile
+        assert float(fn({"a": jnp.ones((5, 2))}, jnp.ones((5, 2)))) == 20.0
+        assert fn.compile_counts()["total"] == 1
+
+    def test_tree_only_dim_is_rejected(self):
+        with pytest.raises(ValueError, match="not observable"):
+            disc.compile(lambda t: t, specs=[disc.TreeSpec({0: "B"})],
+                         options=disc.CompileOptions(pipeline="jit"))

@@ -195,8 +195,14 @@ class TestServeEngine:
         done = eng.run_until_done(max_steps=400)
         assert set(done) == {r.rid for r in reqs}
         assert all(len(v) >= 1 for v in done.values())
-        # DISC contract: prefill compiles bounded by #buckets, not #requests
+        # DISC contract: prefill compiles bounded by the 2-D bucket grid
+        # (admission-group size × prompt bucket), not by #requests
         lens = [len(r.tokens) for r in reqs]
-        buckets = {min(eng.scfg.prefill_policy.bucket("S", l), 96)
-                   for l in lens}
-        assert eng.stats["prefill_compiles"] <= len(buckets)
+        s_buckets = {min(eng.scfg.prefill_policy.bucket("S", l), 96)
+                     for l in lens}
+        b_buckets = {1, 2, 4}  # pow2 admission-group buckets ≤ max_batch
+        pairs = eng.stats["prefill_bucket_pairs"]
+        assert eng.compile_counts()["prefill"]["bucket"] <= pairs
+        assert pairs <= len(s_buckets) * len(b_buckets)
+        # batched admission actually happened: fewer launches than requests
+        assert eng.stats["prefill_calls"] < len(reqs)
