@@ -6,6 +6,9 @@
 #   scripts/check.sh --lint     # lint only (fast)
 #   scripts/check.sh --docs     # docs link/anchor/stale-reference check only
 #   scripts/check.sh --smoke    # lint + docs + tests + benchmark smoke (CI gate)
+#   scripts/check.sh --dist     # SPMD tests + dist benchmark smoke; run under
+#                               # XLA_FLAGS=--xla_force_host_platform_device_count=8
+#                               # for a real multi-device host mesh (CI does)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,6 +18,12 @@ MODE="${1:-}"
 
 if [[ "$MODE" == "--docs" ]]; then
     python scripts/docs_check.py
+    exit 0
+fi
+
+if [[ "$MODE" == "--dist" ]]; then
+    python -m pytest tests/test_dist_spmd.py -q
+    python -m benchmarks.bench_dist --smoke
     exit 0
 fi
 

@@ -20,15 +20,21 @@ from repro.api import (  # noqa: F401
     Lowered,
     NimbleVM,
     POW2,
+    ShardingProfile,
     TreeSpec,
     UnknownBackendError,
     bridge,
     compile,
     get_backend,
+    get_mesh,
+    get_profile,
     infer_specs,
     list_backends,
+    list_profiles,
+    make_mesh,
     pow2_bucket,
     register_backend,
+    use_mesh,
 )
 
 __all__ = list(_api.__all__)

@@ -26,6 +26,10 @@ internals.
 from ..core.bucketing import BucketPolicy, EXACT, POW2, pow2_bucket  # noqa: F401
 from ..core.cache import CompileCache, CacheStats  # noqa: F401
 from ..core.vm import NimbleVM  # noqa: F401
+from ..dist import (  # noqa: F401
+    ShardingProfile, get_mesh, get_profile, list_profiles, make_mesh,
+    use_mesh,
+)
 from ..frontends.jaxpr_frontend import ArgSpec, bridge  # noqa: F401
 from .backends import (  # noqa: F401
     Backend,
@@ -48,6 +52,9 @@ __all__ = [
     # bucketing / caching
     "BucketPolicy", "POW2", "EXACT", "pow2_bucket", "CompileCache",
     "CacheStats",
+    # SPMD / distribution
+    "ShardingProfile", "get_profile", "list_profiles", "make_mesh",
+    "use_mesh", "get_mesh",
     # baselines & serving
     "NimbleVM", "bridge", "ServeEngine", "ServeConfig",
     "ADMISSION_POLICIES",

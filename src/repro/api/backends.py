@@ -91,13 +91,21 @@ def _make_aot_backend(name: str, description: str,
     kernels = dict(cluster_kernels or {})
 
     def build_bucket(graph: DGraph, plan, syms: Sequence[SymDim],
-                     padded: Dict[int, int], donate: bool):
+                     padded: Dict[int, int], donate: bool,
+                     arg_shardings: Optional[Sequence[Any]] = None):
+        # ``arg_shardings`` (SPMD dispatch): the (lens, *args) shardings
+        # the generated host flow device_puts — the AOT entry must be
+        # compiled against exactly those, so GSPMD partitions the bucket
+        # executable over the mesh instead of rejecting the inputs
         executor = build_padded_executor(graph, padded, syms, plan=plan,
                                          kernels=kernels)
         lens_sds = jax.ShapeDtypeStruct((max(len(syms), 1),), jnp.int32)
         arg_sds = _padded_arg_sds(graph, padded)
         donate_nums = tuple(range(1, 1 + len(arg_sds))) if donate else ()
-        jfn = jax.jit(executor, donate_argnums=donate_nums)
+        jit_kw = {}
+        if arg_shardings is not None:
+            jit_kw["in_shardings"] = tuple(arg_shardings)
+        jfn = jax.jit(executor, donate_argnums=donate_nums, **jit_kw)
         return jfn.lower(lens_sds, *arg_sds).compile()
 
     def build_exact(graph: DGraph, plan):

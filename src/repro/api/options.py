@@ -99,6 +99,18 @@ class CompileOptions:
       dispatch); ``"jit"`` skips the DHLO bridge and buckets a
       jax-traceable function directly (pytree-capable; used by the serving
       engine for whole-model prefill/decode)
+    * ``mesh``                 — a ``jax.sharding.Mesh``: the artifact is
+      lowered for SPMD execution over it.  The planner
+      (:mod:`repro.dist.spmd`) emits per-argument ``NamedSharding``\\ s
+      from the ``sharding_profile`` and *tightens the bucket policy* so
+      every sharded dynamic dim's bucket is a multiple of the owning mesh
+      axes' size (a plan-time constraint, raised at ``lower()`` when the
+      ``Dim`` contract cannot satisfy it); the generated dispatch then
+      ``device_put``\\ s padded buckets to their shardings and replicates
+      lens vectors
+    * ``sharding_profile``     — a profile name (``"dp"`` / ``"fsdp"`` /
+      ``"tp"``) or a :class:`~repro.dist.profiles.ShardingProfile`;
+      only meaningful with ``mesh`` (defaults to ``"dp"``)
     * ``cache``                — share a :class:`CompileCache` between
       several compiled artifacts (entries are keyed by per-artifact
       fingerprint and never collide)
@@ -112,6 +124,8 @@ class CompileOptions:
     max_cache_entries: int = 256
     donate: bool = False
     pipeline: str = "dhlo"
+    mesh: Optional[Any] = None
+    sharding_profile: Optional[Any] = None   # name or ShardingProfile
     cache: Optional[CompileCache] = None
     name: str = "disc"
 
@@ -119,6 +133,13 @@ class CompileOptions:
         if self.pipeline not in ("dhlo", "jit"):
             raise ValueError(
                 f"unknown pipeline {self.pipeline!r} (expected 'dhlo' or 'jit')")
+        if self.sharding_profile is not None and self.mesh is None:
+            raise ValueError(
+                "CompileOptions(sharding_profile=...) needs a mesh: pass "
+                "CompileOptions(mesh=..., sharding_profile=...)")
+        if self.mesh is not None:
+            from ..dist.profiles import get_profile
+            get_profile(self.sharding_profile or "dp")  # validate early
 
     def replace(self, **kw) -> "CompileOptions":
         return dataclasses.replace(self, **kw)

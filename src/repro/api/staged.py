@@ -148,6 +148,24 @@ class Lowered:
     buffer_plan: Any = None
     syms: Tuple[SymDim, ...] = ()
     sym_names: Tuple[str, ...] = ()
+    # SPMD ShardingPlan when lowered under CompileOptions(mesh=...);
+    # ``policy`` is then the planner-tightened policy (sharded dynamic
+    # dims' buckets are mesh-axis multiples)
+    sharding_plan: Any = None
+
+    def _spmd_token(self) -> str:
+        """Distinguish same-pattern artifacts lowered for different
+        meshes/profiles: their bucket entries are compiled against
+        different shardings and must never share cache entries.  Device
+        identity is part of the token — two same-shape meshes over
+        different device sets produce incompatible executables."""
+        if self.sharding_plan is None:
+            return ""
+        device_ids = tuple(
+            d.id for d in self.sharding_plan.mesh.devices.flat)
+        h = hashlib.sha1((repr(self.sharding_plan.report())
+                          + repr(device_ids)).encode())
+        return "+spmd:" + h.hexdigest()[:12]
 
     def fingerprint(self) -> str:
         if self.graph is not None:
@@ -155,9 +173,10 @@ class Lowered:
             # constant-free (the per-engine cache-key property).  As a
             # *shared*-cache key that is too weak: two graphs with the same
             # wiring but different literal payloads must not collide, so
-            # the artifact fingerprint folds the constants in.
+            # the artifact fingerprint folds the constants in (and the
+            # SPMD plan, when lowered under a mesh).
             return (self.graph.fingerprint() + "+"
-                    + _graph_const_token(self.graph))
+                    + _graph_const_token(self.graph) + self._spmd_token())
         # jit pipeline has no shape-free graph fingerprint; identify the
         # artifact by the *function* (code + closure + bound self) plus the
         # spec signature, so distinct functions sharing one CompileCache
@@ -171,7 +190,8 @@ class Lowered:
 
         sig = repr([_sig(s) for s in self.specs])
         h = hashlib.sha1((sig + "\x00" + _fn_token(self.fn)).encode())
-        return f"jit:{self.options.name}:{h.hexdigest()[:16]}"
+        return (f"jit:{self.options.name}:{h.hexdigest()[:16]}"
+                + self._spmd_token())
 
     def compile(self, options: Optional[CompileOptions] = None, *,
                 on_tie_break: Optional[Callable] = None) -> "Compiled":
@@ -209,6 +229,17 @@ class Lowered:
 def _lower(fn: Callable, specs: Sequence[Optional[ArgSpec]],
            dims: Sequence[Dim], options: CompileOptions) -> Lowered:
     policy = options.policy_with_dims(dims)
+    sharding_plan = None
+    if options.mesh is not None:
+        # SPMD planning happens at lower() time: per-arg shardings are
+        # derived from the profile and the policy is tightened so every
+        # sharded dynamic dim's bucket divides the mesh axes evenly
+        # (ConstraintViolation here when the Dim contract cannot comply)
+        from ..dist.profiles import get_profile
+        from ..dist.spmd import plan_spmd
+        profile = get_profile(options.sharding_profile or "dp")
+        sharding_plan, policy = plan_spmd(specs, policy, options.mesh,
+                                          profile)
     if options.pipeline == "jit":
         sym_names: List[str] = []
         for s in specs:
@@ -221,7 +252,8 @@ def _lower(fn: Callable, specs: Sequence[Optional[ArgSpec]],
                     sym_names.append(d)
         return Lowered(fn=fn, specs=tuple(specs), options=options,
                        policy=policy, pipeline="jit",
-                       sym_names=tuple(sym_names))
+                       sym_names=tuple(sym_names),
+                       sharding_plan=sharding_plan)
 
     if any(not isinstance(s, ArgSpec) for s in specs):
         raise ValueError(
@@ -234,13 +266,19 @@ def _lower(fn: Callable, specs: Sequence[Optional[ArgSpec]],
 
     graph, _ = bridge(fn, list(specs), name=options.name)
     plan = plan_fusion(graph)
-    placement = place(graph)
+    placement = place(graph, mesh=options.mesh)
     buffer_plan = plan_buffers(graph)
     syms = tuple(dyn_symbols(graph))
+    if sharding_plan is not None:
+        # surface the plan-time divisibility facts in the constraint
+        # store (report()["constraints"]["mesh_constraints"])
+        for c in sharding_plan.constraints:
+            graph.store.note_mesh_divisible(c.dim, c.axes, c.multiple_of)
     return Lowered(fn=fn, specs=tuple(specs), options=options,
                    policy=policy, pipeline="dhlo", graph=graph, plan=plan,
                    placement=placement, buffer_plan=buffer_plan, syms=syms,
-                   sym_names=tuple(s.name for s in syms))
+                   sym_names=tuple(s.name for s in syms),
+                   sharding_plan=sharding_plan)
 
 
 # -------------------------------------------------------------- compiled --
@@ -282,7 +320,8 @@ class Compiled:
             lens, lowered.policy, self.cache, compile_bucket, compile_exact,
             fingerprint=self._fingerprint,
             escalation_threshold=options.escalation_threshold,
-            on_tie_break=on_tie_break)
+            on_tie_break=on_tie_break,
+            sharding=lowered.sharding_plan)
 
     # ------------------------------------------------------------ public --
     def __call__(self, *arrays):
@@ -338,6 +377,9 @@ class Compiled:
             "dynamic_symbols": list(self.lowered.sym_names),
         }
         low = self.lowered
+        if low.sharding_plan is not None:
+            # emitted per-arg shardings + mesh-divisibility constraints
+            rep["sharding"] = low.sharding_plan.report()
         if low.graph is not None:
             templates = low.plan.template_counts()
             covered = sum(n for t, n in templates.items()
@@ -360,6 +402,29 @@ class Compiled:
         low = self.lowered
         padded = {s.uid: int(k) for s, k in zip(low.syms, key)}
         self._bucket_compiles += 1
+        if low.sharding_plan is not None:
+            import inspect
+
+            # AOT entries must compile against the exact input shardings
+            # the generated dispatch device_puts: (lens, *args)
+            shardings = (low.sharding_plan.lens_sharding(),
+                         *(low.sharding_plan.arg_sharding(i)
+                           for i in range(len(low.specs))))
+            params = inspect.signature(self.backend.build_bucket).parameters
+            if "arg_shardings" not in params and not any(
+                    p.kind is inspect.Parameter.VAR_KEYWORD
+                    for p in params.values()):
+                # failing loudly here beats the far-away input-sharding
+                # mismatch the AOT entry would raise at first call (the
+                # generated dispatch device_puts inputs onto the mesh)
+                raise ValueError(
+                    f"backend {self.backend.name!r} cannot compile under "
+                    f"CompileOptions(mesh=...): its build_bucket accepts "
+                    f"no 'arg_shardings' keyword — add the parameter "
+                    f"(see repro.api.backends) or compile without a mesh")
+            return self.backend.build_bucket(
+                low.graph, low.plan, low.syms, padded,
+                self.options.donate, arg_shardings=shardings)
         return self.backend.build_bucket(low.graph, low.plan, low.syms,
                                          padded, self.options.donate)
 

@@ -47,6 +47,11 @@ class BucketPolicy:
                 return rule
         return (self.kind, self.granule)
 
+    def rule(self, symbol_name: str) -> Tuple[str, int]:
+        """The effective ``(kind, granule)`` for a symbol — public so the
+        SPMD planner can tighten granules to mesh-axis multiples."""
+        return self._rule(symbol_name)
+
     def cap(self, symbol_name: str) -> Optional[int]:
         for name, c in self.caps:
             if name == symbol_name:

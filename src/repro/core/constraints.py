@@ -73,6 +73,11 @@ class ShapeConstraintStore:
         self._value_size: Dict[int, SizeExpr] = {}
         # divisibility facts: root uid -> lcm-ish set of known divisors
         self._divisors: Dict[int, Set[int]] = {}
+        # mesh-divisibility facts (SPMD plan): dim name -> (axes, multiple).
+        # A *plan-time* constraint: the bucket policy was tightened so
+        # every bucket of the dim is a multiple of the owning mesh axes'
+        # size product (repro.dist.spmd).
+        self.mesh_divisibility: Dict[str, Tuple[Tuple[str, ...], int]] = {}
         self.n_dim_constraints = 0
         self.n_size_constraints = 0
 
@@ -151,6 +156,20 @@ class ShapeConstraintStore:
             return {k for k in range(1, min(c, 1025)) if c % k == 0}
         return set(self._divisors.get(self._dim_uf.find(c.uid), set())) | {1}
 
+    def note_mesh_divisible(self, name: str,
+                            axes: Tuple[str, ...], k: int) -> None:
+        """Record an SPMD mesh constraint: dim ``name`` is sharded over
+        mesh ``axes`` whose size product is ``k``, and every *bucket* of
+        it is a multiple of ``k`` (the planner tightened the policy).
+
+        Deliberately NOT recorded as an ``assert_divisible`` fact on the
+        dim itself: the divisibility theorem holds for padded buckets,
+        not for the dim's runtime values — the §4.4 escalation path
+        compiles exact (possibly non-divisible) shapes, and a false
+        divisor fact would mislead vectorization decisions keyed on
+        ``known_divisors``."""
+        self.mesh_divisibility[name] = (tuple(axes), int(k))
+
     def is_divisible(self, d: Dim, k: int) -> bool:
         c = self.canon_dim(d)
         if isinstance(c, int):
@@ -202,4 +221,5 @@ class ShapeConstraintStore:
             "dim_constraints": self.n_dim_constraints,
             "size_constraints": self.n_size_constraints,
             "dim_symbols": len(self._dims),
+            "mesh_constraints": len(self.mesh_divisibility),
         }

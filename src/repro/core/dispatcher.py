@@ -273,6 +273,7 @@ def generate_dispatch(
     fingerprint: Optional[str] = None,
     escalation_threshold: Optional[int] = None,
     on_tie_break: Optional[Callable[[Sequence[Any]], Any]] = None,
+    sharding: Optional[Any] = None,
 ) -> Tuple[Callable, str]:
     """Generate the per-call host flow for one artifact, seen through
     ``lens``.
@@ -289,6 +290,13 @@ def generate_dispatch(
     cache's default) and ``compile_exact`` are given.  ``on_tie_break``
     handles a call that breaks a multi-site symbol tie (promote-on-change
     re-lowering); without it such a call raises a contract error.
+
+    ``sharding`` is an SPMD :class:`~repro.dist.spmd.ShardingPlan`: the
+    generated flow then ``device_put``\\ s every padded bucket buffer to
+    its planned ``NamedSharding`` (buckets divide the mesh axes evenly by
+    the plan's tightened policy), pytree arguments through the plan's
+    per-leaf sharder, and the lens vector replicated; the escalation
+    branch re-fits shardings to the exact shapes.
     """
     fingerprint = fingerprint or cache.fingerprint
     if escalation_threshold is None:
@@ -296,6 +304,19 @@ def generate_dispatch(
     if compile_exact is None:
         escalation_threshold = None
     n_syms = len(lens.sym_names)
+
+    def _arg_put(ai: int) -> Optional[Callable]:
+        if sharding is None:
+            return None
+        sh = sharding.arg_sharding(ai)
+        if sh is None:
+            return None
+
+        def put(x, _sh=sh):
+            import jax
+            return jax.device_put(x, _sh)
+
+        return put
 
     lines: List[str] = ["def _dispatch(arrays):"]
     w = lines.append
@@ -357,11 +378,16 @@ def generate_dispatch(
     if escalation_threshold is not None:
         w("    if _cache.should_escalate(exact, _fp, _esc):")
         w("        fn = _cache.get_or_compile_exact(exact, _compile_exact, _fp)")
+        # under a mesh, exact shapes need not divide the axes: re-fit
+        # the planned shardings to the concrete shapes per arg
+        call_arrays = "arrays" if sharding is None else "_put_exact(arrays)"
         if lens.outputs is None:
-            w("        return fn(*arrays)")
+            w(f"        return fn(*{call_arrays})")
         else:
-            w("        return list(fn(*arrays))")
+            w(f"        return list(fn(*{call_arrays}))")
         ns["_compile_exact"] = compile_exact
+        if sharding is not None:
+            ns["_put_exact"] = sharding.put_exact
 
     w("    entry = _get(('bucket', _fp, key))")
     w("    if entry is None:")
@@ -373,18 +399,41 @@ def generate_dispatch(
               + "], _np.int32)")
         else:
             w("    lens = _zero_lens")
+        if sharding is not None:
+            # true lengths are replicated control state: every mesh
+            # participant masks with the same lens vector
+            w("    lens = _put_lens(lens)")
+            lens_sh = sharding.lens_sharding()
+
+            def _put_lens(v, _sh=lens_sh):
+                import jax
+                return jax.device_put(v, _sh)
+
+            ns["_put_lens"] = _put_lens
 
     # --- padding plan: unrolled per argument (host-side zero-fill) -----
     call_args: List[str] = []
     for ai, ap in enumerate(lens.args):
+        put = _arg_put(ai)
         if ap.tree_axes:
             # pytree argument (TreeSpec): leaf-pad to the bucket key
             w(f"    x{ai} = _padtree{ai}(arrays[{ai}], key)")
             ns[f"_padtree{ai}"] = _tree_padder(ap.tree_axes)
+            sharder = sharding.tree_sharder(ai) if sharding is not None \
+                else None
+            if sharder is not None:
+                w(f"    x{ai} = _shardtree{ai}(x{ai})")
+                ns[f"_shardtree{ai}"] = sharder
             call_args.append(f"x{ai}")
             continue
         if not ap.dynamic:
-            call_args.append(f"arrays[{ai}]")
+            if put is not None:
+                # static argument: profile layout, fitted at plan time
+                w(f"    x{ai} = _put{ai}(arrays[{ai}])")
+                ns[f"_put{ai}"] = put
+                call_args.append(f"x{ai}")
+            else:
+                call_args.append(f"arrays[{ai}]")
             continue
         shape_expr = []
         for d in ap.shape:
@@ -402,6 +451,12 @@ def generate_dispatch(
         w(f"        _buf[{idx}] = _np.asarray({var})")
         w(f"        {var} = _buf")
         ns[f"_dt{ai}"] = np.dtype(ap.dtype)
+        if put is not None:
+            # padded bucket → its planned NamedSharding (buckets are
+            # mesh-axis multiples by the tightened policy, so the split
+            # is always even)
+            w(f"    {var} = _put{ai}({var})")
+            ns[f"_put{ai}"] = put
         call_args.append(var)
 
     entry_args = (["lens"] if lens.pass_lens else []) + call_args

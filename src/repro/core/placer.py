@@ -10,11 +10,18 @@ is *shape calculation* → host; everything else is tensor compute → device.
 The generated dispatcher (``runtime.py``) executes host-placed ops with
 numpy inside the compiled host flow; device ops are traced into the jitted
 executable.
+
+The device side of the split is **host/mesh** when the artifact compiles
+under ``CompileOptions(mesh=...)``: shape calculation still runs on the
+host (it is *replicated* control flow — every participant computes the
+same bucket key), while tensor compute is SPMD-partitioned over the mesh
+per the sharding plan.  The placement records the mesh so ``report()``
+shows where device ops actually land.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Set
+from typing import Any, Dict, List, Optional, Set
 
 import numpy as np
 
@@ -31,9 +38,26 @@ class Placement:
     host_ops: List[DOp]
     device_ops: List[DOp]
     host_value_ids: Set[int]
+    # the SPMD mesh device ops are partitioned over (None = one device)
+    mesh: Optional[Any] = None
 
-    def report(self) -> Dict[str, int]:
-        return {"host_ops": len(self.host_ops), "device_ops": len(self.device_ops)}
+    @property
+    def device_target(self) -> str:
+        """Where tensor compute lands: ``"device"`` or ``"mesh(...)"``."""
+        if self.mesh is None:
+            return "device"
+        shape = "x".join(f"{a}={int(s)}"
+                         for a, s in self.mesh.shape.items())
+        return f"mesh({shape})"
+
+    def report(self) -> Dict[str, Any]:
+        rep: Dict[str, Any] = {"host_ops": len(self.host_ops),
+                               "device_ops": len(self.device_ops),
+                               "device_target": self.device_target}
+        if self.mesh is not None:
+            rep["mesh_axes"] = {a: int(s)
+                                for a, s in self.mesh.shape.items()}
+        return rep
 
 
 def _is_small_int(v) -> bool:
@@ -47,7 +71,7 @@ def _is_small_int(v) -> bool:
     return n * np.dtype(v.dtype).itemsize <= _HOST_BYTES_LIMIT
 
 
-def place(graph: DGraph) -> Placement:
+def place(graph: DGraph, mesh: Optional[Any] = None) -> Placement:
     producer: Dict[int, DOp] = {}
     for op in graph.ops:
         for o in op.outputs:
@@ -84,4 +108,4 @@ def place(graph: DGraph) -> Placement:
     device_ops = [op for op in graph.ops if op.oid not in host]
     host_vals = {o.vid for op in host_ops for o in op.outputs}
     return Placement(host_ops=host_ops, device_ops=device_ops,
-                     host_value_ids=host_vals)
+                     host_value_ids=host_vals, mesh=mesh)

@@ -1,1 +1,27 @@
+"""``repro.dist`` — the SPMD subsystem.
+
+* :mod:`repro.dist.context`  — ambient-mesh context (``use_mesh`` /
+  ``maybe_shard`` activation hints; single-device no-op).
+* :mod:`repro.dist.profiles` — named sharding layouts (``dp`` / ``fsdp``
+  / ``tp``) over the logical ``("pod", "data", "model")`` axes.
+* :mod:`repro.dist.spmd`     — the plan-time SPMD planner: per-argument
+  shardings + mesh-divisibility bucket constraints, consumed by the
+  generated dispatch (``CompileOptions(mesh=..., sharding_profile=...)``).
+"""
 from .context import use_mesh, get_mesh, maybe_shard  # noqa: F401
+from .profiles import (  # noqa: F401
+    ALL_AXES, DP_AXES, PROFILES, ShardingProfile, get_profile,
+    list_profiles,
+)
+from .spmd import (  # noqa: F401
+    MeshDimConstraint, ShardingPlan, fit_spec, plan_spmd, replicated,
+)
+from ..launch.mesh import make_mesh  # noqa: F401  (device-state-free import)
+
+__all__ = [
+    "use_mesh", "get_mesh", "maybe_shard",
+    "ShardingProfile", "get_profile", "list_profiles", "PROFILES",
+    "DP_AXES", "ALL_AXES",
+    "ShardingPlan", "MeshDimConstraint", "plan_spmd", "fit_spec",
+    "replicated", "make_mesh",
+]

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -58,14 +59,28 @@ def _prune_spec(spec: PartitionSpec, mesh: Mesh) -> PartitionSpec:
 
 
 def maybe_shard(x: Any, spec: Optional[PartitionSpec]) -> Any:
-    """Constrain ``x`` to ``spec`` under the active mesh; identity otherwise."""
+    """Constrain ``x`` to ``spec`` under the active mesh; identity otherwise.
+
+    A spec *longer than the array's rank* (a layer spec written for the
+    full-production tensor reaching a reduced/squeezed variant) is
+    truncated to the leading ``ndim`` entries with a warning instead of
+    crashing — sharding is an optimization hint, never a correctness
+    requirement.
+    """
     mesh = get_mesh()
     if mesh is None or spec is None:
         return x
+    ndim = getattr(x, "ndim", None)
+    if ndim is not None and len(spec) > ndim:
+        warnings.warn(
+            f"maybe_shard: spec {spec} has {len(spec)} entries but the "
+            f"array has rank {ndim}; truncating the spec to the leading "
+            f"{ndim} entries", stacklevel=2)
+        spec = PartitionSpec(*tuple(spec)[:ndim])
     try:
         sharding = NamedSharding(mesh, _prune_spec(spec, mesh))
         return jax.lax.with_sharding_constraint(x, sharding)
     except ValueError:
-        # spec rank mismatch etc. — sharding is an optimization hint, never
-        # a correctness requirement; fall through to unconstrained
+        # remaining mismatches (uneven shards etc.) fall through to
+        # unconstrained
         return x

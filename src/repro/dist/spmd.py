@@ -1,0 +1,316 @@
+"""SPMD planner: specs + bucket policy + mesh + profile → a sharding plan.
+
+DISC's runtime flow (placement, buffer management, launch logic) is
+*generated at compile time* (§4); this module extends that contract to
+multi-device execution.  :func:`plan_spmd` runs at ``lower()`` time and
+decides, once per artifact:
+
+* **per-argument shardings** — each declared spec (``ArgSpec`` /
+  ``TreeSpec`` / pass-through ``None``) gets a ``PartitionSpec`` from the
+  :class:`~repro.dist.profiles.ShardingProfile`: dynamic dims the profile
+  owns land on their mesh axes, fully-static arguments get the profile's
+  weight layout (fitted to the mesh), pass-through arguments stay
+  untouched (persistent trees are sharded once by their owner, e.g. the
+  serve engine's params).
+* **mesh-divisibility bucket constraints** — a sharded dynamic dim's
+  buckets must divide evenly across the owning mesh axes *for every
+  bucket the policy can produce*.  The planner **tightens the
+  BucketPolicy** (granule ← lcm(granule, axis size)) so divisibility is a
+  plan-time theorem, not a per-call check — exactly the Nimble lesson
+  (shape-dependent logic stays out of the per-step path) composed with
+  Relax's (symbolic shapes must compose with distribution).  Contracts
+  that *cannot* be tightened — ``bucket="exact"`` dims, or a declared
+  ``max`` the mesh axes do not divide — raise
+  :class:`~repro.core.constraints.ConstraintViolation` at ``lower()``
+  time.
+
+The generated host dispatch consumes the plan: padded bucket buffers are
+``device_put`` to their ``NamedSharding`` (guaranteed-even by the
+tightened policy), lens vectors are replicated, and the §4.4 escalation
+branch re-fits shardings to the exact (possibly non-divisible) shapes.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.bucketing import BucketPolicy
+from ..core.constraints import ConstraintViolation
+from .profiles import ShardingProfile
+
+__all__ = ["MeshDimConstraint", "ShardingPlan", "plan_spmd", "fit_spec",
+           "replicated"]
+
+
+def fit_spec(shape: Sequence[int], spec: P, mesh: Mesh) -> P:
+    """Fit a logical spec to a concrete shape on a concrete mesh.
+
+    Axis names the mesh lacks are dropped (logical specs name the full
+    production axis set); axis groups that do not evenly divide the
+    dimension lose their outermost axis first (GSPMD requires even
+    division for explicit shardings — e.g. batch=1 cells, odd vocabs).
+    """
+    out = []
+    for i, entry in enumerate(spec):
+        if i >= len(shape) or entry is None:
+            out.append(None)
+            continue
+        axes = list(entry) if isinstance(entry, (tuple, list)) else [entry]
+        axes = [a for a in axes if a in mesh.axis_names]
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+            if shape[i] % prod == 0:
+                break
+            axes.pop(0)  # drop outermost (e.g. "pod") first
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """The fully-replicated sharding (lens vectors, scalars)."""
+    return NamedSharding(mesh, P())
+
+
+@dataclass(frozen=True)
+class MeshDimConstraint:
+    """One plan-time shape fact: every bucket of ``dim`` is a multiple of
+    ``multiple_of`` (the product of the owning mesh axes' sizes)."""
+
+    dim: str
+    axes: Tuple[str, ...]
+    multiple_of: int
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"dim": self.dim, "axes": list(self.axes),
+                "multiple_of": self.multiple_of}
+
+
+# per-argument plan entries
+_ARRAY, _TREE = "array", "tree"
+
+
+@dataclass
+class ShardingPlan:
+    """The emitted shardings for one artifact on one mesh."""
+
+    mesh: Mesh
+    profile: ShardingProfile
+    # per argument: None | ("array", PartitionSpec) |
+    #               ("tree", ((leaf_axis, mesh_axes | None), ...))
+    arg_entries: Tuple[Optional[Tuple[str, Any]], ...]
+    constraints: Tuple[MeshDimConstraint, ...] = ()
+    _cache: Dict[Any, NamedSharding] = field(default_factory=dict)
+
+    # ------------------------------------------------------------- lookup --
+    def _named(self, spec: P) -> NamedSharding:
+        key = tuple(spec)
+        s = self._cache.get(key)
+        if s is None:
+            s = self._cache[key] = NamedSharding(self.mesh, spec)
+        return s
+
+    def arg_sharding(self, i: int) -> Optional[NamedSharding]:
+        """The bucket-time sharding of array argument ``i`` (``None`` for
+        pass-through and tree arguments)."""
+        e = self.arg_entries[i]
+        if e is None or e[0] != _ARRAY:
+            return None
+        return self._named(e[1])
+
+    def lens_sharding(self) -> NamedSharding:
+        return self._named(P())
+
+    # -------------------------------------------------------------- trees --
+    def tree_sharder(self, i: int) -> Optional[Callable[[Any], Any]]:
+        """A ``tree -> tree`` callable ``device_put``-ing every array leaf
+        of pytree argument ``i`` to its per-leaf sharding (``None`` when
+        the argument is not a tree or shards nothing)."""
+        e = self.arg_entries[i]
+        if e is None or e[0] != _TREE:
+            return None
+        axes = [(ax, ma) for ax, ma in e[1] if ma]
+        if not axes:
+            return None
+
+        by_shape: Dict[Tuple[int, ...], Any] = {}
+
+        def put(tree):
+            import jax
+
+            def put_leaf(x):
+                shape = getattr(x, "shape", None)
+                if shape is None:
+                    return x
+                # padded bucket shapes recur across calls: cache the
+                # fitted sharding per shape (cheap hot-path dispatch)
+                sh = by_shape.get(tuple(shape))
+                if sh is None:
+                    entries: List[Any] = [None] * len(shape)
+                    for ax, ma in axes:
+                        if ax < len(shape):
+                            entries[ax] = ma
+                    sh = self._named(fit_spec(shape, P(*entries),
+                                              self.mesh))
+                    by_shape[tuple(shape)] = sh
+                return jax.device_put(x, sh)
+
+            return jax.tree.map(put_leaf, tree)
+
+        return put
+
+    # --------------------------------------------------------- escalation --
+    def put_exact(self, arrays: Sequence[Any]) -> List[Any]:
+        """Shard a call's *exact* (unpadded, possibly non-divisible)
+        arguments for the §4.4 escalation path: each logical spec is
+        re-fitted to the concrete shape, dropping axes that no longer
+        divide evenly."""
+        import jax
+
+        out = []
+        for i, x in enumerate(arrays):
+            e = self.arg_entries[i]
+            if e is None:
+                out.append(x)
+            elif e[0] == _ARRAY:
+                shape = tuple(getattr(x, "shape", ()))
+                out.append(jax.device_put(
+                    x, self._named(fit_spec(shape, e[1], self.mesh))))
+            else:
+                sharder = self.tree_sharder(i)
+                out.append(sharder(x) if sharder is not None else x)
+        return out
+
+    # ------------------------------------------------------------- report --
+    def report(self) -> Dict[str, Any]:
+        per_arg: List[Any] = []
+        for e in self.arg_entries:
+            if e is None:
+                per_arg.append(None)
+            elif e[0] == _ARRAY:
+                per_arg.append(str(e[1]))
+            else:
+                per_arg.append(
+                    {"tree": {ax: list(ma) if ma else None
+                              for ax, ma in e[1]}})
+        return {
+            "mesh": {a: int(s) for a, s in self.mesh.shape.items()},
+            "profile": self.profile.name,
+            "per_arg": per_arg,
+            "constraints": [c.as_dict() for c in self.constraints],
+        }
+
+
+def _tighten(policy: BucketPolicy, name: str, axes: Tuple[str, ...],
+             m: int) -> BucketPolicy:
+    """Tighten ``name``'s bucket rule so every bucket is a multiple of
+    ``m`` — or prove it impossible (ConstraintViolation)."""
+    import dataclasses
+
+    kind, g = policy.rule(name)
+    if kind == "exact":
+        raise ConstraintViolation(
+            f"dim {name!r} is sharded over mesh axes {axes} (size {m}) but "
+            f"uses bucket='exact': exact buckets equal the runtime value "
+            f"and cannot be proven divisible at plan time — use 'pow2' or "
+            f"'multiple' bucketing, or a profile that does not shard "
+            f"{name!r}")
+    cap = policy.cap(name)
+    if cap is not None and cap % m != 0:
+        raise ConstraintViolation(
+            f"dim {name!r} has max={cap}, not a multiple of its mesh axes "
+            f"{axes} (size {m}): the cap-clamped bucket could not be "
+            f"sharded evenly — declare a max divisible by {m}")
+    g2 = math.lcm(g, m)
+    if g2 == g:
+        return policy
+    replaced = False
+    overrides: List[Tuple[str, Tuple[str, int]]] = []
+    for n, rule in policy.overrides:
+        if n == name:
+            overrides.append((n, (kind, g2)))
+            replaced = True
+        else:
+            overrides.append((n, rule))
+    if not replaced:
+        overrides.append((name, (kind, g2)))
+    return dataclasses.replace(policy, overrides=tuple(overrides))
+
+
+def plan_spmd(specs: Sequence[Any], policy: BucketPolicy, mesh: Mesh,
+              profile: ShardingProfile,
+              ) -> Tuple[ShardingPlan, BucketPolicy]:
+    """Plan the per-argument shardings for one lowering.
+
+    ``specs`` are the normalized per-argument specs (``ArgSpec`` /
+    ``TreeSpec`` / ``None``); returns the plan plus the **tightened**
+    bucket policy (sharded dynamic dims' granules are raised to the lcm
+    with the owning mesh-axis sizes, so every bucket divides evenly).
+    """
+    from ..frontends.jaxpr_frontend import ArgSpec, TreeSpec
+
+    mesh_axes = set(mesh.axis_names)
+
+    # resolve each dynamic dim the profile owns to axes present on the mesh
+    def present_axes(dim_name: str) -> Tuple[str, ...]:
+        axes = profile.axes_for_dim(dim_name) or ()
+        return tuple(a for a in axes if a in mesh_axes)
+
+    constraints: List[MeshDimConstraint] = []
+    seen: set = set()
+
+    def note(dim_name: str) -> Tuple[str, ...]:
+        nonlocal policy
+        axes = present_axes(dim_name)
+        if not axes:
+            return ()
+        m = 1
+        for a in axes:
+            m *= int(mesh.shape[a])
+        if m > 1 and dim_name not in seen:
+            seen.add(dim_name)
+            policy = _tighten(policy, dim_name, axes, m)
+            constraints.append(
+                MeshDimConstraint(dim=dim_name, axes=axes, multiple_of=m))
+        return axes
+
+    entries: List[Optional[Tuple[str, Any]]] = []
+    for spec in specs:
+        if spec is None:
+            entries.append(None)
+            continue
+        if isinstance(spec, TreeSpec):
+            entries.append((_TREE, tuple(
+                (ax, note(d) or None) for ax, d in spec.axes)))
+            continue
+        assert isinstance(spec, ArgSpec)
+        if any(isinstance(d, str) for d in spec.shape):
+            parts: List[Any] = []
+            for d in spec.shape:
+                axes = note(d) if isinstance(d, str) else ()
+                if not axes:
+                    parts.append(None)
+                elif len(axes) == 1:
+                    parts.append(axes[0])
+                else:
+                    parts.append(axes)
+            entries.append((_ARRAY, P(*parts)))
+        else:
+            # fully static: weight-like — profile layout, fitted now
+            # (static shapes are known at plan time)
+            entries.append((_ARRAY, fit_spec(
+                spec.shape, profile.leaf_spec(tuple(spec.shape)), mesh)))
+
+    plan = ShardingPlan(mesh=mesh, profile=profile,
+                        arg_entries=tuple(entries),
+                        constraints=tuple(constraints))
+    return plan, policy

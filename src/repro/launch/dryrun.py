@@ -29,6 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCH_IDS, get_config
 from ..dist.context import use_mesh
+from ..dist.spmd import fit_spec as _fit_spec
 from ..models.registry import get_model
 from ..roofline.analysis import analyze_compiled
 from ..train.step import TrainConfig, make_train_step, train_state_init
@@ -38,32 +39,8 @@ from .shapes import SHAPE_CELLS, cells_for_arch, input_specs
 REPORT_DIR = pathlib.Path(__file__).resolve().parents[3] / "reports" / "dryrun"
 
 
-def _fit_spec(shape, spec: P, mesh) -> P:
-    """Drop mesh axes that don't divide the dimension (e.g. batch=1 cells,
-    odd vocab sizes) — GSPMD requires even division for explicit shardings."""
-    out = []
-    for i, entry in enumerate(spec):
-        if i >= len(shape) or entry is None:
-            out.append(None)
-            continue
-        axes = list(entry) if isinstance(entry, (tuple, list)) else [entry]
-        axes = [a for a in axes if a in mesh.axis_names]
-        while axes:
-            prod = 1
-            for a in axes:
-                prod *= mesh.shape[a]
-            if shape[i] % prod == 0:
-                break
-            axes.pop(0)  # drop outermost (e.g. "pod") first
-        if not axes:
-            out.append(None)
-        elif len(axes) == 1:
-            out.append(axes[0])
-        else:
-            out.append(tuple(axes))
-    return P(*out)
-
-
+# spec fitting (drop axes that don't divide the dim) lives in
+# repro.dist.spmd.fit_spec now — shared with the SPMD planner
 def _shardings(tree_specs, tree_sds, mesh):
     return jax.tree.map(
         lambda s, v: NamedSharding(mesh, _fit_spec(v.shape, s, mesh)),

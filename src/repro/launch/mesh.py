@@ -1,33 +1,68 @@
-"""Production mesh construction (multi-pod dry-run contract).
+"""Mesh construction — general factory + production presets.
 
-A FUNCTION, not a module-level constant — importing this module never
+FUNCTIONS, not module-level constants — importing this module never
 touches jax device state.
+
+:func:`make_mesh` builds a mesh of any shape over any axis names (small
+forced-host meshes for tests / CI / ``launch/dryrun.py``,
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``);
+:func:`make_production_mesh` keeps the production shapes as presets on
+top of it (16×16 single-pod, 2×16×16 two-pod).
 """
 from __future__ import annotations
 
+from typing import Optional, Sequence, Tuple
+
 import jax
 
-__all__ = ["make_production_mesh", "MESH_AXES"]
+__all__ = ["make_mesh", "make_production_mesh", "MESH_AXES",
+           "PRODUCTION_SHAPES"]
 
 MESH_AXES = {"single": ("data", "model"), "multi": ("pod", "data", "model")}
 
+#: preset name -> (shape, axes)
+PRODUCTION_SHAPES = {
+    "single": ((16, 16), MESH_AXES["single"]),
+    "multi": ((2, 16, 16), MESH_AXES["multi"]),
+}
 
-def make_production_mesh(*, multi_pod: bool = False):
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    """A mesh of ``shape`` over ``axes`` from the first
+    ``prod(shape)`` available devices (or an explicit ``devices`` list).
+
+    No device-count floor beyond the shape itself: ``make_mesh((2, 2),
+    ("data", "model"))`` works on any 4-device platform, including CPU
+    hosts forced to N devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    shape = tuple(int(s) for s in shape)
+    axes = tuple(axes)
+    if len(shape) != len(axes):
+        raise ValueError(
+            f"mesh shape {shape} has {len(shape)} dims but {len(axes)} "
+            f"axis names {axes}")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = list(jax.devices() if devices is None else devices)[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — force "
+            f"a host device count with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} (set "
+            f"before jax initializes)")
+    import numpy as np
+    return jax.sharding.Mesh(np.array(devices).reshape(shape), axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh.
 
     ``pod`` composes with ``data`` for gradient reduction (hierarchical:
     reduce-scatter intra-pod, all-reduce inter-pod is XLA's decomposition
     given the axis ordering).
     """
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    n = 1
-    for s in shape:
-        n *= s
-    devices = jax.devices()[:n]
-    if len(devices) < n:
-        raise RuntimeError(
-            f"mesh {shape} needs {n} devices, have {len(devices)} — run via "
-            f"launch/dryrun.py which forces XLA_FLAGS host device count")
-    import numpy as np
-    return jax.sharding.Mesh(np.array(devices).reshape(shape), axes)
+    shape, axes = PRODUCTION_SHAPES["multi" if multi_pod else "single"]
+    return make_mesh(shape, axes)

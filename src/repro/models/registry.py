@@ -26,20 +26,36 @@ class Model:
     prefill: Callable         # (params, cache, tokens, lens, offsets) -> (last_logits, cache)
 
 
-def row_keep_mask(keep: jax.Array, leaf: jax.Array) -> jax.Array:
-    """Broadcast a per-row mask (B,) against a cache leaf.
+def cache_batch_axis(shape, batch: int) -> Optional[int]:
+    """The batch axis of a cache leaf, or ``None`` if no axis matches.
 
     Cache leaves are layer-stacked ``(L, B, ...)`` in every model family
     (``init_cache`` stacks per-layer trees), so the batch axis is axis 1;
-    a leaf whose axis 1 doesn't match falls back to a leading batch axis.
-    Used to gate cache updates so inactive rows (mid-prefill slots,
-    padded batch rows) are never touched by a step they didn't take.
+    a leaf whose axis 1 doesn't match falls back to a leading batch
+    axis.  The single source of this rule — masking
+    (:func:`row_keep_mask`) and SPMD cache placement (the serve engine)
+    must agree on it.
+    """
+    nd = len(shape)
+    if nd >= 2 and shape[1] == batch:
+        return 1
+    if nd >= 1 and shape[0] == batch:
+        return 0
+    return None
+
+
+def row_keep_mask(keep: jax.Array, leaf: jax.Array) -> jax.Array:
+    """Broadcast a per-row mask (B,) against a cache leaf (see
+    :func:`cache_batch_axis` for the axis rule).  Used to gate cache
+    updates so inactive rows (mid-prefill slots, padded batch rows) are
+    never touched by a step they didn't take.
     """
     b = keep.shape[0]
     nd = len(leaf.shape)
-    if nd >= 2 and leaf.shape[1] == b:
+    ax = cache_batch_axis(leaf.shape, b)
+    if ax == 1:
         return keep.reshape((1, b) + (1,) * (nd - 2))
-    if nd >= 1 and leaf.shape[0] == b:
+    if ax == 0:
         return keep.reshape((b,) + (1,) * (nd - 1))
     raise ValueError(
         f"cache leaf of shape {tuple(leaf.shape)} has no axis matching "

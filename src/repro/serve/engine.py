@@ -31,6 +31,23 @@ solved here exactly as DISC prescribes, built entirely on the public
 * ``ServeConfig(prefill_mode="replay")`` keeps the previous
   O(prompt_len)-sequential-launches prefill as a benchmark baseline
   (``benchmarks/bench_serve.py`` measures the gap).
+* **replicas** (``ServeConfig(replicas=N)``): data-parallel serving.
+  The engine owns ``N x max_batch`` KV-cache rows; replica ``r`` owns the
+  contiguous slot range ``[r*max_batch, (r+1)*max_batch)``.  Admission
+  routes each request (in policy order) to the **least-loaded replica**
+  with a free slot; decode is ONE launch over the whole replicated batch
+  (the SPMD way: on a mesh the batch axis is partitioned over the
+  ``data`` axis, so each replica's rows live on its own devices), so
+  tokens per decode launch scale with the replica count.  Stats gain
+  per-replica counters (``stats["per_replica"]``).
+* **mesh** (``ServeConfig(mesh=..., sharding_profile=...)``): params and
+  the KV cache are ``device_put`` per the
+  :class:`~repro.dist.profiles.ShardingProfile` (per-replica cache rows
+  sharded along ``data``), and the prefill artifact compiles under
+  ``CompileOptions(mesh=...)`` so its generated dispatch emits
+  ``device_put``-to-sharding on padded buckets (see
+  :mod:`repro.dist.spmd`); the total slot count must divide the
+  data-parallel axes evenly (checked at engine construction).
 
 Both artifacts share one :class:`CompileCache` (entries keyed by
 per-artifact fingerprint); compile counts come from the artifacts'
@@ -55,7 +72,8 @@ from ..core.bucketing import BucketPolicy, POW2
 from ..core.cache import CompileCache
 from ..data.pipeline import Request
 from ..frontends.jaxpr_frontend import ArgSpec
-from ..models.registry import Model, replay_prefill, row_keep_mask
+from ..models.registry import (Model, cache_batch_axis, replay_prefill,
+                               row_keep_mask)
 from .policies import get_admission_policy
 
 # admission groups bucket to powers of two starting at 1 (1, 2, 4, ...,
@@ -82,6 +100,10 @@ STATS_KEYS: Dict[str, str] = {
     "max_decode_gap_s": "longest wall-clock gap between decode launches "
                         "while decode work was pending (decode stall)",
     "requests_completed": "requests retired into done",
+    "per_replica": "one dict per replica: admitted, tokens_generated, "
+                   "requests_completed, occupied_slots (slot-range "
+                   "[r*max_batch, (r+1)*max_batch) counters under "
+                   "least-loaded routing)",
 }
 
 
@@ -107,6 +129,15 @@ class ServeConfig:
     prefill_interleave: int = 1
     # admission policy name (repro.serve.policies) or callable
     admission: Union[str, Callable] = "fifo"
+    # data-parallel replica count: the engine serves replicas*max_batch
+    # slots, one decode launch over all of them; admission routes each
+    # request to the least-loaded replica's slot range
+    replicas: int = 1
+    # SPMD placement: a jax.sharding.Mesh + profile name/object (see
+    # repro.dist.profiles).  Params/caches are device_put per the
+    # profile; the prefill artifact compiles under CompileOptions(mesh=)
+    mesh: Optional[Any] = None
+    sharding_profile: Optional[Any] = None
 
 
 @dataclass
@@ -129,12 +160,22 @@ class ServeEngine:
             raise ValueError(
                 f"unknown prefill_mode {scfg.prefill_mode!r} "
                 f"(expected 'batched' or 'replay')")
+        if scfg.replicas < 1:
+            raise ValueError(f"ServeConfig(replicas={scfg.replicas}): "
+                             f"need at least 1 replica")
+        if scfg.sharding_profile is not None and scfg.mesh is None:
+            # mirror CompileOptions: a profile without a mesh is a
+            # misconfiguration, not a silent single-device fallback
+            raise ValueError(
+                "ServeConfig(sharding_profile=...) needs a mesh: pass "
+                "ServeConfig(mesh=..., sharding_profile=...)")
         self.model = model
         self.params = params
         self.scfg = scfg
-        self.cache = model.init_cache(scfg.max_batch, scfg.max_seq)
-        self.lens = np.zeros((scfg.max_batch,), np.int32)
-        self.slots: List[Optional[_Slot]] = [None] * scfg.max_batch
+        self.n_slots = scfg.replicas * scfg.max_batch
+        self.cache = model.init_cache(self.n_slots, scfg.max_seq)
+        self.lens = np.zeros((self.n_slots,), np.int32)
+        self.slots: List[Optional[_Slot]] = [None] * self.n_slots
         self.queue: List[Request] = []
         self.done: Dict[int, List[int]] = {}
         self._admit_order = get_admission_policy(scfg.admission)
@@ -144,6 +185,17 @@ class ServeEngine:
         self._bucket_pairs: Set[Tuple[int, int]] = set()
         self._busy_s = 0.0
         self._last_decode_t: Optional[float] = None
+        self._rep_counters = [
+            {"admitted": 0, "tokens_generated": 0, "requests_completed": 0}
+            for _ in range(scfg.replicas)]
+
+        # SPMD placement: shard the persistent trees once at init (the
+        # per-call argument shardings are the prefill artifact's job)
+        self.mesh = scfg.mesh
+        self._dp_axes: Tuple[str, ...] = ()
+        self._put_args = lambda *xs: xs  # decode-input placement
+        if self.mesh is not None:
+            self._init_mesh(model)
 
         # one compile cache shared by both artifacts; entries are keyed by
         # per-artifact fingerprint so prefill/decode never collide
@@ -152,7 +204,7 @@ class ServeEngine:
             scfg.prefill_policy,
             overrides=tuple(scfg.prefill_policy.overrides) + (
                 ("B", (scfg.batch_policy.kind, scfg.batch_policy.granule)),))
-        dim_b = Dim("B", max=scfg.max_batch)
+        dim_b = Dim("B", max=self.n_slots)
         self._prefill_fn = disc_compile(
             self._prefill_call,
             specs=[None,                 # params pytree
@@ -165,6 +217,9 @@ class ServeEngine:
                                    policy=pol,
                                    escalation_threshold=
                                    scfg.escalation_threshold,
+                                   mesh=scfg.mesh,
+                                   sharding_profile=scfg.sharding_profile
+                                   if scfg.mesh is not None else None,
                                    cache=self.compile_cache))
         self._decode_fn = disc_compile(
             self._decode_step,
@@ -173,6 +228,76 @@ class ServeEngine:
         self.stats: Dict[str, Any] = {k: 0 for k in STATS_KEYS}
         self.stats["tokens_per_sec"] = 0.0
         self.stats["max_decode_gap_s"] = 0.0
+        self.stats["per_replica"] = [dict(c) for c in self._rep_counters]
+
+    def _init_mesh(self, model: Model) -> None:
+        """Shard params + KV cache onto the mesh per the profile: params
+        follow the profile's weight layout, cache rows are partitioned
+        along the data-parallel axes on their batch axis (axis 1 of the
+        layer-stacked ``(L, B, ...)`` leaves) — each replica's rows live
+        on its own slice of the ``data`` axis."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from ..dist.profiles import get_profile
+        from ..dist.spmd import fit_spec
+
+        profile = get_profile(self.scfg.sharding_profile or "dp")
+        self.profile = profile
+        # the axes the PROFILE shards the batch dim on (not a hardcoded
+        # DP set): the cache layout, the slot-divisibility guard, and
+        # the decode-input placement must all agree with what the
+        # prefill artifact's planner emits for "B"
+        self._dp_axes = tuple(a for a in profile.batch_axes()
+                              if a in self.mesh.axis_names)
+        dp = 1
+        for a in self._dp_axes:
+            dp *= int(self.mesh.shape[a])
+        if dp > 1 and self.n_slots % dp != 0:
+            raise ValueError(
+                f"replicas*max_batch={self.n_slots} slots must divide the "
+                f"batch-sharding mesh axes {self._dp_axes} (size {dp}) "
+                f"evenly — adjust replicas/max_batch or the mesh shape")
+
+        def put(x, spec):
+            return jax.device_put(x, NamedSharding(
+                self.mesh, fit_spec(tuple(x.shape), spec, self.mesh)))
+
+        logical = model.specs() if profile.param_mode == "tp" else None
+        pspecs = profile.param_specs(self.params, logical)
+        self.params = jax.tree.map(
+            lambda s, x: put(x, s), pspecs, self.params,
+            is_leaf=lambda s: isinstance(s, P))
+        if profile.param_mode == "tp":
+            # honor the model's logical cache layout (already rank-
+            # aligned with the layer-stacked leaves: batch along the DP
+            # axes, heads/sequence along "model")
+            cspecs = model.cache_specs()
+            self._put_cache = lambda tree: jax.tree.map(
+                lambda s, c: put(c, s), cspecs, tree,
+                is_leaf=lambda s: isinstance(s, P))
+        else:
+            def batch_spec(leaf):
+                # same batch-axis rule the masking path uses; a leaf
+                # with no batch axis stays replicated
+                ax = cache_batch_axis(leaf.shape, self.n_slots)
+                if ax is None:
+                    return P(*([None] * leaf.ndim))
+                return profile.batch_leaf_spec(leaf.ndim, ax)
+
+            self._put_cache = lambda tree: jax.tree.map(
+                lambda c: put(c, batch_spec(c)), tree)
+        self.cache = self._put_cache(self.cache)
+        # decode inputs have fixed shapes: precompute their shardings
+        # once — the decode loop is the per-token hot path
+        dp_spec = self._dp_axes if self._dp_axes else None
+        dec_shardings = tuple(
+            NamedSharding(self.mesh,
+                          fit_spec(shape, P(*((dp_spec,)
+                                              + (None,) * (len(shape) - 1))),
+                                   self.mesh))
+            for shape in ((self.n_slots, 1), (self.n_slots,),
+                          (self.n_slots,)))
+        self._put_args = lambda *xs: tuple(
+            jax.device_put(x, s) for x, s in zip(xs, dec_shardings))
 
     # ------------------------------------------------------------ device --
     def _prefill_call(self, params, rows, tokens, lens, offsets):
@@ -214,26 +339,41 @@ class ServeEngine:
                     f"exceeds ServeConfig(max_seq={self.scfg.max_seq})")
         self.queue.extend(reqs)
 
+    def _replica_of(self, slot: int) -> int:
+        return slot // self.scfg.max_batch
+
     def _admit(self) -> None:
         """Claim free slots for waiting requests in policy order; admitted
         requests enter the prefill state (launched by the next
-        :meth:`_prefill_group` calls, grouped by chunk bucket)."""
-        free = [i for i, s in enumerate(self.slots) if s is None]
-        if not free or not self.queue:
+        :meth:`_prefill_group` calls, grouped by chunk bucket).
+
+        With replicas, each request (still in policy order) is routed to
+        the **least-loaded replica** that has a free slot (ties break to
+        the lowest replica index), so replica KV caches fill evenly."""
+        mb = self.scfg.max_batch
+        free_by_rep = [[i for i in range(r * mb, (r + 1) * mb)
+                        if self.slots[i] is None]
+                       for r in range(self.scfg.replicas)]
+        n_free = sum(len(f) for f in free_by_rep)
+        if not n_free or not self.queue:
             return
-        take = self._admit_order(self.queue)[:len(free)]
+        take = self._admit_order(self.queue)[:n_free]
         # remove by identity: Request's dataclass __eq__ compares numpy
         # token arrays, so list.remove() would be both O(n·plen) and
         # ambiguous-truth-value prone
         taken = {id(r) for r in take}
         self.queue = [r for r in self.queue if id(r) not in taken]
         for req in take:
-            i = free.pop(0)
+            rep = min((r for r in range(self.scfg.replicas)
+                       if free_by_rep[r]),
+                      key=lambda r: (mb - len(free_by_rep[r]), r))
+            i = free_by_rep[rep].pop(0)
             toks = np.asarray(req.tokens, np.int32)
             self.slots[i] = _Slot(rid=req.rid, tokens=toks,
                                   plen=int(toks.shape[0]),
                                   remaining=req.max_new_tokens)
             self.lens[i] = 0
+            self._rep_counters[rep]["admitted"] += 1
 
     def _prefill_group(self) -> None:
         """One prefill launch: group prefill-state slots by the bucket of
@@ -273,10 +413,15 @@ class ServeEngine:
             lambda full, row: full.at[:, idx].set(
                 row[:, :nb].astype(full.dtype)) if full.ndim > 1 else full,
             self.cache, new_rows)
+        if self.mesh is not None:
+            # the eager scatter above may change leaf shardings; pin the
+            # cache back to its planned layout so the decode artifact's
+            # jit entries never retrace on a sharding flip
+            self.cache = self._put_cache(self.cache)
         last = np.asarray(logits[:nb])
 
         self._bucket_pairs.add((
-            min(self.scfg.batch_policy.bucket("B", nb), self.scfg.max_batch),
+            min(self.scfg.batch_policy.bucket("B", nb), self.n_slots),
             min(self.scfg.prefill_policy.bucket("S", smax),
                 self.scfg.max_seq)))
         self.stats["prefill_calls"] += 1
@@ -291,6 +436,8 @@ class ServeEngine:
                 s.state = "decode"
                 s.generated.append(int(np.argmax(last[r])))
                 self.stats["tokens_generated"] += 1
+                self._rep_counters[self._replica_of(i)][
+                    "tokens_generated"] += 1
                 self._maybe_retire(i)
             else:
                 chunked = True
@@ -298,16 +445,22 @@ class ServeEngine:
             self.stats["prefill_chunks"] += 1
 
     def _decode(self) -> None:
+        """One decode launch over ALL replicas' rows — the tokens-per-
+        launch scaling replicas buy; on a mesh the batch axis is
+        partitioned along ``data``, so each replica computes its own
+        rows."""
         active_idx = [i for i, s in enumerate(self.slots)
                       if s is not None and s.state == "decode"]
-        tokens = np.zeros((self.scfg.max_batch, 1), np.int32)
-        active = np.zeros((self.scfg.max_batch,), bool)
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        active = np.zeros((self.n_slots,), bool)
         for i in active_idx:
             tokens[i, 0] = self.slots[i].generated[-1]
             active[i] = True
-        logits, self.cache = self._decode_fn(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(self.lens), jnp.asarray(active))
+        t, l, a = self._put_args(jnp.asarray(tokens),
+                                 jnp.asarray(self.lens),
+                                 jnp.asarray(active))
+        logits, self.cache = self._decode_fn(self.params, self.cache,
+                                             t, l, a)
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
         now = time.monotonic()
         if self._last_decode_t is not None:
@@ -321,6 +474,7 @@ class ServeEngine:
             slot.generated.append(int(nxt[i]))
             slot.remaining -= 1
             self.stats["tokens_generated"] += 1
+            self._rep_counters[self._replica_of(i)]["tokens_generated"] += 1
             self._maybe_retire(i)
 
     def _maybe_retire(self, i: int) -> None:
@@ -329,6 +483,8 @@ class ServeEngine:
                 or self.lens[i] >= self.scfg.max_seq - 1):
             self.done[slot.rid] = slot.generated
             self.stats["requests_completed"] += 1
+            self._rep_counters[self._replica_of(i)][
+                "requests_completed"] += 1
             self.slots[i] = None
             self.lens[i] = 0
 
@@ -386,6 +542,9 @@ class ServeEngine:
             self.stats[k] = 0
         self.stats["tokens_per_sec"] = 0.0
         self.stats["max_decode_gap_s"] = 0.0
+        self._rep_counters = [
+            {"admitted": 0, "tokens_generated": 0, "requests_completed": 0}
+            for _ in range(self.scfg.replicas)]
         self._busy_s = 0.0
         self._last_decode_t = None
         self._refresh_stats()
@@ -395,6 +554,12 @@ class ServeEngine:
         self.stats["prefill_compiles"] = pc["total"]
         self.stats["prefill_escalations"] = pc["exact"]
         self.stats["prefill_bucket_pairs"] = len(self._bucket_pairs)
+        mb = self.scfg.max_batch
+        self.stats["per_replica"] = [
+            dict(c, occupied_slots=sum(
+                s is not None
+                for s in self.slots[r * mb:(r + 1) * mb]))
+            for r, c in enumerate(self._rep_counters)]
         if self._busy_s > 0:
             self.stats["tokens_per_sec"] = \
                 self.stats["tokens_generated"] / self._busy_s

@@ -1,3 +1,13 @@
+import os
+
+# Force a multi-device host platform for the whole suite so the SPMD
+# tests (tests/test_dist_spmd.py) exercise real >1-axis meshes.  Must be
+# set before jax initializes; conftest imports before any test module.
+# An explicit XLA_FLAGS in the environment wins (the tests then skip
+# whatever the device count cannot support).
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
 import numpy as np
 import pytest
 
