@@ -11,15 +11,27 @@ stall (longest gap between decode launches).  Three comparisons:
 * **FIFO vs admission policies** (shortest-prompt-first, priority) on the
   batched engine;
 * **chunked vs unchunked prefill** on a long-prompt trace: decode stall
-  shrinks when prompts are split into chunks interleaved with decode.
+  shrinks when prompts are split into chunks interleaved with decode;
+* **paged vs fixed-row KV at equal cache memory**: the fixed engine's
+  ``max_batch`` rows of ``max_seq`` vs a block pool holding the same
+  number of KV positions shared by 4x the slots — short requests stop
+  paying for worst-case rows, so concurrency multiplies;
+* **speculative (n-gram) vs plain decode** on a repetition-heavy
+  long-tail trace: accepted drafts ride one widened verify launch, so
+  tokens/sec rises as decode launches fall.
 
 Writes ``BENCH_serve.json`` at the repo root.  Throughput is measured on
 a second pass over the same trace after a warmup pass, so compile time
 never pollutes the steady-state numbers (compile cost is reported
 separately).  Asserts (non-zero exit under ``benchmarks.run``): batched
 and replay generations are identical, batched tokens/sec beats replay
-(≥2x full, ≥1.1x smoke — CI boxes are noisy), and chunked prefill
-reduces max decode stall on the long-prompt trace (full mode only).
+(≥2x full, ≥1.1x smoke — CI boxes are noisy), chunked prefill reduces
+max decode stall on the long-prompt trace (full mode only), the
+equal-memory paged engine sustains ≥2x the fixed engine's peak
+concurrent slots while completing every request, an unconstrained pool
+reproduces the fixed engine's generations bit-exactly, and speculative
+decoding matches plain-decode outputs exactly with a tokens/sec win on
+the long-tail trace (full mode only).
 """
 from __future__ import annotations
 
@@ -35,7 +47,7 @@ import numpy as np
 
 from disc import ServeConfig, ServeEngine
 from repro.configs import get_config
-from repro.data.pipeline import VarLenRequestStream
+from repro.data.pipeline import Request, VarLenRequestStream
 from repro.models.registry import get_model
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -48,6 +60,20 @@ def _trace(vocab, *, n, lo, hi, max_new, seed=0, burst=4):
     for r in reqs:
         r.max_new_tokens = max_new
     return reqs
+
+
+def _motif_trace(vocab, *, n, lo, hi, max_new, seed=5, motif=4):
+    """Short repeated-motif prompts: the repetition-heavy long tail where
+    prompt-lookup drafting earns its keep (the model's greedy
+    continuations cycle, so n-gram drafts hit)."""
+    rng = np.random.RandomState(seed)
+    out = []
+    for i in range(n):
+        ln = int(rng.randint(lo, hi + 1))
+        pat = rng.randint(0, min(8, vocab), size=motif)
+        toks = np.tile(pat, -(-ln // motif))[:ln].astype(np.int32)
+        out.append(Request(rid=i, tokens=toks, max_new_tokens=max_new))
+    return out
 
 
 def _run_trace(eng, reqs, max_steps=50_000) -> Dict[int, float]:
@@ -112,6 +138,11 @@ def _measure(model, params, scfg, reqs_fn) -> Dict:
         "prefill_bucket_pairs": st["prefill_bucket_pairs"],
         "warmup_compiles": warm_compiles,
         "steady_state_new_compiles": st["prefill_compiles"] - warm_compiles,
+        "peak_active_slots": st["peak_active_slots"],
+        "kv_preemptions": st["kv_preemptions"],
+        "kv_peak_occupancy": round(st["kv_peak_occupancy"], 3),
+        "spec_drafted_tokens": st["spec_drafted_tokens"],
+        "spec_accepted_tokens": st["spec_accepted_tokens"],
         "done": dict(eng.done),
     }
 
@@ -124,14 +155,21 @@ def main(csv: List[str], smoke: bool = False) -> None:
 
     max_batch = 4
     max_seq = 128 if smoke else 256
+    kv_bs = 16
     if smoke:
         tput = dict(n=8, lo=24, hi=80, max_new=4)
         longp = dict(n=6, lo=8, hi=24, max_new=8)
         long_seq, long_len = 128, 96
+        pgd = dict(n=10, lo=16, hi=40, max_new=4, burst=10)
+        tail = dict(n=4, lo=12, hi=24, max_new=24)
+        paged_seq, spec_seq = 128, 128
     else:
         tput = dict(n=24, lo=48, hi=160, max_new=4)
         longp = dict(n=12, lo=8, hi=32, max_new=16)
         long_seq, long_len = 512, 448
+        pgd = dict(n=24, lo=32, hi=96, max_new=8, burst=24)
+        tail = dict(n=6, lo=12, hi=24, max_new=160)
+        paged_seq, spec_seq = 256, 256
 
     # ---- replay vs batched, FIFO vs policies (same throughput trace) ----
     runs: Dict[str, Dict] = {}
@@ -182,6 +220,63 @@ def main(csv: List[str], smoke: bool = False) -> None:
                 < chunked["unchunked"]["max_decode_gap_s"]), \
             "chunked prefill did not reduce max decode stall"
 
+    # ---- paged vs fixed rows at equal KV-cache memory -------------------
+    # the fixed engine's memory budget is max_batch rows of max_seq
+    # positions; the paged pool holds exactly that many positions
+    # (max_batch * max_seq / block_size blocks, + the never-allocated
+    # null block) but shares them across 4x the slots
+    fb = 2 if smoke else max_batch
+    pool_blocks = fb * paged_seq // kv_bs
+    paged_runs: Dict[str, Dict] = {}
+    grid = [("fixed_rows", dict(max_batch=fb, max_seq=paged_seq)),
+            ("paged_equal_mem", dict(max_batch=4 * fb, max_seq=paged_seq,
+                                     kv_block_size=kv_bs,
+                                     kv_pool_blocks=pool_blocks)),
+            ("paged_unconstrained", dict(max_batch=fb, max_seq=paged_seq,
+                                         kv_block_size=kv_bs))]
+    for name, kw in grid:
+        paged_runs[name] = _measure(model, params, ServeConfig(**kw),
+                                    lambda: _trace(cfg.vocab, **pgd))
+        csv.append(f"serve_{name},,"
+                   f"tps={paged_runs[name]['tokens_per_sec']}"
+                   f";peak_slots={paged_runs[name]['peak_active_slots']}"
+                   f";p50={paged_runs[name]['p50_latency_s']}")
+    assert paged_runs["paged_unconstrained"]["done"] \
+        == paged_runs["fixed_rows"]["done"], \
+        "unconstrained paged decode diverged from fixed rows"
+    n_req = len(paged_runs["fixed_rows"]["done"])
+    assert len(paged_runs["paged_equal_mem"]["done"]) == n_req, \
+        "equal-memory paged engine dropped requests"
+    slot_ratio = (paged_runs["paged_equal_mem"]["peak_active_slots"]
+                  / max(paged_runs["fixed_rows"]["peak_active_slots"], 1))
+    assert slot_ratio >= 2.0, \
+        f"equal-memory paged slots only {slot_ratio:.1f}x fixed (need 2x)"
+    csv.append(f"serve_paged_equal_mem_slot_ratio,,{slot_ratio:.1f}x")
+
+    # ---- speculative (n-gram) vs plain decode on the long tail ----------
+    spec_runs: Dict[str, Dict] = {}
+    for name, kw in (("plain_decode", {}),
+                     ("speculative_ngram", dict(speculative="ngram",
+                                                speculative_k=4))):
+        scfg = ServeConfig(max_batch=max_batch, max_seq=spec_seq, **kw)
+        spec_runs[name] = _measure(model, params, scfg,
+                                   lambda: _motif_trace(cfg.vocab, **tail))
+        csv.append(f"serve_{name},,"
+                   f"tps={spec_runs[name]['tokens_per_sec']}")
+    assert spec_runs["speculative_ngram"]["done"] \
+        == spec_runs["plain_decode"]["done"], \
+        "speculative greedy accept-or-fix diverged from plain decode"
+    drafted = spec_runs["speculative_ngram"]["spec_drafted_tokens"]
+    accepted = spec_runs["speculative_ngram"]["spec_accepted_tokens"]
+    spec_speedup = (spec_runs["speculative_ngram"]["tokens_per_sec"]
+                    / max(spec_runs["plain_decode"]["tokens_per_sec"],
+                          1e-9))
+    if not smoke:
+        assert spec_speedup >= 1.05, \
+            f"speculative tokens/sec {spec_speedup:.2f}x below 1.05x"
+    csv.append(f"serve_speculative_speedup,,{spec_speedup:.2f}x"
+               f";accept_rate={accepted / max(drafted, 1):.2f}")
+
     out = {
         "model": "tinyllama_11b.reduced(n_layers=2, vocab=512)",
         "smoke": smoke,
@@ -196,6 +291,22 @@ def main(csv: List[str], smoke: bool = False) -> None:
         "chunked_prefill": {
             k: {kk: vv for kk, vv in v.items() if kk != "done"}
             for k, v in chunked.items()},
+        "paged_kv": {
+            "config": {**pgd, "max_seq": paged_seq, "kv_block_size": kv_bs,
+                       "kv_pool_blocks": pool_blocks,
+                       "fixed_max_batch": fb, "paged_max_batch": 4 * fb},
+            "equal_memory_slot_ratio": round(slot_ratio, 1),
+            "runs": {k: {kk: vv for kk, vv in v.items() if kk != "done"}
+                     for k, v in paged_runs.items()},
+        },
+        "speculative": {
+            "config": {**tail, "max_seq": spec_seq, "speculative_k": 4,
+                       "proposer": "ngram"},
+            "speedup_vs_plain": round(spec_speedup, 2),
+            "accept_rate": round(accepted / max(drafted, 1), 2),
+            "runs": {k: {kk: vv for kk, vv in v.items() if kk != "done"}
+                     for k, v in spec_runs.items()},
+        },
     }
     (ROOT / "BENCH_serve.json").write_text(json.dumps(out, indent=2) + "\n")
     csv.append(f"serve_bench_json,,{(ROOT / 'BENCH_serve.json').name}")

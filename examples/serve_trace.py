@@ -6,9 +6,14 @@ Requests arrive in bursts (``VarLenRequestStream.sample_trace``) and are
 served by the 2-D-bucketed engine: each admission group prefills in ONE
 single-pass launch (``Dim("B")`` × ``Dim("S")`` buckets), long prompts
 are split into chunks interleaved with decode steps, and admission is
-priority-ordered.  The printed stats dict (every key documented in
-``repro.serve.engine.STATS_KEYS``) shows the batching and the
-O(#(B, S) buckets) compile contract.
+priority-ordered.  The engine runs on a paged KV cache
+(``kv_block_size=16``: slots own growable block lists instead of fixed
+``max_seq`` rows) with n-gram speculative decoding
+(``speculative="ngram"``: drafted tokens verified in one widened
+launch).  The printed stats dict (every key documented in
+``repro.serve.engine.STATS_KEYS``) shows the batching, the paging
+gauges, the draft accept counters, and the O(#(B, S) buckets) compile
+contract.
 """
 import dataclasses
 import time
@@ -29,7 +34,9 @@ def main():
     engine = ServeEngine(model, params,
                          ServeConfig(max_batch=4, max_seq=192,
                                      prefill_chunk=32,
-                                     admission="priority"))
+                                     admission="priority",
+                                     kv_block_size=16,
+                                     speculative="ngram"))
 
     stream = VarLenRequestStream(vocab=cfg.vocab, min_len=8, max_len=150,
                                  seed=0)

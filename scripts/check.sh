@@ -9,6 +9,10 @@
 #   scripts/check.sh --dist     # SPMD tests + dist benchmark smoke; run under
 #                               # XLA_FLAGS=--xla_force_host_platform_device_count=8
 #                               # for a real multi-device host mesh (CI does)
+#   scripts/check.sh --serve    # serve-path tests (batching, paged KV,
+#                               # speculative) + serve benchmark smoke, which
+#                               # asserts ≥2x concurrent slots at equal KV
+#                               # memory and paged/speculative output parity
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,6 +28,12 @@ fi
 if [[ "$MODE" == "--dist" ]]; then
     python -m pytest tests/test_dist_spmd.py -q
     python -m benchmarks.bench_dist --smoke
+    exit 0
+fi
+
+if [[ "$MODE" == "--serve" ]]; then
+    python -m pytest tests/test_serve_batching.py tests/test_serve_paging.py -q
+    python -m benchmarks.bench_serve --smoke
     exit 0
 fi
 

@@ -9,6 +9,7 @@ cursor for bookkeeping.
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Tuple
 
@@ -62,16 +63,28 @@ class SyntheticLMStream:
         self.seed = st["seed"]
 
 
+# process-wide monotonic request-id source: a Request's rid is its STABLE
+# identity — the serve engine keys admission removal, preemption requeue,
+# and the done dict on it, so it must be unique among in-flight requests
+_RID_COUNTER = itertools.count()
+
+
 @dataclass
 class Request:
-    rid: int
-    tokens: np.ndarray          # (prompt_len,)
-    max_new_tokens: int
+    # explicit rid (stable across requeues) or None for an auto-assigned
+    # monotonic id
+    rid: Optional[int] = None
+    tokens: np.ndarray = None   # (prompt_len,) — required
+    max_new_tokens: int = 0
     # serve-path scheduling metadata: higher priority admits first under
     # the "priority" admission policy; arrival is the request's offset (in
     # seconds) into a synthetic trace (0.0 = available immediately)
     priority: int = 0
     arrival: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.rid is None:
+            self.rid = next(_RID_COUNTER)
 
 
 class VarLenRequestStream:

@@ -469,6 +469,57 @@ def mla_cache_specs(cfg: ArchConfig) -> Params:
             "k_pe": P(("pod", "data"), "model", None)}
 
 
+# ----------------------------------------------------- paged KV blocks --
+def paged_gather(pool: jax.Array, tables: jax.Array, *, block_axis: int,
+                 seq_axis: int) -> jax.Array:
+    """Gather per-row cache rows out of a physical block pool.
+
+    ``pool`` holds the blocks: ``block_axis`` is the block-id axis (size
+    ``n_blocks + 1``, id 0 = the null block), ``seq_axis`` the
+    within-block token axis (size ``block_size``).  ``tables`` (B, M)
+    maps each row's logical block ``j`` to a physical id (null-padded
+    with 0).  The result is a dense per-row leaf — block axis replaced by
+    the row axis B, seq axis widened to ``M * block_size`` — which is
+    exactly the fixed-row layout :func:`attn_apply` / :func:`mla_apply`
+    consume, so the attention kernels run unchanged on paged caches.
+    """
+    bs = pool.shape[seq_axis]
+    b, m = tables.shape
+    x = jnp.moveaxis(pool, (block_axis, seq_axis), (0, 1))
+    flat = x.reshape((x.shape[0] * bs,) + x.shape[2:])
+    pos = jnp.arange(m * bs)
+    idx = tables[:, pos // bs] * bs + (pos % bs)[None, :]      # (B, M*bs)
+    return jnp.moveaxis(flat[idx], (0, 1), (block_axis, seq_axis))
+
+
+def paged_scatter(pool: jax.Array, dense: jax.Array, tables: jax.Array,
+                  keep: jax.Array, *, block_axis: int,
+                  seq_axis: int) -> jax.Array:
+    """Scatter dense per-row cache leaves back into the block pool.
+
+    Inverse of :func:`paged_gather` restricted to the token positions
+    selected by ``keep`` (B, M*block_size) — only freshly written
+    positions persist.  Positions with ``keep`` False, and any position
+    whose (bucket- or null-) padded table entry is 0, are routed into the
+    null block, which absorbs them the way masked writes do on the fixed
+    path.
+    """
+    bs = pool.shape[seq_axis]
+    b, m = tables.shape
+    x = jnp.moveaxis(pool, (block_axis, seq_axis), (0, 1))
+    nb = x.shape[0]
+    flat = x.reshape((nb * bs,) + x.shape[2:])
+    d = jnp.moveaxis(dense, (block_axis, seq_axis), (0, 1))
+    s = m * bs
+    pos = jnp.arange(s)
+    idx = tables[:, pos // bs] * bs + (pos % bs)[None, :]
+    idx = jnp.where(keep, idx, (pos % bs)[None, :])    # null-block sink
+    flat = flat.at[idx.reshape(-1)].set(
+        d.reshape((b * s,) + d.shape[2:]).astype(flat.dtype))
+    out = flat.reshape((nb, bs) + flat.shape[1:])
+    return jnp.moveaxis(out, (0, 1), (block_axis, seq_axis))
+
+
 # ------------------------------------------------------------------ mlp --
 def mlp_init(rng, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
     d, f = cfg.d_model, d_ff or cfg.d_ff

@@ -24,6 +24,11 @@ class Model:
     cache_specs: Callable     # () -> PartitionSpec tree
     decode_step: Callable     # (params, cache, tokens, lens, **kw) -> (logits, cache)
     prefill: Callable         # (params, cache, tokens, lens, offsets) -> (last_logits, cache)
+    verify: Callable          # (params, cache, tokens, lens, offsets) -> (all_logits, cache)
+    # paged-KV entry points; None for families whose cache has no
+    # sequence axis to page (recurrent state)
+    init_block_pool: Optional[Callable] = None  # (n_blocks, block_size) -> pool
+    page_axes: Optional[Callable] = None        # () -> per-leaf seq-axis tree
 
 
 def cache_batch_axis(shape, batch: int) -> Optional[int]:
@@ -62,19 +67,18 @@ def row_keep_mask(keep: jax.Array, leaf: jax.Array) -> jax.Array:
         f"batch={b}; cannot gate per-row updates")
 
 
-def replay_prefill(decode_step: Callable) -> Callable:
-    """Batched prefill by replaying the chunk through decode steps.
+def replay_verify(decode_step: Callable) -> Callable:
+    """All-position logits by replaying a chunk through decode steps.
 
-    The fallback for model families without a native single-pass
-    ``prefill`` (recurrent caches need sequential state updates anyway) —
-    and the serve benchmark's O(prompt_len)-launches baseline.  Row
-    updates are gated by ``j < lens`` so padded chunk positions never
-    touch the cache: critical for recurrent state, which is overwritten
-    (not positionally masked) by every step.
+    The generic speculative-verify fallback for model families without a
+    native single-pass ``verify`` (recurrent caches need sequential state
+    updates anyway): ``logits[r, j]`` is the model's next-token
+    distribution after consuming ``tokens[r, j]``.  Row updates are gated
+    by ``j < lens`` so padded chunk positions never touch the cache:
+    critical for recurrent state, which is overwritten (not positionally
+    masked) by every step.
     """
-    def prefill(params, cache, tokens, lens, offsets):
-        b, s = tokens.shape
-
+    def verify(params, cache, tokens, lens, offsets):
         def step(carry, j):
             tok = jax.lax.dynamic_slice_in_dim(tokens, j, 1, axis=1)
             logits, new_cache = decode_step(params, carry, tok, offsets + j)
@@ -85,11 +89,29 @@ def replay_prefill(decode_step: Callable) -> Callable:
                 new_cache, carry)
             return gated, logits[:, 0]
 
-        cache, logits = jax.lax.scan(step, cache, jnp.arange(s))
+        cache, logits = jax.lax.scan(step, cache,
+                                     jnp.arange(tokens.shape[1]))
+        return logits.transpose(1, 0, 2), cache
+
+    return verify
+
+
+def replay_prefill(decode_step: Callable) -> Callable:
+    """Batched prefill by replaying the chunk through decode steps.
+
+    The fallback for model families without a native single-pass
+    ``prefill`` — and the serve benchmark's O(prompt_len)-launches
+    baseline.  :func:`replay_verify` does the sequential work; this just
+    selects each row's last valid position.
+    """
+    vf = replay_verify(decode_step)
+
+    def prefill(params, cache, tokens, lens, offsets):
+        b = tokens.shape[0]
+        logits, cache = vf(params, cache, tokens, lens, offsets)
         idx = jnp.maximum(lens - 1, 0)[:, None, None]
         last = jnp.take_along_axis(
-            logits.transpose(1, 0, 2),
-            jnp.broadcast_to(idx, (b, 1, logits.shape[-1])), axis=1)
+            logits, jnp.broadcast_to(idx, (b, 1, logits.shape[-1])), axis=1)
         return last[:, 0], cache
 
     return prefill
@@ -109,6 +131,12 @@ def _lm_bundle(mod, cfg: ArchConfig) -> Model:
             mod.prefill(cfg, params, cache, tokens, lens, offsets)
     else:
         pf = replay_prefill(decode)
+    if hasattr(mod, "verify"):
+        vf = lambda params, cache, tokens, lens, offsets: \
+            mod.verify(cfg, params, cache, tokens, lens, offsets)
+    else:
+        vf = replay_verify(decode)
+    paged = hasattr(mod, "init_block_pool")
 
     return Model(
         cfg=cfg,
@@ -120,6 +148,10 @@ def _lm_bundle(mod, cfg: ArchConfig) -> Model:
         cache_specs=lambda: mod.cache_specs(cfg),
         decode_step=decode,
         prefill=pf,
+        verify=vf,
+        init_block_pool=(lambda n, bs: mod.init_block_pool(cfg, n, bs))
+        if paged else None,
+        page_axes=(lambda: mod.page_axes(cfg)) if paged else None,
     )
 
 
@@ -144,6 +176,7 @@ def _whisper_bundle(cfg: ArchConfig) -> Model:
         # decoder-side replay only; callers must thread enc_out through
         # decode_step kwargs themselves (the serve engine is LM-only)
         prefill=replay_prefill(decode),
+        verify=replay_verify(decode),
     )
 
 

@@ -154,6 +154,19 @@ def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]):
 
 
 # -------------------------------------------------------------- prefill --
+def _prefill_hidden(cfg: ArchConfig, params: Params, cache: Params, tokens,
+                    lens, offsets) -> Tuple[jax.Array, Params]:
+    """Shared chunk pass for :func:`prefill` and :func:`verify`: embed,
+    run the blocks at absolute positions ``offset + arange(S)``, norm —
+    returns the (B, S, D) hidden states plus the updated cache."""
+    x = embed_tokens(cfg, params, tokens)
+    s = x.shape[1]
+    positions = offsets[:, None] + jnp.arange(s)[None, :]
+    x, new_cache = _run_blocks(cfg, params["blocks"], x, positions=positions,
+                               lens=lens, caches=cache, offsets=offsets)
+    return L.norm_apply(cfg, params["ln_f"], x), new_cache
+
+
 def prefill(cfg: ArchConfig, params: Params, cache: Params, tokens, lens,
             offsets) -> Tuple[jax.Array, Params]:
     """Single-pass batched prefill with cache offset (the serve path).
@@ -166,16 +179,23 @@ def prefill(cfg: ArchConfig, params: Params, cache: Params, tokens, lens,
     row r's final valid position — the head runs on that single hidden
     state per row, never on the full (B, S, vocab) tensor.
     """
-    x = embed_tokens(cfg, params, tokens)
-    b, s, _ = x.shape
-    positions = offsets[:, None] + jnp.arange(s)[None, :]
-    x, new_cache = _run_blocks(cfg, params["blocks"], x, positions=positions,
-                               lens=lens, caches=cache, offsets=offsets)
-    x = L.norm_apply(cfg, params["ln_f"], x)
+    x, new_cache = _prefill_hidden(cfg, params, cache, tokens, lens, offsets)
+    b = x.shape[0]
     idx = jnp.maximum(lens - 1, 0)[:, None, None]
     last = jnp.take_along_axis(
         x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
     return logits_from_hidden(cfg, params, last)[:, 0], new_cache
+
+
+def verify(cfg: ArchConfig, params: Params, cache: Params, tokens, lens,
+           offsets) -> Tuple[jax.Array, Params]:
+    """Speculative-verify pass: :func:`prefill` semantics, but the head
+    runs at EVERY chunk position — ``logits[r, j]`` is the model's
+    next-token distribution after consuming ``tokens[r, j]``, so one
+    widened launch scores a whole drafted chunk per row.  Rows with
+    ``lens[r] == 0`` write nothing (same masks as prefill)."""
+    x, new_cache = _prefill_hidden(cfg, params, cache, tokens, lens, offsets)
+    return logits_from_hidden(cfg, params, x), new_cache
 
 
 # --------------------------------------------------------------- decode --
@@ -193,6 +213,25 @@ def cache_specs(cfg: ArchConfig) -> Params:
     one = L.mla_cache_specs(cfg) if cfg.mla_kv_lora else L.attn_cache_specs(cfg)
     return jax.tree.map(lambda s: P(*((None,) + tuple(s))), one,
                         is_leaf=lambda s: isinstance(s, P))
+
+
+def init_block_pool(cfg: ArchConfig, n_blocks: int,
+                    block_size: int) -> Params:
+    """Physical KV block pool for paged serving: the fixed-row cache with
+    the batch axis reinterpreted as the block-id axis and the sequence
+    axis cut to one block — leaves are ``(L, n_blocks, ..., block_size,
+    ...)``.  Callers reserve id 0 as the null block (see
+    :func:`repro.models.layers.paged_gather`)."""
+    return init_cache(cfg, n_blocks, block_size)
+
+
+def page_axes(cfg: ArchConfig) -> Params:
+    """Per-leaf sequence-axis index of the layer-stacked cache/pool
+    leaves (the block axis is always axis 1, per
+    :func:`repro.models.registry.cache_batch_axis`)."""
+    if cfg.mla_kv_lora:
+        return {"kv_c": 2, "k_pe": 2}   # (L, B, S, lora/rdim)
+    return {"k": 3, "v": 3}             # (L, B, hkv, S, hd)
 
 
 def decode_step(cfg: ArchConfig, params: Params, cache: Params, tokens,

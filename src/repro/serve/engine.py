@@ -48,6 +48,30 @@ solved here exactly as DISC prescribes, built entirely on the public
   ``device_put``-to-sharding on padded buckets (see
   :mod:`repro.dist.spmd`); the total slot count must divide the
   data-parallel axes evenly (checked at engine construction).
+* **paged KV** (``ServeConfig(kv_block_size=..., kv_pool_blocks=...)``):
+  slots draw ``block_size``-token blocks from a budget-sized physical
+  pool (:mod:`repro.serve.paging`) instead of owning a fixed ``max_seq``
+  row, so concurrency is bounded by actual token footprint, not
+  worst-case rows.  Per-slot block tables ride the compiled artifacts —
+  the prefill artifact threads them through a ``TreeSpec`` so they
+  bucket-pad with the batch — and the gather into dense rows / scatter
+  of fresh positions happens INSIDE the launch, keeping dispatch
+  bucket-compiled.  On pool pressure the scheduler preempts a victim
+  (lowest priority, newest admission), releases its blocks, and requeues
+  the request with prompt+generated tokens: greedy recompute reproduces
+  the exact output.  With an unconstrained pool the paged path is
+  bit-parity with fixed rows (the baseline, kept as
+  ``kv_block_size=None``).
+* **speculative decoding** (``ServeConfig(speculative=...,
+  speculative_k=...)``): a pluggable proposer
+  (:mod:`repro.serve.speculative`; ``"ngram"`` prompt-lookup first,
+  draft-model interface stubbed) drafts up to k tokens per slot, and ONE
+  widened ``(n_slots, k+1)`` launch of ``model.verify`` (prefill
+  semantics, head at every position) scores them all; each slot keeps
+  the longest draft prefix matching the model's own greedy argmax plus
+  the correction token, and per-slot accept counts advance the ``lens``
+  vector.  Greedy accept-or-fix emits exactly the plain-decode tokens —
+  only the launch count shrinks.
 
 Both artifacts share one :class:`CompileCache` (entries keyed by
 per-artifact fingerprint); compile counts come from the artifacts'
@@ -74,7 +98,9 @@ from ..data.pipeline import Request
 from ..frontends.jaxpr_frontend import ArgSpec
 from ..models.registry import (Model, cache_batch_axis, replay_prefill,
                                row_keep_mask)
+from .paging import BlockAllocator, PagedKVPool, blocks_for, pick_victim
 from .policies import get_admission_policy
+from .speculative import get_proposer
 
 # admission groups bucket to powers of two starting at 1 (1, 2, 4, ...,
 # clamped to max_batch) — log-many batch buckets
@@ -100,6 +126,24 @@ STATS_KEYS: Dict[str, str] = {
     "max_decode_gap_s": "longest wall-clock gap between decode launches "
                         "while decode work was pending (decode stall)",
     "requests_completed": "requests retired into done",
+    "rejected_requests": "requests refused at submit(): prompt longer than "
+                         "max_seq, or a worst-case footprint larger than "
+                         "the paged pool can ever hold (the rest of the "
+                         "batch is still admitted)",
+    "peak_active_slots": "max concurrently occupied slots observed (the "
+                         "equal-memory concurrency headline for paged KV)",
+    "kv_pool_blocks": "paged-KV pool capacity in blocks (0 = fixed rows; "
+                      "not reset)",
+    "kv_blocks_in_use": "paged-KV blocks currently allocated (not reset)",
+    "kv_pool_occupancy": "kv_blocks_in_use / kv_pool_blocks (0.0 under "
+                         "fixed rows; not reset)",
+    "kv_peak_occupancy": "max pool occupancy fraction observed",
+    "kv_preemptions": "slots preempted on pool pressure (request requeued "
+                      "with prompt+generated for greedy recompute)",
+    "kv_evictions": "blocks reclaimed by preemptions",
+    "spec_drafted_tokens": "draft tokens sent to the speculative verify "
+                           "launch",
+    "spec_accepted_tokens": "draft tokens accepted by verification",
     "per_replica": "one dict per replica: admitted, tokens_generated, "
                    "requests_completed, occupied_slots (slot-range "
                    "[r*max_batch, (r+1)*max_batch) counters under "
@@ -138,12 +182,28 @@ class ServeConfig:
     # profile; the prefill artifact compiles under CompileOptions(mesh=)
     mesh: Optional[Any] = None
     sharding_profile: Optional[Any] = None
+    # paged KV pool (repro.serve.paging): block size in tokens, must
+    # divide max_seq; None keeps the fixed max_seq-row cache (the parity
+    # baseline)
+    kv_block_size: Optional[int] = None
+    # pool capacity in blocks — the memory budget that replaces
+    # n_slots * max_seq.  None = unconstrained (n_slots * max_seq /
+    # kv_block_size blocks: bit-parity with fixed rows, no preemption)
+    kv_pool_blocks: Optional[int] = None
+    # speculative decoding (repro.serve.speculative): proposer name
+    # ("ngram") or object with .propose(history, k); None disables
+    speculative: Optional[Any] = None
+    # max draft tokens per slot per verify launch
+    speculative_k: int = 4
 
 
 @dataclass
 class _Slot:
     """One KV-cache row's scheduler state: admitted requests move
-    prefill -> decode -> retired (slot freed)."""
+    prefill -> decode -> retired (slot freed); under paged KV a slot in
+    either live state may also be PREEMPTED on pool pressure — its
+    blocks are released and the request requeued (prompt+generated) for
+    greedy recompute."""
 
     rid: int
     tokens: np.ndarray
@@ -152,6 +212,12 @@ class _Slot:
     pos: int = 0                  # prompt tokens prefilled so far
     state: str = "prefill"        # "prefill" | "decode"
     generated: List[int] = field(default_factory=list)
+    priority: int = 0             # victim ordering on pool pressure
+    aseq: int = 0                 # admission sequence (newest preempts first)
+    # re-admitted after preemption: the prompt replays previously
+    # generated tokens, so the prefill-completion token is NOT the free
+    # first token — it consumes max_new budget
+    resumed: bool = False
 
 
 class ServeEngine:
@@ -169,22 +235,62 @@ class ServeEngine:
             raise ValueError(
                 "ServeConfig(sharding_profile=...) needs a mesh: pass "
                 "ServeConfig(mesh=..., sharding_profile=...)")
+        if scfg.kv_block_size is not None:
+            if scfg.kv_block_size < 1:
+                raise ValueError(
+                    f"ServeConfig(kv_block_size={scfg.kv_block_size}): "
+                    f"need a positive block size")
+            if scfg.max_seq % scfg.kv_block_size != 0:
+                raise ValueError(
+                    f"ServeConfig(kv_block_size={scfg.kv_block_size}) must "
+                    f"divide max_seq={scfg.max_seq}: full block tables "
+                    f"cover exactly max_seq positions so the paged "
+                    f"artifacts stay shape-identical to fixed rows")
+            if scfg.mesh is not None:
+                raise ValueError(
+                    "paged KV (kv_block_size=...) does not compose with "
+                    "mesh sharding yet: the block-id axis has no "
+                    "data-parallel layout — drop the mesh or use fixed "
+                    "rows")
+        if scfg.speculative is not None and scfg.speculative_k < 1:
+            raise ValueError(
+                f"ServeConfig(speculative_k={scfg.speculative_k}): need "
+                f"at least 1 draft token")
         self.model = model
         self.params = params
         self.scfg = scfg
         self.n_slots = scfg.replicas * scfg.max_batch
-        self.cache = model.init_cache(self.n_slots, scfg.max_seq)
+        self.paged = scfg.kv_block_size is not None
+        if self.paged:
+            self._mbs = scfg.max_seq // scfg.kv_block_size
+            n_blocks = (scfg.kv_pool_blocks
+                        if scfg.kv_pool_blocks is not None
+                        else self.n_slots * self._mbs)
+            self.pool = PagedKVPool(model, n_blocks=n_blocks,
+                                    block_size=scfg.kv_block_size)
+            self.alloc = BlockAllocator(n_blocks, scfg.kv_block_size,
+                                        self.n_slots, self._mbs)
+            self.cache = None       # paged state lives in self.pool.tree
+        else:
+            self._mbs = 0
+            self.pool = None
+            self.alloc = None
+            self.cache = model.init_cache(self.n_slots, scfg.max_seq)
         self.lens = np.zeros((self.n_slots,), np.int32)
         self.slots: List[Optional[_Slot]] = [None] * self.n_slots
         self.queue: List[Request] = []
         self.done: Dict[int, List[int]] = {}
+        self.rejected: List[int] = []   # rids refused at submit()
         self._admit_order = get_admission_policy(scfg.admission)
         self._prefill_impl = (model.prefill if scfg.prefill_mode == "batched"
                               else replay_prefill(model.decode_step))
+        self._proposer = get_proposer(scfg.speculative)
         self._decode_credit = 0
         self._bucket_pairs: Set[Tuple[int, int]] = set()
         self._busy_s = 0.0
         self._last_decode_t: Optional[float] = None
+        self._aseq = 0                  # admission sequence counter
+        self._carry: Dict[int, List[int]] = {}  # rid -> generated-so-far
         self._rep_counters = [
             {"admitted": 0, "tokens_generated": 0, "requests_completed": 0}
             for _ in range(scfg.replicas)]
@@ -205,30 +311,60 @@ class ServeEngine:
             overrides=tuple(scfg.prefill_policy.overrides) + (
                 ("B", (scfg.batch_policy.kind, scfg.batch_policy.granule)),))
         dim_b = Dim("B", max=self.n_slots)
-        self._prefill_fn = disc_compile(
-            self._prefill_call,
-            specs=[None,                 # params pytree
-                   TreeSpec({1: "B"}),   # gathered cache rows (L, B, ...)
-                   ArgSpec((dim_b, Dim("S", max=scfg.max_seq)), jnp.int32,
-                           name="tokens"),
-                   ArgSpec((dim_b,), jnp.int32, name="lens"),
-                   ArgSpec((dim_b,), jnp.int32, name="offsets")],
-            options=CompileOptions(pipeline="jit", name="prefill",
-                                   policy=pol,
-                                   escalation_threshold=
-                                   scfg.escalation_threshold,
-                                   mesh=scfg.mesh,
-                                   sharding_profile=scfg.sharding_profile
-                                   if scfg.mesh is not None else None,
-                                   cache=self.compile_cache))
-        self._decode_fn = disc_compile(
-            self._decode_step,
-            options=CompileOptions(pipeline="jit", name="decode",
-                                   cache=self.compile_cache))
+        popts = CompileOptions(pipeline="jit", name="prefill",
+                               policy=pol,
+                               escalation_threshold=
+                               scfg.escalation_threshold,
+                               mesh=scfg.mesh,
+                               sharding_profile=scfg.sharding_profile
+                               if scfg.mesh is not None else None,
+                               cache=self.compile_cache)
+        if self.paged:
+            # the block pool passes through untouched (None spec); the
+            # per-slot block tables ride a TreeSpec so they bucket-pad on
+            # B together with tokens/lens — padded rows carry all-null
+            # tables and gather/write only the null block
+            self._prefill_fn = disc_compile(
+                self._prefill_paged,
+                specs=[None,                 # params pytree
+                       None,                 # block pool pytree
+                       TreeSpec({0: "B"}),   # {"tables": (B, max_blocks)}
+                       ArgSpec((dim_b, Dim("S", max=scfg.max_seq)),
+                               jnp.int32, name="tokens"),
+                       ArgSpec((dim_b,), jnp.int32, name="lens"),
+                       ArgSpec((dim_b,), jnp.int32, name="offsets")],
+                options=popts)
+            self._decode_fn = disc_compile(
+                self._decode_paged,
+                options=CompileOptions(pipeline="jit", name="decode",
+                                       cache=self.compile_cache))
+        else:
+            self._prefill_fn = disc_compile(
+                self._prefill_call,
+                specs=[None,                 # params pytree
+                       TreeSpec({1: "B"}),   # gathered cache rows (L, B, ...)
+                       ArgSpec((dim_b, Dim("S", max=scfg.max_seq)),
+                               jnp.int32, name="tokens"),
+                       ArgSpec((dim_b,), jnp.int32, name="lens"),
+                       ArgSpec((dim_b,), jnp.int32, name="offsets")],
+                options=popts)
+            self._decode_fn = disc_compile(
+                self._decode_step,
+                options=CompileOptions(pipeline="jit", name="decode",
+                                       cache=self.compile_cache))
+        self._verify_fn = None
+        if self._proposer is not None:
+            self._verify_fn = disc_compile(
+                self._verify_paged if self.paged else self._verify_call,
+                options=CompileOptions(pipeline="jit", name="verify",
+                                       cache=self.compile_cache))
         self.stats: Dict[str, Any] = {k: 0 for k in STATS_KEYS}
         self.stats["tokens_per_sec"] = 0.0
         self.stats["max_decode_gap_s"] = 0.0
+        self.stats["kv_pool_occupancy"] = 0.0
+        self.stats["kv_peak_occupancy"] = 0.0
         self.stats["per_replica"] = [dict(c) for c in self._rep_counters]
+        self._refresh_stats()
 
     def _init_mesh(self, model: Model) -> None:
         """Shard params + KV cache onto the mesh per the profile: params
@@ -326,18 +462,102 @@ class ServeEngine:
             new_cache, cache)
         return logits, new_cache
 
+    def _prefill_paged(self, params, pool, tview, tokens, lens, offsets):
+        """Paged prefill: gather each group row's blocks into the dense
+        fixed-row layout the attention kernels consume, zero fresh rows,
+        run the single-pass prefill, then scatter exactly the freshly
+        written positions [offset, offset+len) back into the pool.
+        Bucket-padded rows carry all-null tables: their gathers see only
+        the null block (masked out of every real row by the length
+        masks) and their writes land back in it."""
+        tables = tview["tables"]
+        rows = self.pool.gather(pool, tables)
+        fresh = offsets == 0
+        rows = jax.tree.map(
+            lambda c: jnp.where(row_keep_mask(fresh, c),
+                                jnp.zeros_like(c), c), rows)
+        logits, rows = self._prefill_impl(params, rows, tokens, lens,
+                                          offsets)
+        pos = jnp.arange(self.scfg.max_seq)[None, :]
+        keep = (pos >= offsets[:, None]) & (pos < (offsets + lens)[:, None])
+        return logits, self.pool.scatter(pool, rows, tables, keep)
+
+    def _decode_paged(self, params, pool, tables, tokens, lens, active):
+        """Paged decode step: gather, step, scatter only each active
+        row's single fresh position ``lens[r]`` (inactive rows write
+        nothing, like the fixed path's active gate)."""
+        rows = self.pool.gather(pool, tables)
+        logits, rows = self.model.decode_step(params, rows, tokens, lens)
+        pos = jnp.arange(self.scfg.max_seq)[None, :]
+        keep = active[:, None] & (pos == lens[:, None])
+        return logits, self.pool.scatter(pool, rows, tables, keep)
+
+    def _verify_call(self, params, cache, tokens, dlens, fills):
+        """Speculative verify (fixed rows): one widened chunk pass whose
+        per-position argmax comes back to the host — ``ids[r, j]`` is
+        the model's greedy token after consuming ``tokens[r, j]``.
+        Rows with ``dlens[r] == 0`` write nothing (prefill masks)."""
+        logits, new_cache = self.model.verify(params, cache, tokens, dlens,
+                                              fills)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+
+    def _verify_paged(self, params, pool, tables, tokens, dlens, fills):
+        """Speculative verify over gathered paged rows; the drafted
+        positions [fill, fill+dlen) scatter back to the pool."""
+        rows = self.pool.gather(pool, tables)
+        logits, rows = self.model.verify(params, rows, tokens, dlens,
+                                         fills)
+        pos = jnp.arange(self.scfg.max_seq)[None, :]
+        keep = (pos >= fills[:, None]) & (pos < (fills + dlens)[:, None])
+        ids = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return ids, self.pool.scatter(pool, rows, tables, keep)
+
     # -------------------------------------------------------------- host --
     def submit(self, reqs: List[Request]) -> None:
+        """Queue requests for admission.
+
+        Requests the engine can never serve are rejected gracefully —
+        counted in ``stats["rejected_requests"]``, rids recorded in
+        ``self.rejected`` — and the REST of the batch is still admitted:
+
+        * prompt longer than ``max_seq`` (chunking would clamp every
+          launch under the artifact's S cap and the overflow would
+          scatter nowhere: the request would "complete" with garbage);
+        * paged mode: worst-case footprint (prompt + max_new tokens)
+          needing more blocks than the whole pool holds.
+
+        A rid already pending (queued or in a slot) raises — atomically,
+        before anything in the batch is queued: rids are the engine's
+        stable identity (admission removal, preemption requeue, the
+        ``done`` dict) and a duplicate would silently collapse two
+        requests into one ``done`` entry.
+        """
+        pending = {r.rid for r in self.queue}
+        pending.update(s.rid for s in self.slots if s is not None)
+        accepted: List[Request] = []
+        dropped: List[int] = []
         for r in reqs:
-            if len(r.tokens) > self.scfg.max_seq:
-                # chunking would otherwise clamp every launch under the
-                # artifact's S cap and the overflow would scatter nowhere:
-                # the request "completes" with garbage.  Fail loudly here
-                # (the pre-chunking engine failed via the dispatch cap).
+            if r.rid in pending:
                 raise ValueError(
-                    f"request {r.rid}: prompt length {len(r.tokens)} "
-                    f"exceeds ServeConfig(max_seq={self.scfg.max_seq})")
-        self.queue.extend(reqs)
+                    f"request rid={r.rid} is already pending: rids are "
+                    f"the engine's stable identity — leave "
+                    f"Request(rid=None) for an auto-assigned monotonic "
+                    f"id")
+            pending.add(r.rid)
+            if len(r.tokens) > self.scfg.max_seq:
+                dropped.append(r.rid)
+                continue
+            if self.paged:
+                worst = min(len(r.tokens) + r.max_new_tokens + 1,
+                            self.scfg.max_seq)
+                if blocks_for(worst, self.scfg.kv_block_size) \
+                        > self.alloc.n_blocks:
+                    dropped.append(r.rid)
+                    continue
+            accepted.append(r)
+        self.stats["rejected_requests"] += len(dropped)
+        self.rejected.extend(dropped)
+        self.queue.extend(accepted)
 
     def _replica_of(self, slot: int) -> int:
         return slot // self.scfg.max_batch
@@ -349,7 +569,14 @@ class ServeEngine:
 
         With replicas, each request (still in policy order) is routed to
         the **least-loaded replica** that has a free slot (ties break to
-        the lowest replica index), so replica KV caches fill evenly."""
+        the lowest replica index), so replica KV caches fill evenly.
+
+        Under paged KV, admission also gates on pool headroom: a request
+        is only admitted while the free list covers its first prefill
+        chunk (in policy order, no skipping ahead — admitting a slot
+        that cannot allocate would just thrash the preemption path).
+        Blocks free up as slots retire, so blocked admission is
+        pressure, not deadlock."""
         mb = self.scfg.max_batch
         free_by_rep = [[i for i in range(r * mb, (r + 1) * mb)
                         if self.slots[i] is None]
@@ -357,23 +584,78 @@ class ServeEngine:
         n_free = sum(len(f) for f in free_by_rep)
         if not n_free or not self.queue:
             return
-        take = self._admit_order(self.queue)[:n_free]
-        # remove by identity: Request's dataclass __eq__ compares numpy
-        # token arrays, so list.remove() would be both O(n·plen) and
-        # ambiguous-truth-value prone
-        taken = {id(r) for r in take}
-        self.queue = [r for r in self.queue if id(r) not in taken]
-        for req in take:
+        chunk_cap = self.scfg.prefill_chunk or self.scfg.max_seq
+        budget = self.alloc.free_blocks if self.paged else 0
+        # removal is by rid — the stable identity submit() enforces —
+        # never by Request.__eq__ (numpy token arrays make dataclass
+        # equality ambiguous-truth-value prone)
+        taken: Set[int] = set()
+        for req in self._admit_order(self.queue):
+            if len(taken) >= n_free:
+                break
+            if self.paged:
+                need = blocks_for(min(len(req.tokens), chunk_cap),
+                                  self.scfg.kv_block_size)
+                if need > budget:
+                    break
+                budget -= need
+            taken.add(req.rid)
             rep = min((r for r in range(self.scfg.replicas)
                        if free_by_rep[r]),
                       key=lambda r: (mb - len(free_by_rep[r]), r))
             i = free_by_rep[rep].pop(0)
             toks = np.asarray(req.tokens, np.int32)
+            carried = self._carry.pop(req.rid, None)
             self.slots[i] = _Slot(rid=req.rid, tokens=toks,
                                   plen=int(toks.shape[0]),
-                                  remaining=req.max_new_tokens)
+                                  remaining=req.max_new_tokens,
+                                  priority=req.priority,
+                                  aseq=self._aseq,
+                                  generated=list(carried or ()),
+                                  resumed=bool(carried))
+            self._aseq += 1
             self.lens[i] = 0
             self._rep_counters[rep]["admitted"] += 1
+        self.queue = [r for r in self.queue if r.rid not in taken]
+
+    def _preempt(self, i: int) -> None:
+        """Evict slot ``i`` on pool pressure: release its blocks and
+        requeue the request with prompt+generated as the new prompt.
+        Greedy decoding makes recompute exact — the resumed request
+        continues with precisely the tokens it would have produced —
+        so preemption trades recompute time for memory, never output."""
+        slot = self.slots[i]
+        freed = self.alloc.release(i)
+        self.stats["kv_preemptions"] += 1
+        self.stats["kv_evictions"] += freed
+        toks = slot.tokens
+        if slot.generated:
+            toks = np.concatenate(
+                [toks, np.asarray(slot.generated, np.int32)])
+        self._carry[slot.rid] = list(slot.generated)
+        self.queue.append(Request(rid=slot.rid, tokens=toks,
+                                  max_new_tokens=slot.remaining,
+                                  priority=slot.priority))
+        self.slots[i] = None
+        self.lens[i] = 0
+
+    def _ensure_blocks(self, i: int, n_tokens: int,
+                       protect: Set[int]) -> bool:
+        """Grow slot ``i``'s allocation to cover ``n_tokens`` positions,
+        preempting victims (lowest priority, then newest admission) on
+        pool pressure.  ``protect`` shields slots already committed to
+        the launch being assembled; returns False only when every
+        remaining block owner is protected."""
+        while not self.alloc.ensure(i, n_tokens):
+            cands = [(j, s.priority, s.aseq)
+                     for j, s in enumerate(self.slots)
+                     if s is not None and j != i and j not in protect
+                     and self.alloc.owned(j)]
+            v = pick_victim(cands)
+            if v is None:
+                return False
+            self._preempt(v)
+        return True
 
     def _prefill_group(self) -> None:
         """One prefill launch: group prefill-state slots by the bucket of
@@ -393,6 +675,22 @@ class ServeEngine:
         _, members = max(groups.items(), key=lambda kv: (len(kv[1]), -kv[0]))
         if self.scfg.prefill_mode == "replay":
             members = members[:1]
+        if self.paged:
+            # claim blocks for every member's chunk before building the
+            # launch; a member that cannot allocate even after preempting
+            # every unprotected victim waits for a later step (committed
+            # members are protected, so at least one always launches)
+            kept = []
+            for i, cl in members:
+                s = self.slots[i]
+                if s is None or s.state != "prefill":
+                    continue    # preempted while assembling this launch
+                protect = {j for j, _ in kept} | {i}
+                if self._ensure_blocks(i, s.pos + cl, protect):
+                    kept.append((i, cl))
+            members = kept
+            if not members:
+                return
         idx = np.asarray([i for i, _ in members])
         nb = len(members)
         smax = max(cl for _, cl in members)
@@ -405,19 +703,25 @@ class ServeEngine:
             lens[r] = cl
             offsets[r] = s.pos
 
-        rows = jax.tree.map(lambda c: c[:, idx] if c.ndim > 1 else c,
-                            self.cache)
-        logits, new_rows = self._prefill_fn(self.params, rows, tokens,
-                                            lens, offsets)
-        self.cache = jax.tree.map(
-            lambda full, row: full.at[:, idx].set(
-                row[:, :nb].astype(full.dtype)) if full.ndim > 1 else full,
-            self.cache, new_rows)
-        if self.mesh is not None:
-            # the eager scatter above may change leaf shardings; pin the
-            # cache back to its planned layout so the decode artifact's
-            # jit entries never retrace on a sharding flip
-            self.cache = self._put_cache(self.cache)
+        if self.paged:
+            tview = {"tables": self.alloc.table()[idx]}
+            logits, self.pool.tree = self._prefill_fn(
+                self.params, self.pool.tree, tview, tokens, lens, offsets)
+        else:
+            rows = jax.tree.map(lambda c: c[:, idx] if c.ndim > 1 else c,
+                                self.cache)
+            logits, new_rows = self._prefill_fn(self.params, rows, tokens,
+                                                lens, offsets)
+            self.cache = jax.tree.map(
+                lambda full, row: full.at[:, idx].set(
+                    row[:, :nb].astype(full.dtype))
+                if full.ndim > 1 else full,
+                self.cache, new_rows)
+            if self.mesh is not None:
+                # the eager scatter above may change leaf shardings; pin
+                # the cache back to its planned layout so the decode
+                # artifact's jit entries never retrace on a sharding flip
+                self.cache = self._put_cache(self.cache)
         last = np.asarray(logits[:nb])
 
         self._bucket_pairs.add((
@@ -435,6 +739,13 @@ class ServeEngine:
             if s.pos >= s.plen:
                 s.state = "decode"
                 s.generated.append(int(np.argmax(last[r])))
+                if s.resumed:
+                    # a resumed prompt replays previously generated
+                    # tokens: its completion token is a fresh one and
+                    # consumes budget (the free first token was already
+                    # granted by the original prefill)
+                    s.remaining -= 1
+                    s.resumed = False
                 self.stats["tokens_generated"] += 1
                 self._rep_counters[self._replica_of(i)][
                     "tokens_generated"] += 1
@@ -448,26 +759,60 @@ class ServeEngine:
         """One decode launch over ALL replicas' rows — the tokens-per-
         launch scaling replicas buy; on a mesh the batch axis is
         partitioned along ``data``, so each replica computes its own
-        rows."""
+        rows.  With a proposer configured, the launch is the widened
+        speculative verify instead."""
         active_idx = [i for i, s in enumerate(self.slots)
                       if s is not None and s.state == "decode"]
-        tokens = np.zeros((self.n_slots, 1), np.int32)
-        active = np.zeros((self.n_slots,), bool)
-        for i in active_idx:
-            tokens[i, 0] = self.slots[i].generated[-1]
-            active[i] = True
-        t, l, a = self._put_args(jnp.asarray(tokens),
-                                 jnp.asarray(self.lens),
-                                 jnp.asarray(active))
-        logits, self.cache = self._decode_fn(self.params, self.cache,
-                                             t, l, a)
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        if self._proposer is not None:
+            self._decode_speculative(active_idx)
+        else:
+            self._decode_plain(active_idx)
+
+    def _mark_decode_launch(self) -> None:
         now = time.monotonic()
         if self._last_decode_t is not None:
             self.stats["max_decode_gap_s"] = max(
                 self.stats["max_decode_gap_s"], now - self._last_decode_t)
         self._last_decode_t = now
         self.stats["decode_steps"] += 1
+
+    def _decode_plain(self, active_idx: List[int]) -> None:
+        if self.paged:
+            # every active row writes position lens[r]: claim the block
+            # first, preempting on pressure; a row that cannot allocate
+            # even then (all owners protected) sheds itself
+            protect: Set[int] = set()
+            for i in list(active_idx):
+                s = self.slots[i]
+                if s is None or s.state != "decode":
+                    continue
+                if self._ensure_blocks(i, int(self.lens[i]) + 1, protect):
+                    protect.add(i)
+                else:
+                    self._preempt(i)
+            active_idx = [i for i in active_idx
+                          if self.slots[i] is not None
+                          and self.slots[i].state == "decode"]
+            if not active_idx:
+                return
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        active = np.zeros((self.n_slots,), bool)
+        for i in active_idx:
+            tokens[i, 0] = self.slots[i].generated[-1]
+            active[i] = True
+        if self.paged:
+            logits, self.pool.tree = self._decode_fn(
+                self.params, self.pool.tree,
+                jnp.asarray(self.alloc.table()), jnp.asarray(tokens),
+                jnp.asarray(self.lens), jnp.asarray(active))
+        else:
+            t, l, a = self._put_args(jnp.asarray(tokens),
+                                     jnp.asarray(self.lens),
+                                     jnp.asarray(active))
+            logits, self.cache = self._decode_fn(self.params, self.cache,
+                                                 t, l, a)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        self._mark_decode_launch()
         for i in active_idx:
             slot = self.slots[i]
             self.lens[i] += 1
@@ -475,6 +820,87 @@ class ServeEngine:
             slot.remaining -= 1
             self.stats["tokens_generated"] += 1
             self._rep_counters[self._replica_of(i)]["tokens_generated"] += 1
+            self._maybe_retire(i)
+
+    def _decode_speculative(self, active_idx: List[int]) -> None:
+        """One widened (n_slots, k+1) verify launch: slot r's pending
+        token plus up to k drafted tokens; the longest draft prefix
+        matching the model's greedy argmax is accepted and the model's
+        own token at the first divergence is the correction.  Accept
+        counts advance the ``lens`` vector — cache fill moves by
+        1 + accepted per launch instead of 1."""
+        k = self.scfg.speculative_k
+        tokens = np.zeros((self.n_slots, k + 1), np.int32)
+        dlens = np.zeros((self.n_slots,), np.int32)
+        drafts: Dict[int, np.ndarray] = {}
+        protect: Set[int] = set()
+        live: List[int] = []
+        for i in list(active_idx):
+            s = self.slots[i]
+            if s is None or s.state != "decode":
+                continue    # preempted while assembling this launch
+            fill = int(self.lens[i])
+            # drafted chunk must fit the row (fill + 1 + drafts <=
+            # max_seq - 1) and never draft past the remaining budget
+            cap = min(k, self.scfg.max_seq - fill - 2, s.remaining - 1)
+            dr = np.zeros((0,), np.int32)
+            if cap > 0:
+                hist = np.concatenate(
+                    [s.tokens, np.asarray(s.generated, np.int32)])
+                dr = np.asarray(self._proposer.propose(hist, cap),
+                                np.int32).reshape(-1)[:cap]
+            dl = 1 + int(dr.shape[0])
+            if self.paged:
+                if not self._ensure_blocks(i, fill + dl, protect):
+                    dr = dr[:0]     # shrink the ask to the bare step
+                    dl = 1
+                    if not self._ensure_blocks(i, fill + 1, protect):
+                        self._preempt(i)
+                        continue
+                protect.add(i)
+            tokens[i, 0] = s.generated[-1]
+            tokens[i, 1:dl] = dr
+            dlens[i] = dl
+            drafts[i] = dr
+            live.append(i)
+        if not live:
+            return
+        fills = self.lens.copy()
+        if self.paged:
+            ids, self.pool.tree = self._verify_fn(
+                self.params, self.pool.tree,
+                jnp.asarray(self.alloc.table()), jnp.asarray(tokens),
+                jnp.asarray(dlens), jnp.asarray(fills))
+        else:
+            ids, self.cache = self._verify_fn(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(dlens), jnp.asarray(fills))
+        ids = np.asarray(ids)
+        self._mark_decode_launch()
+        for i in live:
+            s = self.slots[i]
+            dr = drafts[i]
+            dl = int(dlens[i])
+            a = 0
+            while a < dl - 1 and int(ids[i, a]) == int(dr[a]):
+                a += 1
+            # emitted = accepted drafts + the model's correction token;
+            # rejected positions beyond fill+a+1 stay stale in the cache
+            # but are masked (>= fill) until overwritten
+            emitted = [int(x) for x in dr[:a]] + [int(ids[i, a])]
+            self.stats["spec_drafted_tokens"] += dl - 1
+            self.stats["spec_accepted_tokens"] += a
+            kept = 0
+            for tok in emitted:
+                s.generated.append(tok)
+                s.remaining -= 1
+                kept += 1
+                self.stats["tokens_generated"] += 1
+                self._rep_counters[self._replica_of(i)][
+                    "tokens_generated"] += 1
+                if tok == self.scfg.eos_id or s.remaining <= 0:
+                    break
+            self.lens[i] = int(fills[i]) + kept
             self._maybe_retire(i)
 
     def _maybe_retire(self, i: int) -> None:
@@ -485,6 +911,9 @@ class ServeEngine:
             self.stats["requests_completed"] += 1
             self._rep_counters[self._replica_of(i)][
                 "requests_completed"] += 1
+            if self.paged:
+                # normal retirement, not an eviction: blocks just return
+                self.alloc.release(i)
             self.slots[i] = None
             self.lens[i] = 0
 
@@ -531,17 +960,22 @@ class ServeEngine:
             except AttributeError:  # not compiled yet (no calls)
                 return dict(zero)
 
-        return {"prefill": counts(self._prefill_fn),
-                "decode": counts(self._decode_fn)}
+        out = {"prefill": counts(self._prefill_fn),
+               "decode": counts(self._decode_fn)}
+        if self._verify_fn is not None:
+            out["verify"] = counts(self._verify_fn)
+        return out
 
     def reset_stats(self) -> None:
         """Zero the per-run counters (benchmark warmup boundary).
-        Artifact-lifetime counters — compiles, escalations, bucket pairs —
-        are re-derived from the artifacts and keep accumulating."""
+        Artifact-lifetime counters — compiles, escalations, bucket pairs,
+        pool capacity/in-use — are re-derived and keep accumulating."""
         for k in STATS_KEYS:
             self.stats[k] = 0
         self.stats["tokens_per_sec"] = 0.0
         self.stats["max_decode_gap_s"] = 0.0
+        self.stats["kv_pool_occupancy"] = 0.0
+        self.stats["kv_peak_occupancy"] = 0.0
         self._rep_counters = [
             {"admitted": 0, "tokens_generated": 0, "requests_completed": 0}
             for _ in range(self.scfg.replicas)]
@@ -554,6 +988,16 @@ class ServeEngine:
         self.stats["prefill_compiles"] = pc["total"]
         self.stats["prefill_escalations"] = pc["exact"]
         self.stats["prefill_bucket_pairs"] = len(self._bucket_pairs)
+        occ = sum(s is not None for s in self.slots)
+        self.stats["peak_active_slots"] = max(
+            self.stats["peak_active_slots"], occ)
+        if self.paged:
+            self.stats["kv_pool_blocks"] = self.alloc.n_blocks
+            self.stats["kv_blocks_in_use"] = self.alloc.used_blocks
+            frac = self.alloc.used_blocks / self.alloc.n_blocks
+            self.stats["kv_pool_occupancy"] = frac
+            self.stats["kv_peak_occupancy"] = max(
+                self.stats["kv_peak_occupancy"], frac)
         mb = self.scfg.max_batch
         self.stats["per_replica"] = [
             dict(c, occupied_slots=sum(

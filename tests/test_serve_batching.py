@@ -141,24 +141,57 @@ class TestAdmission:
             get_admission_policy("nope")
 
     def test_overlong_prompt_rejected_at_submit(self, tiny):
-        """Chunking must not let a prompt longer than max_seq 'complete'
-        with garbage: submit fails loudly instead."""
+        """A prompt longer than max_seq is rejected gracefully — counted
+        in stats and recorded in ``eng.rejected`` — while the rest of the
+        batch is admitted and completes."""
         cfg, model, params = tiny
         eng = _engine(model, params, max_seq=64, prefill_chunk=16)
-        with pytest.raises(ValueError, match="exceeds ServeConfig"):
-            eng.submit(_requests(cfg.vocab, [65]))
+        reqs = _requests(cfg.vocab, [65, 8, 70, 12], max_new=2)
+        eng.submit(reqs)
+        assert eng.stats["rejected_requests"] == 2
+        assert eng.rejected == [reqs[0].rid, reqs[2].rid]
+        assert [r.rid for r in eng.queue] == [reqs[1].rid, reqs[3].rid]
+        eng.run_until_done(max_steps=200)
+        assert sorted(eng.done) == [reqs[1].rid, reqs[3].rid]
+        assert eng.stats["requests_completed"] == 2
 
-    def test_duplicate_requests_admit_by_identity(self, tiny):
-        """Equal-rid, equal-length requests must not trip Request's
-        dataclass __eq__ (ndarray ambiguous truth value) during
-        admission."""
+    def test_duplicate_rid_rejected_auto_rid_admits(self, tiny):
+        """rids are the engine's stable request identity: submitting a
+        rid that is already pending raises, while auto-assigned rids
+        (Request(rid=None)) are unique and both requests complete."""
         cfg, model, params = tiny
         eng = _engine(model, params, max_batch=2)
         a, b = _requests(cfg.vocab, [8, 8], max_new=2)
         b.rid = a.rid
-        eng.submit([a, b])
+        with pytest.raises(ValueError, match="already pending"):
+            eng.submit([a, b])
+        rng = np.random.RandomState(7)
+        auto = [Request(tokens=rng.randint(0, cfg.vocab, size=8)
+                        .astype(np.int32), max_new_tokens=2)
+                for _ in range(2)]
+        assert auto[0].rid != auto[1].rid
+        eng.submit(auto)
         eng.run_until_done(max_steps=100)
         assert eng.stats["requests_completed"] == 2
+
+    def test_paged_decode_parity_across_buckets(self, tiny):
+        """Unconstrained-pool paged decode is bit-parity with the
+        fixed-row baseline, across ≥2 (B, S) prefill buckets (short and
+        long prompts, full and partial batches)."""
+        cfg, model, params = tiny
+        lens = [5, 12, 40, 60, 9, 33]
+        fixed = _engine(model, params, max_batch=3, max_seq=96)
+        fixed.submit(_requests(cfg.vocab, lens, max_new=4))
+        fixed.run_until_done(max_steps=400)
+        paged = _engine(model, params, max_batch=3, max_seq=96,
+                        kv_block_size=16)
+        paged.submit(_requests(cfg.vocab, lens, max_new=4))
+        paged.run_until_done(max_steps=400)
+        assert fixed.stats["prefill_bucket_pairs"] >= 2
+        assert paged.done == fixed.done
+        assert paged.stats["kv_preemptions"] == 0
+        assert paged.stats["kv_blocks_in_use"] == 0
+        paged.alloc.assert_consistent()
 
     @pytest.mark.parametrize("policy,expected", [
         ("fifo", [0, 1, 2]),

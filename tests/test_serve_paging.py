@@ -1,0 +1,305 @@
+"""Paged KV-cache pool + speculative decoding tests.
+
+Covers the block allocator's invariants under random ensure/release
+sequences (property-tested via the hypothesis shim), the paged
+gather/scatter primitives against a dense numpy reference, pool-pressure
+preemption end to end (victims recompute, token budgets and emitted
+prefixes are preserved, the allocator stays consistent), speculative
+drafting (n-gram proposer, single-launch verify, greedy accept-or-fix
+parity), and the model-level ``verify`` ≡ decode-replay contract the
+speculative path rests on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config
+from repro.data.pipeline import Request
+from repro.models.layers import paged_gather, paged_scatter
+from repro.models.registry import get_model, replay_verify
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.paging import (NULL_BLOCK, BlockAllocator, blocks_for,
+                                pick_victim)
+from repro.serve.speculative import (DraftModelProposer, NGramProposer,
+                                     get_proposer)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinyllama_11b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(vocab, lens, max_new=4, prios=None, seed=7):
+    rng = np.random.RandomState(seed)
+    return [Request(rid=i,
+                    tokens=rng.randint(0, vocab, size=ln).astype(np.int32),
+                    max_new_tokens=max_new,
+                    priority=0 if prios is None else prios[i])
+            for i, ln in enumerate(lens)]
+
+
+# -------------------------------------------------------------- allocator --
+
+class TestBlockAllocator:
+    def test_blocks_for(self):
+        assert blocks_for(0, 16) == 0
+        assert blocks_for(1, 16) == 1
+        assert blocks_for(16, 16) == 1
+        assert blocks_for(17, 16) == 2
+
+    def test_ensure_is_all_or_nothing(self):
+        a = BlockAllocator(4, 8, n_slots=2, max_blocks_per_slot=4)
+        assert a.ensure(0, 24)           # 3 blocks
+        assert not a.ensure(1, 16)       # needs 2, only 1 free
+        assert a.owned(1) == []          # nothing half-allocated
+        assert a.free_blocks == 1
+        assert a.ensure(1, 8)
+        a.assert_consistent()
+
+    def test_ensure_respects_per_slot_cap(self):
+        a = BlockAllocator(8, 8, n_slots=2, max_blocks_per_slot=2)
+        assert not a.ensure(0, 24)       # 3 blocks > cap, despite 8 free
+        assert a.owned(0) == []
+
+    def test_release_returns_blocks_and_table_is_null_padded(self):
+        a = BlockAllocator(4, 8, n_slots=2, max_blocks_per_slot=4)
+        a.ensure(0, 20)
+        t = a.table()
+        assert t.shape == (2, 4) and t.dtype == np.int32
+        assert NULL_BLOCK not in t[0, :3] and (t[0, 3:] == NULL_BLOCK).all()
+        assert (t[1] == NULL_BLOCK).all()
+        freed = a.release(0)
+        assert freed == 3 and a.free_blocks == 4
+        a.assert_consistent()
+
+    @settings(max_examples=25, deadline=None)
+    @given(ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 40),
+                                  st.booleans()),
+                        min_size=1, max_size=40),
+           n_blocks=st.integers(1, 12))
+    def test_random_op_sequences_keep_invariants(self, ops, n_blocks):
+        """No double-assignment, freed blocks return, owned+free is
+        conserved — under arbitrary interleaved ensure/release."""
+        a = BlockAllocator(n_blocks, 8, n_slots=4, max_blocks_per_slot=6)
+        for slot, n_tokens, do_release in ops:
+            if do_release:
+                before = len(a.owned(slot))
+                assert a.release(slot) == before
+            else:
+                before = a.owned(slot)
+                ok = a.ensure(slot, n_tokens)
+                if not ok:   # all-or-nothing
+                    assert a.owned(slot) == before
+                else:
+                    assert len(a.owned(slot)) \
+                        >= blocks_for(n_tokens, a.block_size)
+            a.assert_consistent()
+
+    def test_pick_victim_policy(self):
+        # lowest priority first, then newest admission
+        assert pick_victim([(0, 1, 5), (1, 0, 2), (2, 0, 9)]) == 2
+        assert pick_victim([(0, 2, 1), (1, 1, 0)]) == 1
+        assert pick_victim([]) is None
+
+
+# --------------------------------------------------------- gather/scatter --
+
+class TestGatherScatter:
+    def _ref_gather(self, pool, tables, block_axis, seq_axis):
+        p = np.moveaxis(np.asarray(pool), (block_axis, seq_axis), (0, 1))
+        rows = [np.concatenate([p[b] for b in row], axis=0)
+                for row in tables]
+        return np.moveaxis(np.stack(rows), (0, 1), (block_axis, seq_axis))
+
+    @pytest.mark.parametrize("block_axis,seq_axis,shape", [
+        (1, 3, (2, 5, 3, 4, 2)),    # attention layout (L, NB, hkv, bs, hd)
+        (1, 2, (2, 5, 4, 3)),       # MLA layout (L, NB, bs, lora)
+    ])
+    def test_gather_matches_dense_reference(self, block_axis, seq_axis,
+                                            shape):
+        rng = np.random.RandomState(0)
+        pool = jnp.asarray(rng.randn(*shape).astype(np.float32))
+        tables = jnp.asarray([[1, 3], [4, 2]], jnp.int32)
+        out = paged_gather(pool, tables, block_axis=block_axis,
+                           seq_axis=seq_axis)
+        ref = self._ref_gather(pool, np.asarray(tables), block_axis,
+                               seq_axis)
+        np.testing.assert_array_equal(np.asarray(out), ref)
+
+    def test_scatter_roundtrip_and_null_sink(self):
+        """Kept positions land in their blocks; masked writes go to the
+        null block; a gather after scatter returns the dense rows."""
+        rng = np.random.RandomState(1)
+        pool = jnp.asarray(rng.randn(2, 6, 3, 8, 2).astype(np.float32))
+        tables = jnp.asarray([[2, 4], [1, 3]], jnp.int32)
+        dense = jnp.asarray(rng.randn(2, 2, 3, 16, 2).astype(np.float32))
+        keep = jnp.asarray(np.array([[True] * 10 + [False] * 6,
+                                     [False] * 4 + [True] * 8
+                                     + [False] * 4]))
+        new = paged_scatter(pool, dense, tables, keep, block_axis=1,
+                            seq_axis=3)
+        back = paged_gather(new, tables, block_axis=1, seq_axis=3)
+        kp = np.asarray(keep)[None, :, None, :, None]
+        np.testing.assert_array_equal(
+            np.where(kp, np.asarray(back), 0.0),
+            np.where(kp, np.asarray(dense), 0.0))
+        # a block in no table row stays bit-identical (the null block,
+        # id 0, absorbs the masked writes instead)
+        np.testing.assert_array_equal(np.asarray(new)[:, 5],
+                                      np.asarray(pool)[:, 5])
+
+
+# -------------------------------------------------------------- proposers --
+
+class TestProposers:
+    def test_ngram_proposes_historical_continuation(self):
+        p = NGramProposer(max_ngram=3)
+        h = np.array([5, 6, 7, 8, 9, 1, 2, 5, 6, 7], np.int32)
+        np.testing.assert_array_equal(p.propose(h, 2), [8, 9])
+        np.testing.assert_array_equal(p.propose(h, 5), [8, 9, 1, 2, 5])
+
+    def test_ngram_falls_back_to_shorter_grams(self):
+        p = NGramProposer(max_ngram=3)
+        h = np.array([1, 2, 3, 9, 3], np.int32)   # only the 1-gram matches
+        np.testing.assert_array_equal(p.propose(h, 2), [9, 3])
+
+    def test_ngram_empty_cases(self):
+        p = NGramProposer()
+        assert p.propose(np.array([1, 2, 3], np.int32), 0).size == 0
+        assert p.propose(np.array([7], np.int32), 4).size == 0
+        # no repeat anywhere -> nothing to propose
+        assert p.propose(np.array([1, 2, 3, 4], np.int32), 4).size == 0
+        with pytest.raises(ValueError, match="max_ngram"):
+            NGramProposer(0)
+
+    def test_draft_model_proposer_is_a_stub(self):
+        p = DraftModelProposer(model=None, params=None)
+        with pytest.raises(NotImplementedError):
+            p.propose(np.array([1, 2], np.int32), 2)
+
+    def test_get_proposer_resolution(self):
+        assert get_proposer(None) is None
+        assert isinstance(get_proposer("ngram"), NGramProposer)
+        custom = NGramProposer(2)
+        assert get_proposer(custom) is custom
+        with pytest.raises(ValueError, match="unknown proposer"):
+            get_proposer("beam")
+        with pytest.raises(ValueError, match="propose"):
+            get_proposer(42)
+
+
+# ------------------------------------------------------------- the engine --
+
+class TestPagedEngine:
+    def test_paged_config_validation(self, tiny):
+        cfg, model, params = tiny
+        with pytest.raises(ValueError, match="divide"):
+            ServeEngine(model, params,
+                        ServeConfig(max_batch=2, max_seq=96,
+                                    kv_block_size=13))
+        with pytest.raises(ValueError, match="kv_block_size"):
+            ServeEngine(model, params,
+                        ServeConfig(max_batch=2, max_seq=96,
+                                    kv_block_size=0))
+
+    def test_recurrent_family_has_no_paging(self):
+        cfg = get_config("rwkv6_3b").reduced()
+        model = get_model(cfg)
+        assert model.init_block_pool is None
+        params = model.init(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="no paged-KV support"):
+            ServeEngine(model, params,
+                        ServeConfig(max_batch=2, max_seq=32,
+                                    kv_block_size=8))
+
+    def test_pool_pressure_preempts_and_recovers(self, tiny):
+        """A pool too small for all admitted slots forces preemption;
+        every request still completes with its full token budget, the
+        already-emitted prefix survives the requeue bit-exactly, and all
+        blocks drain back to the free list."""
+        cfg, model, params = tiny
+        reqs = _requests(cfg.vocab, [18, 23, 17, 21], max_new=20,
+                         prios=[0, 1, 0, 1], seed=1)
+        eng = ServeEngine(model, params,
+                         ServeConfig(max_batch=4, max_seq=64,
+                                     kv_block_size=8, kv_pool_blocks=6))
+        carried = {}
+        orig = eng._preempt
+        def spy(i):
+            s = eng.slots[i]
+            carried.setdefault(s.rid, []).append(list(s.generated))
+            return orig(i)
+        eng._preempt = spy
+        eng.submit(reqs)
+        eng.run_until_done(max_steps=2000)
+        assert eng.stats["kv_preemptions"] > 0
+        assert eng.stats["kv_evictions"] >= eng.stats["kv_preemptions"]
+        assert sorted(eng.done) == [0, 1, 2, 3]
+        for r in reqs:   # exact token budget despite recompute
+            assert len(eng.done[r.rid]) == r.max_new_tokens + 1
+        for rid, prefixes in carried.items():   # emitted prefix preserved
+            for pre in prefixes:
+                assert eng.done[rid][:len(pre)] == pre
+        eng.alloc.assert_consistent()
+        assert eng.alloc.used_blocks == 0
+        assert eng.stats["kv_peak_occupancy"] > 0.5
+
+    def test_speculative_parity_and_stats(self, tiny):
+        """Greedy accept-or-fix emits exactly the plain-decode tokens on
+        both cache layouts, accepted drafts ride a single verify launch
+        (fewer decode launches), and the counters move."""
+        cfg, model, params = tiny
+        lens = [12, 9, 15]
+        plain = ServeEngine(model, params,
+                            ServeConfig(max_batch=3, max_seq=64))
+        plain.submit(_requests(cfg.vocab, lens, max_new=8))
+        plain.run_until_done(max_steps=400)
+        for kv_bs in (None, 16):
+            spec = ServeEngine(model, params,
+                               ServeConfig(max_batch=3, max_seq=64,
+                                           kv_block_size=kv_bs,
+                                           speculative="ngram"))
+            spec.submit(_requests(cfg.vocab, lens, max_new=8))
+            spec.run_until_done(max_steps=400)
+            assert spec.done == plain.done
+            assert spec.stats["spec_drafted_tokens"] > 0
+            assert 0 <= spec.stats["spec_accepted_tokens"] \
+                <= spec.stats["spec_drafted_tokens"]
+            assert "verify" in spec.compile_counts()
+            assert spec.stats["decode_steps"] <= plain.stats["decode_steps"]
+
+    def test_speculative_k_validation(self, tiny):
+        cfg, model, params = tiny
+        with pytest.raises(ValueError, match="speculative_k"):
+            ServeEngine(model, params,
+                        ServeConfig(max_batch=2, max_seq=64,
+                                    speculative="ngram", speculative_k=0))
+
+
+# ------------------------------------------------------------ model level --
+
+class TestVerifyContract:
+    def test_verify_matches_decode_replay(self, tiny):
+        """transformer.verify (single-pass, all-position logits) must
+        agree with the sequential decode-step replay it shortcuts —
+        same greedy argmax at every valid position."""
+        cfg, model, params = tiny
+        rng = np.random.RandomState(3)
+        b, s, max_len = 2, 6, 32
+        tokens = jnp.asarray(rng.randint(0, cfg.vocab, size=(b, s)),
+                             jnp.int32)
+        lens = jnp.asarray([6, 4], jnp.int32)
+        offsets = jnp.asarray([0, 0], jnp.int32)
+        cache = model.init_cache(b, max_len)
+        fast, cache_f = model.verify(params, cache, tokens, lens, offsets)
+        slow, cache_s = replay_verify(model.decode_step)(
+            params, model.init_cache(b, max_len), tokens, lens, offsets)
+        fa = np.asarray(jnp.argmax(fast, -1))
+        sa = np.asarray(jnp.argmax(slow, -1))
+        for r, ln in enumerate([6, 4]):
+            np.testing.assert_array_equal(fa[r, :ln], sa[r, :ln])
