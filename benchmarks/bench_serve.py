@@ -139,6 +139,9 @@ def _measure(model, params, scfg, reqs_fn) -> Dict:
         "warmup_compiles": warm_compiles,
         "steady_state_new_compiles": st["prefill_compiles"] - warm_compiles,
         "peak_active_slots": st["peak_active_slots"],
+        "mem_launch_bytes": st["mem_launch_bytes"],
+        "mem_peak_launch_bytes": st["mem_peak_launch_bytes"],
+        "mem_launch_saved_bytes": st["mem_launch_saved_bytes"],
         "kv_preemptions": st["kv_preemptions"],
         "kv_peak_occupancy": round(st["kv_peak_occupancy"], 3),
         "spec_drafted_tokens": st["spec_drafted_tokens"],
@@ -195,6 +198,10 @@ def main(csv: List[str], smoke: bool = False) -> None:
     assert speedup >= floor, \
         f"batched prefill speedup {speedup:.2f}x below the {floor}x floor"
     csv.append(f"serve_speedup_batched_vs_replay,,{speedup:.2f}x")
+    bf = runs["batched_fifo"]
+    csv.append(f"serve_mem_prefill_launch,,"
+               f"peak={bf['mem_peak_launch_bytes']}"
+               f";saved_vs_caps={bf['mem_launch_saved_bytes']}")
 
     # ---- chunked vs unchunked on a long-prompt trace -------------------
     def long_trace():

@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Regenerate the ``captured``-labeled code blocks embedded in the docs.
+
+``docs/*.md`` may label a fenced block ``captured <name>`` — a snippet
+that claims to be real tool output.  ``scripts/docs_check.py`` runs this
+script with the names it found and verifies each block matches what the
+code produces *today*, so captured excerpts cannot go stale.
+
+Usage: ``python scripts/capture_docs.py <name> [<name> ...]`` — prints
+each snippet between ``===== <name> =====`` separators.  Run from the
+repo root with ``PYTHONPATH=src``.
+
+Snippets must be deterministic across processes: they render dimension
+*names* (never uids), use fixed inputs, and sort every JSON key.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _artifact():
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.api import Dim
+    from repro.api import compile as disc_compile
+
+    def fused_scale(x):
+        big = jnp.tanh(jnp.ones((128, 64), jnp.float32))
+        y = x * big.sum()
+        z = y + 1.0
+        return z * 0.5
+
+    cf = disc_compile(fused_scale, ((Dim("S", max=128), 64),))
+    x = np.arange(48 * 64, dtype=np.float32).reshape(48, 64) / 1000.0
+    cf(x)
+    return cf
+
+
+def memory_dispatch() -> str:
+    """The generated dispatch for a small artifact whose memory plan
+    proves ``le`` reuse from the ``Dim("S", max=128)`` cap."""
+    return _artifact().dispatch_source
+
+
+def memory_report() -> str:
+    """``report()["memory"]`` for the same artifact, after one call at
+    S=48 (bucket 64)."""
+    return json.dumps(_artifact().report()["memory"],
+                      indent=2, sort_keys=True)
+
+
+SNIPPETS = {
+    "memory-dispatch": memory_dispatch,
+    "memory-report": memory_report,
+}
+
+
+def main(argv) -> int:
+    names = argv or sorted(SNIPPETS)
+    unknown = [n for n in names if n not in SNIPPETS]
+    if unknown:
+        print(f"unknown snippet name(s): {unknown}; "
+              f"known: {sorted(SNIPPETS)}", file=sys.stderr)
+        return 2
+    for n in names:
+        print(f"===== {n} =====")
+        print(SNIPPETS[n]())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -56,7 +56,10 @@ class Backend:
     """A named strategy for turning a lowered graph into executables.
 
     ``build_bucket(graph, plan, syms, padded, donate)`` returns the entry
-    for one bucket signature; ``build_exact(graph, plan)`` returns the
+    for one bucket signature — ``donate`` is ``True`` (donate every
+    bucketed argument), a sequence of *parameter indices* the buffer
+    plan proved dead before the graph ends (donate exactly those), or
+    falsy; ``build_exact(graph, plan)`` returns the
     exact-shape executor for the static-escalation path;
     ``cluster_kernels`` maps fusion-plan templates to the
     :class:`~repro.core.codegen.ClusterKernel` objects that execute them.
@@ -101,7 +104,14 @@ def _make_aot_backend(name: str, description: str,
                                          kernels=kernels)
         lens_sds = jax.ShapeDtypeStruct((max(len(syms), 1),), jnp.int32)
         arg_sds = _padded_arg_sds(graph, padded)
-        donate_nums = tuple(range(1, 1 + len(arg_sds))) if donate else ()
+        # donate: True → every bucketed arg; a sequence → the buffer
+        # plan's provably-dead param indices (+1 skips the lens vector)
+        if donate is True:
+            donate_nums = tuple(range(1, 1 + len(arg_sds)))
+        elif donate:
+            donate_nums = tuple(1 + int(i) for i in donate)
+        else:
+            donate_nums = ()
         jit_kw = {}
         if arg_shardings is not None:
             jit_kw["in_shardings"] = tuple(arg_shardings)

@@ -94,6 +94,18 @@ class CompileOptions:
     * ``max_cache_entries``    — LRU budget of the compile cache
     * ``donate``               — donate input buffers to the device
       executable (bucketed entries only)
+    * ``memory_planning``      — bucket-generic symbolic buffer reuse
+      (BladeDISC++): the plan built at ``lower()`` time compares live
+      ranges' byte sizes *symbolically* (``eq``/``le`` proven from
+      ``Dim.max``/``multiple_of`` facts) and shares slots across every
+      bucket of the artifact.  Off, the planner falls back to one slot
+      per value (the per-bucket baseline); outputs are bit-identical
+      either way
+    * ``plan_donation``        — let the plan mark dead-after-last-use
+      parameters as donatable and realize in-place update ops
+      (``dynamic_update_slice``/``scatter_add``) as buffer donations;
+      with ``donate=True`` the jit/XLA path restricts ``donate_argnums``
+      to exactly the plan's provably-dead arguments
     * ``pipeline``             — ``"dhlo"`` runs the full DISC pipeline
       (bridge → constraints → fusion → bucketed codegen → generated
       dispatch); ``"jit"`` skips the DHLO bridge and buckets a
@@ -123,6 +135,8 @@ class CompileOptions:
     promote_on_change: bool = True
     max_cache_entries: int = 256
     donate: bool = False
+    memory_planning: bool = True
+    plan_donation: bool = True
     pipeline: str = "dhlo"
     mesh: Optional[Any] = None
     sharding_profile: Optional[Any] = None   # name or ShardingProfile

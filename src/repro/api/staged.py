@@ -267,7 +267,13 @@ def _lower(fn: Callable, specs: Sequence[Optional[ArgSpec]],
     graph, _ = bridge(fn, list(specs), name=options.name)
     plan = plan_fusion(graph)
     placement = place(graph, mesh=options.mesh)
-    buffer_plan = plan_buffers(graph)
+    # bucket-generic symbolic memory plan, decided ONCE here — every
+    # bucket entry, the VM, and donate_argnums realize the same plan
+    buffer_plan = plan_buffers(graph, policy,
+                               symbolic=options.memory_planning,
+                               donation=options.plan_donation)
+    buffer_plan.lines_text = buffer_plan.render_lines(graph)
+    graph.memory_plan = buffer_plan
     syms = tuple(dyn_symbols(graph))
     if sharding_plan is not None:
         # surface the plan-time divisibility facts in the constraint
@@ -321,7 +327,9 @@ class Compiled:
             fingerprint=self._fingerprint,
             escalation_threshold=options.escalation_threshold,
             on_tie_break=on_tie_break,
-            sharding=lowered.sharding_plan)
+            sharding=lowered.sharding_plan,
+            memory_plan=lowered.buffer_plan)
+        self._mstats = self._dispatch._mstats
 
     # ------------------------------------------------------------ public --
     def __call__(self, *arrays):
@@ -395,13 +403,54 @@ class Compiled:
                 "cluster_templates": templates,
                 "backend_covered_clusters": covered,
             })
+        rep["memory"] = self.memory_report()
         return rep
+
+    def memory_report(self) -> Dict[str, Any]:
+        """The ``report()["memory"]`` section: the bucket-generic plan
+        (symbolic peaks + reuse counts), concrete per-bucket peaks for
+        every bucket this artifact has compiled, and the dispatch's
+        staging-buffer accounting.  Documented in ``docs/api.md``."""
+        low = self.lowered
+        mem: Dict[str, Any] = {
+            "planning": bool(self.options.memory_planning
+                             and low.pipeline == "dhlo"),
+            "staging": self._mstats.as_dict(),
+        }
+        plan = low.buffer_plan
+        if plan is None:
+            return mem
+        mem.update({
+            "values": plan.n_values,
+            "slots": plan.n_slots,
+            "reuse_counts": dict(plan.reuse_counts),
+            "donatable_args": list(plan.donatable_args),
+            "symbolic_peak": plan.symbolic_peak(),
+            "symbolic_peak_no_reuse": plan.symbolic_peak_no_reuse(),
+        })
+        per_bucket: Dict[str, Any] = {}
+        for k in list(self.cache._entries):
+            if len(k) != 3 or k[0] != "bucket" or k[1] != self._fingerprint:
+                continue
+            bindings = {s.uid: int(v) for s, v in zip(low.syms, k[2])}
+            peaks = plan.concrete_peaks(low.graph, bindings)
+            reduction = (peaks["no_reuse_bytes"] / peaks["arena_bytes"]
+                         if peaks["arena_bytes"] else 1.0)
+            per_bucket[str(tuple(k[2]))] = {
+                **peaks, "reduction": round(reduction, 3)}
+        mem["per_bucket"] = per_bucket
+        return mem
 
     # ------------------------------------------------- device compilation --
     def _compile_bucket(self, key: Tuple[int, ...]):
         low = self.lowered
         padded = {s.uid: int(k) for s, k in zip(low.syms, key)}
         self._bucket_compiles += 1
+        donate = self.options.donate
+        if donate and self.options.plan_donation and low.buffer_plan is not None:
+            # realize the plan: donate exactly the params it proved dead
+            # before the graph ends (never an aliased output / live arg)
+            donate = low.buffer_plan.donatable_args
         if low.sharding_plan is not None:
             import inspect
 
@@ -424,9 +473,9 @@ class Compiled:
                     f"(see repro.api.backends) or compile without a mesh")
             return self.backend.build_bucket(
                 low.graph, low.plan, low.syms, padded,
-                self.options.donate, arg_shardings=shardings)
+                donate, arg_shardings=shardings)
         return self.backend.build_bucket(low.graph, low.plan, low.syms,
-                                         padded, self.options.donate)
+                                         padded, donate)
 
     def _compile_exact(self):
         # a fresh executor per escalated signature (each cache entry is

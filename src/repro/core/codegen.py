@@ -549,6 +549,17 @@ def _run_graph(graph: DGraph, arrays, env: _ShapeEnv, masked: bool,
     for p, a in zip(graph.params, arrays):
         vals[p.vid] = a
 
+    # the lowered buffer plan's free/donate lines, keyed by op identity:
+    # after an op runs, drop the references the plan proved dead — under
+    # jax async dispatch the donor of a completed op is genuinely
+    # releasable, so the executor's live set tracks the planned one
+    memory_plan = getattr(graph, "memory_plan", None)
+    frees_by_oid: Dict[int, List[int]] = {}
+    if memory_plan is not None:
+        for idx, vids in memory_plan.frees_after(graph).items():
+            if 0 <= idx < len(graph.ops):
+                frees_by_oid[graph.ops[idx].oid] = vids
+
     def read(v: DValue):
         if v.vid in vals:
             return vals[v.vid]
@@ -565,6 +576,8 @@ def _run_graph(graph: DGraph, arrays, env: _ShapeEnv, masked: bool,
             outs = emit_op(op, ins, out_shapes)
         for o, val in zip(op.outputs, outs):
             vals[o.vid] = val
+        for vid in frees_by_oid.get(op.oid, ()):
+            vals.pop(vid, None)
 
     if kernels and plan is not None:
         for cluster in plan.clusters:
@@ -573,6 +586,9 @@ def _run_graph(graph: DGraph, arrays, env: _ShapeEnv, masked: bool,
                 try:
                     vals.update(kern.run(graph, cluster, read, env, masked))
                     kern.runs += 1
+                    for op in cluster.ops:
+                        for vid in frees_by_oid.get(op.oid, ()):
+                            vals.pop(vid, None)
                     continue
                 except Exception:
                     kern.fallbacks += 1  # conservative fallback to XLA

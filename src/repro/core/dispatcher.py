@@ -51,8 +51,50 @@ from .cache import CompileCache
 from .dhlo import DGraph
 from .symshape import SymDim
 
-__all__ = ["DynAxis", "ArgPlan", "DispatchLens", "dhlo_lens", "jit_lens",
-           "generate_dispatch"]
+__all__ = ["DynAxis", "ArgPlan", "DispatchLens", "DispatchMemStats",
+           "dhlo_lens", "jit_lens", "generate_dispatch"]
+
+
+class DispatchMemStats:
+    """Host staging-buffer accounting for one artifact's dispatch.
+
+    The padding plan zero-fills each dynamic argument into a
+    bucket-shaped staging buffer; this object tracks those launch bytes
+    per call.  ``cap_bytes`` is the worst case (every symbol at its
+    ``Dim.max`` cap) fixed at emit time, so ``saved_bytes`` accumulates
+    how much bucketing under-shot the caps — the serve engine surfaces
+    these as ``mem_*`` gauges.  Staging buffers are never recycled into
+    jax calls (on CPU jax may alias a NumPy input zero-copy); instead the
+    generated flow drops each staging reference right after the entry
+    call, and this object keeps the byte trail.
+    """
+
+    __slots__ = ("calls", "last_bytes", "peak_bytes", "total_bytes",
+                 "cap_bytes", "saved_bytes")
+
+    def __init__(self, cap_bytes: Optional[int] = None) -> None:
+        self.calls = 0
+        self.last_bytes = 0
+        self.peak_bytes = 0
+        self.total_bytes = 0
+        self.cap_bytes = cap_bytes
+        self.saved_bytes = 0
+
+    def note(self, nbytes: int) -> None:
+        self.calls += 1
+        self.last_bytes = nbytes
+        if nbytes > self.peak_bytes:
+            self.peak_bytes = nbytes
+        self.total_bytes += nbytes
+        if self.cap_bytes is not None:
+            self.saved_bytes += self.cap_bytes - nbytes
+
+    def as_dict(self) -> Dict[str, Optional[int]]:
+        return {"calls": self.calls, "last_bytes": self.last_bytes,
+                "peak_bytes": self.peak_bytes,
+                "total_bytes": self.total_bytes,
+                "cap_bytes": self.cap_bytes,
+                "saved_bytes": self.saved_bytes}
 
 
 # ------------------------------------------------------------------ lens --
@@ -274,6 +316,7 @@ def generate_dispatch(
     escalation_threshold: Optional[int] = None,
     on_tie_break: Optional[Callable[[Sequence[Any]], Any]] = None,
     sharding: Optional[Any] = None,
+    memory_plan: Optional[Any] = None,
 ) -> Tuple[Callable, str]:
     """Generate the per-call host flow for one artifact, seen through
     ``lens``.
@@ -290,6 +333,14 @@ def generate_dispatch(
     cache's default) and ``compile_exact`` are given.  ``on_tie_break``
     handles a call that breaks a multi-site symbol tie (promote-on-change
     re-lowering); without it such a call raises a contract error.
+
+    ``memory_plan`` is the lowered artifact's
+    :class:`~repro.core.buffers.BufferPlan`: its bucket-generic
+    alloc/reuse/free lines are emitted into the generated source as the
+    memory-plan block (the wrapper-IR view of what every bucket entry
+    and the VM execute), and the per-call staging accounting
+    (``dispatch._mstats``, a :class:`DispatchMemStats`) is recorded
+    against the plan's worst-case cap bytes.
 
     ``sharding`` is an SPMD :class:`~repro.dist.spmd.ShardingPlan`: the
     generated flow then ``device_put``\\ s every padded bucket buffer to
@@ -317,6 +368,46 @@ def generate_dispatch(
             return jax.device_put(x, _sh)
 
         return put
+
+    # --- staging-byte accounting: padded launch bytes per call ---------
+    # (sum over dynamic args of itemsize * prod(bucketed/static axes);
+    # worst case fixes every symbol at its policy cap, when all are
+    # capped — the delta per call is what bucketing saved vs the caps)
+    byte_terms: List[str] = []
+    cap_bytes: Optional[int] = 0
+    for ap in lens.args:
+        if not (ap.shape is not None and ap.dynamic):
+            continue
+        itemsize = np.dtype(ap.dtype).itemsize
+        parts, cap_prod = [], itemsize
+        for d in ap.shape:
+            if isinstance(d, DynAxis):
+                parts.append(f"key[{d.sym}]")
+                cap = policy.cap(lens.sym_names[d.sym])
+                cap_prod = None if (cap is None or cap_prod is None) \
+                    else cap_prod * cap
+            else:
+                parts.append(str(d))
+                if cap_prod is not None:
+                    cap_prod *= d
+        byte_terms.append(f"{itemsize}*" + "*".join(parts))
+        cap_bytes = None if (cap_bytes is None or cap_prod is None) \
+            else cap_bytes + cap_prod
+    mstats = DispatchMemStats(cap_bytes=cap_bytes or None)
+    bytes_expr = " + ".join(byte_terms) if byte_terms else "0"
+
+    # --- memory-plan block: the wrapper-IR view of the buffer plan -----
+    header: List[str] = []
+    if memory_plan is not None and getattr(memory_plan, "lines_text", None):
+        rc = dict(memory_plan.reuse_counts)
+        header.append("# -- memory plan (bucket-generic, symbolic; every "
+                      "entry + the VM execute this) --")
+        header.append(f"#   slots={memory_plan.n_slots} "
+                      f"values={memory_plan.n_values} reuse={rc}")
+        header.append(f"#   peak = {memory_plan.symbolic_peak()}  "
+                      f"(no reuse: {memory_plan.symbolic_peak_no_reuse()})")
+        for ln in memory_plan.lines_text:
+            header.append(f"#   {ln}")
 
     lines: List[str] = ["def _dispatch(arrays):"]
     w = lines.append
@@ -389,6 +480,8 @@ def generate_dispatch(
         if sharding is not None:
             ns["_put_exact"] = sharding.put_exact
 
+    w(f"    _mstats.note({bytes_expr})")
+    ns["_mstats"] = mstats
     w("    entry = _get(('bucket', _fp, key))")
     w("    if entry is None:")
     w("        entry = _compile(key)")
@@ -461,12 +554,24 @@ def generate_dispatch(
 
     entry_args = (["lens"] if lens.pass_lens else []) + call_args
     call = f"entry({', '.join(entry_args)})"
+    # staging buffers we materialized (padded copies / padded trees):
+    # drop each reference right after the entry call — the plan's free
+    # discipline applied to the host side (never recycled into jax)
+    staged_vars = [a for a in call_args if a != "arrays" and
+                   not a.startswith("arrays[")]
+
+    def _free_staging():
+        for var in staged_vars:
+            w(f"    {var} = None  # plan: free staging")
 
     # --- output recovery: slice back to true shapes (dhlo only) --------
     if lens.outputs is None:
-        w(f"    return {call}")
+        w(f"    outs = {call}")
+        _free_staging()
+        w("    return outs")
     else:
         w(f"    outs = {call}")
+        _free_staging()
         out_exprs = []
         for oi, axes in enumerate(lens.outputs):
             idx_parts = []
@@ -487,7 +592,7 @@ def generate_dispatch(
                 out_exprs.append(f"outs[{oi}]")
         w("    return [" + ", ".join(out_exprs) + "]")
 
-    src = "\n".join(lines)
+    src = "\n".join(header + lines)
 
     # namespace bound once at generation time (compiled host flow)
     _entries_get = cache._entries.get
@@ -509,4 +614,7 @@ def generate_dispatch(
     ns["_compile"] = _compile
 
     exec(compile(src, f"<disc-dispatch:{lens.name}>", "exec"), ns)
-    return ns["_dispatch"], src
+    dispatch = ns["_dispatch"]
+    dispatch._mstats = mstats          # staging accounting (report/serve)
+    dispatch._memory_plan = memory_plan
+    return dispatch, src

@@ -8,8 +8,10 @@ interpreter over the DHLO graph that
 * re-derives every shape with the interpreted ``eval_dim`` oracle,
 * dispatches each op individually and synchronizes after each dispatch
   (modeling one kernel launch per op — no fusion),
-* manages intermediate buffers through the liveness plan + cached arena.
-
+* executes the lowered buffer plan's alloc/reuse/donate/free lines for
+  real: references are dropped when the plan frees them, and the byte
+  trail (planned peak vs the no-liveness baseline) lands in
+  :class:`VMStats` — the measurement behind ``BENCH_buffers.json``.
 DISC's generated dispatcher (``runtime.py``) does none of this per call —
 the delta between the two is exactly the paper's Table-2 "CPU time" claim,
 measured in ``benchmarks/bench_table2_nimble.py``.
@@ -24,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .buffers import CachedArena, liveness, plan_buffers
+from .buffers import CachedArena, plan_buffers
 from .codegen import _ShapeEnv  # exact-shape env reuse
 from .dhlo import DGraph, DValue
 from .emit import emit_op
@@ -38,17 +40,41 @@ class VMStats:
     calls: int = 0
     op_dispatches: int = 0
     interp_seconds: float = 0.0
+    # buffer-plan execution (bytes over the last call)
+    planned_peak_bytes: int = 0    # peak live bytes under the plan's frees
+    naive_peak_bytes: int = 0      # every value held to the end (no plan)
+    reuses: int = 0                # reuse+donate lines executed
+
+
+def _nbytes(x: Any) -> int:
+    n = getattr(x, "nbytes", None)
+    if n is not None:
+        return int(n)
+    size = int(np.prod(getattr(x, "shape", ()) or (1,)))
+    return size * np.dtype(getattr(x, "dtype", np.float32)).itemsize
 
 
 class NimbleVM:
-    """Per-op interpreter over a DHLO graph (the Nimble-style baseline)."""
+    """Per-op interpreter over a DHLO graph (the Nimble-style baseline).
 
-    def __init__(self, graph: DGraph, sync_per_op: bool = True) -> None:
+    ``memory_planning=False`` ignores the plan's free lines (every
+    intermediate is held to the end of the call) — the per-bucket
+    baseline that ``benchmarks/bench_buffers.py`` contrasts against.
+    """
+
+    def __init__(self, graph: DGraph, sync_per_op: bool = True,
+                 memory_planning: bool = True) -> None:
         self.graph = graph
         self.sync_per_op = sync_per_op
-        self.buffer_plan = plan_buffers(graph)
+        self.memory_planning = memory_planning
+        self.buffer_plan = getattr(graph, "memory_plan", None) or \
+            plan_buffers(graph, symbolic=memory_planning)
         self.arena = CachedArena()
         self.stats = VMStats()
+        # plan lines → op-indexed free schedule, fixed once per VM
+        self._frees = self.buffer_plan.frees_after(graph) \
+            if memory_planning else {}
+        self._reuse_lines = sum(self.buffer_plan.reuse_counts.values())
 
     def __call__(self, *arrays):
         t0 = time.perf_counter()
@@ -63,9 +89,9 @@ class NimbleVM:
                         bindings[c.uid] = int(size)
         env = _ShapeEnv(g, padded=bindings, actual=dict(bindings))
 
-        spans = liveness(g)
         vals: Dict[int, Any] = {p.vid: jnp.asarray(a)
                                 for p, a in zip(g.params, arrays)}
+        param_ids = set(vals)
 
         def read(v: DValue):
             if v.vid in vals:
@@ -73,7 +99,12 @@ class NimbleVM:
             assert v.literal is not None, f"undefined {v!r}"
             return jnp.asarray(v.literal)
 
-        out_ids = {o.vid for o in g.outputs}
+        def interm_bytes():
+            return sum(_nbytes(x) for vid, x in vals.items()
+                       if vid not in param_ids)
+
+        live_peak = 0
+        naive_total = 0
         for i, op in enumerate(g.ops):
             ins = [read(v) for v in op.inputs]
             ins += [read(v) for v in op.shape_operands]
@@ -85,13 +116,17 @@ class NimbleVM:
             self.stats.op_dispatches += 1
             for o, val in zip(op.outputs, outs):
                 vals[o.vid] = val
-            # interpreted dealloc: free values whose last use just passed
-            dead = [vid for vid, (_, last) in spans.items()
-                    if last == i and vid not in out_ids]
-            for vid in dead:
+                naive_total += _nbytes(val)
+            live_peak = max(live_peak, interm_bytes())
+            # execute the plan's free/donate lines for this program point
+            for vid in self._frees.get(i, ()):
                 vals.pop(vid, None)
 
         result = [read(o) for o in g.outputs]
         self.stats.calls += 1
+        self.stats.planned_peak_bytes = live_peak if self.memory_planning \
+            else naive_total
+        self.stats.naive_peak_bytes = naive_total
+        self.stats.reuses = self._reuse_lines
         self.stats.interp_seconds += time.perf_counter() - t0
         return result

@@ -144,6 +144,14 @@ STATS_KEYS: Dict[str, str] = {
     "spec_drafted_tokens": "draft tokens sent to the speculative verify "
                            "launch",
     "spec_accepted_tokens": "draft tokens accepted by verification",
+    "mem_launch_bytes": "staging bytes of the last prefill launch (dynamic "
+                        "args padded to their (B, S) bucket; not reset)",
+    "mem_peak_launch_bytes": "largest single prefill launch observed "
+                             "(artifact-lifetime: not reset)",
+    "mem_launch_saved_bytes": "cumulative staging bytes saved by bucketing "
+                              "vs launching every call at the "
+                              "max_batch×max_seq caps (artifact-lifetime: "
+                              "not reset)",
     "per_replica": "one dict per replica: admitted, tokens_generated, "
                    "requests_completed, occupied_slots (slot-range "
                    "[r*max_batch, (r+1)*max_batch) counters under "
@@ -998,6 +1006,15 @@ class ServeEngine:
             self.stats["kv_pool_occupancy"] = frac
             self.stats["kv_peak_occupancy"] = max(
                 self.stats["kv_peak_occupancy"], frac)
+        try:
+            # staging accounting off the prefill dispatch (see
+            # DispatchMemStats): padded launch bytes vs the cap worst case
+            ms = self._prefill_fn._mstats
+            self.stats["mem_launch_bytes"] = ms.last_bytes
+            self.stats["mem_peak_launch_bytes"] = ms.peak_bytes
+            self.stats["mem_launch_saved_bytes"] = ms.saved_bytes
+        except AttributeError:  # not compiled yet (no calls)
+            pass
         mb = self.scfg.max_batch
         self.stats["per_replica"] = [
             dict(c, occupied_slots=sum(

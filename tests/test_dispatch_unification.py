@@ -46,9 +46,12 @@ class TestEmitterParity:
                        "_buf = _np.zeros((key[0], 4), _dt0)",
                        "_buf[:x0.shape[0], :]"):
             assert _lines(d_src, needle) == _lines(j_src, needle) != []
+        # both lenses free their staging buffers right after the entry call
+        assert _lines(d_src, "x0 = None  # plan: free staging") == \
+            _lines(j_src, "x0 = None  # plan: free staging") != []
         # the two pipelines differ only in lens threading + output recovery
         assert "lens = " in d_src and "lens = " not in j_src
-        assert "outs[0][" in d_src and "outs" not in j_src
+        assert "outs[0][" in d_src and "outs[0][" not in j_src
 
     def test_bucket_expr_matches_policy_everywhere(self):
         """The inlined integer bucket math must agree with
