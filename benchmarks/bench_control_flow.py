@@ -1,0 +1,180 @@
+"""Control-flow benchmark: single-artifact traced decode vs per-iteration
+re-dispatch.
+
+The early-exit greedy decode loop run two ways over the same model
+(rwkv6 reduced — recurrent state, O(1) per-token memory):
+
+* **single-artifact**: ``models.common.greedy_decode`` — the whole loop is
+  one traced ``lax.while_loop`` region inside ONE bucketed artifact; the
+  host dispatches once per request batch, and the early-EOS exit happens
+  on device;
+* **per-step re-dispatch**: a compiled ``decode_step`` artifact called
+  from a Python loop — one host dispatch (bucket-key computation, cache
+  lookup, arg staging) per generated token, with the early-exit check as
+  a host round-trip per step.
+
+Both produce bit-identical token streams; the delta is pure host-side
+dispatch overhead, the same effect DISC's generated dispatch minimizes
+per call (Table 2) — regions move the *loop* itself off the host.
+
+Writes ``BENCH_ctrl.json`` at the repo root.  Asserts: token parity is
+exact, the single artifact compiles once per entry bucket, and its
+tokens/sec is at least that of the per-step baseline (>=1.05x in full
+mode; smoke only requires parity and compile counts — CI boxes are
+noisy).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import (ArgSpec, BucketPolicy, CompileOptions, Dim, TreeSpec,
+                       compile as disc_compile)
+from repro.configs import get_config
+from repro.models.registry import get_model
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _build(max_new: int):
+    cfg = get_config("rwkv6_3b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dim_b = Dim("B", max=8)
+    pol = BucketPolicy(kind="multiple", granule=2)
+    cache_spec = TreeSpec({1: "B"})
+    tok_spec = ArgSpec((dim_b, 1), jnp.int32, name="tokens")
+    len_spec = ArgSpec((dim_b,), jnp.int32, name="lens")
+
+    def loop(params, cache, toks, lens):
+        return model.greedy_decode(params, cache, toks, lens,
+                                   max_new=max_new, eos_id=-1)
+
+    single = disc_compile(
+        loop, specs=[None, cache_spec, tok_spec, len_spec],
+        options=CompileOptions(pipeline="jit", name="ctrl_single",
+                               policy=pol))
+    step = disc_compile(
+        model.decode_step, specs=[None, cache_spec, tok_spec, len_spec],
+        options=CompileOptions(pipeline="jit", name="ctrl_step",
+                               policy=pol))
+    return cfg, model, params, single, step
+
+
+def _per_step_decode(step, params, cache, toks, lens, max_new: int):
+    """The re-dispatch baseline: one compiled decode_step launch per
+    token, early-exit checked on the host each iteration."""
+    b = toks.shape[0]
+    buf = np.full((b, max_new), -1, np.int32)
+    cur, l = jnp.asarray(toks), jnp.asarray(lens)
+    done = np.zeros((b,), bool)
+    dispatches = 0
+    for i in range(max_new):
+        if done.all():
+            break
+        logits, cache = step(params, cache, cur, l)
+        dispatches += 1
+        nxt = np.asarray(jnp.argmax(logits[:b, -1, :], axis=-1), np.int32)
+        nxt = np.where(done, np.int32(-1), nxt)
+        buf[:, i] = nxt
+        done |= nxt == -1
+        cur, l = jnp.asarray(nxt[:, None]), l + 1
+    return buf, cache, dispatches
+
+
+def main(csv: List[str], smoke: bool = False) -> None:
+    max_new = 8 if smoke else 32
+    reps = 2 if smoke else 8
+    cfg, model, params, single, step = _build(max_new)
+    rng = np.random.RandomState(7)
+
+    batches = []
+    for b in (3, 4, 2):
+        cache = model.init_cache(b, 32)
+        toks = rng.randint(1, cfg.vocab, size=(b, 1)).astype(np.int32)
+        lens = np.ones((b,), np.int32)
+        batches.append((cache, toks, lens))
+
+    # ---- parity (and warmup: every bucket compiles here) --------------
+    for cache, toks, lens in batches:
+        b = toks.shape[0]
+        buf_s, n, _ = single(params, cache, toks, lens)
+        buf_p, _, _ = _per_step_decode(step, params, cache, toks, lens,
+                                       max_new)
+        assert np.array_equal(np.asarray(buf_s)[:b], buf_p), \
+            "single-artifact and per-step token streams diverged"
+    n_buckets = len({-(-b // 2) * 2 for b, in
+                     [(t.shape[0],) for _, t, _ in batches]})
+    assert single.n_compiles == n_buckets, \
+        (single.n_compiles, n_buckets)
+
+    # ---- throughput (steady state: everything is compiled) ------------
+    def run_single():
+        toks = 0
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for cache, tk, ln in batches:
+                buf, n, _ = single(params, cache, tk, ln)
+                jax.block_until_ready(buf)
+                toks += tk.shape[0] * int(np.asarray(n))
+        return toks, time.perf_counter() - t0
+
+    def run_per_step():
+        toks = 0
+        dispatches = 0
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for cache, tk, ln in batches:
+                buf, _, d = _per_step_decode(step, params, cache, tk, ln,
+                                             max_new)
+                toks += int((buf >= 0).sum() + (buf == -1).sum())
+                dispatches += d
+        return toks, time.perf_counter() - t0, dispatches
+
+    s_toks, s_sec = run_single()
+    p_toks, p_sec, p_disp = run_per_step()
+    s_tps = s_toks / max(s_sec, 1e-9)
+    p_tps = p_toks / max(p_sec, 1e-9)
+    speedup = s_tps / max(p_tps, 1e-9)
+    if not smoke:
+        assert speedup >= 1.05, \
+            f"single-artifact decode not faster: {speedup:.2f}x"
+
+    out = {
+        "smoke": smoke,
+        "config": {"arch": "rwkv6_3b (reduced)", "max_new": max_new,
+                   "reps": reps,
+                   "batches": [t.shape[0] for _, t, _ in batches]},
+        "single_artifact": {
+            "tokens_per_sec": round(s_tps, 1),
+            "compiles": single.n_compiles,
+            "host_dispatches_per_pass": len(batches),
+        },
+        "per_step_redispatch": {
+            "tokens_per_sec": round(p_tps, 1),
+            "compiles": step.n_compiles,
+            "host_dispatches_per_pass": p_disp // reps,
+        },
+        "speedup_single_vs_per_step": round(speedup, 2),
+    }
+    (ROOT / "BENCH_ctrl.json").write_text(json.dumps(out, indent=2) + "\n")
+    csv.append(f"ctrl_single_tokens_per_sec,,{round(s_tps, 1)}")
+    csv.append(f"ctrl_per_step_tokens_per_sec,,{round(p_tps, 1)}")
+    csv.append(f"ctrl_speedup,,{round(speedup, 2)}")
+    csv.append(f"ctrl_bench_json,,{(ROOT / 'BENCH_ctrl.json').name}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    rows: List[str] = []
+    main(rows, smoke=args.smoke)
+    print("\n".join(rows))

@@ -15,9 +15,10 @@ import sys
 import time
 from typing import List
 
-from . import (bench_buffers, bench_compile_overhead, bench_dist,
-               bench_fig3_frameworks, bench_fig4_static_gap, bench_roofline,
-               bench_serve, bench_table2_nimble, bench_table3_kernels)
+from . import (bench_buffers, bench_compile_overhead, bench_control_flow,
+               bench_dist, bench_fig3_frameworks, bench_fig4_static_gap,
+               bench_roofline, bench_serve, bench_table2_nimble,
+               bench_table3_kernels)
 
 SUITES = {
     "fig3": bench_fig3_frameworks.main,
@@ -29,6 +30,7 @@ SUITES = {
     "roofline": bench_roofline.main,
     "serve": bench_serve.main,
     "dist": bench_dist.main,
+    "ctrl": bench_control_flow.main,
 }
 
 

@@ -51,9 +51,33 @@ def memory_report() -> str:
                       indent=2, sort_keys=True)
 
 
+def control_flow_dispatch() -> str:
+    """Generated dispatch for an artifact whose graph contains a
+    ``d.scan`` region (carry + per-row outputs), showing the region-op
+    header and the bucket-on-entry key."""
+    import jax.numpy as jnp
+    import numpy as np
+    from jax import lax
+
+    from repro.api import Dim
+    from repro.api import compile as disc_compile
+
+    def scan_model(x):
+        def body(c, xi):
+            return c * 2.0 + xi.sum(), xi * c
+
+        c, ys = lax.scan(body, jnp.float32(1.0), x)
+        return c, ys
+
+    cf = disc_compile(scan_model, ((Dim("S", max=64), 8),))
+    cf(np.ones((13, 8), np.float32))
+    return cf.dispatch_source
+
+
 SNIPPETS = {
     "memory-dispatch": memory_dispatch,
     "memory-report": memory_report,
+    "control-flow-dispatch": control_flow_dispatch,
 }
 
 

@@ -13,6 +13,9 @@
 #                               # speculative) + serve benchmark smoke, which
 #                               # asserts ≥2x concurrent slots at equal KV
 #                               # memory and paged/speculative output parity
+#   scripts/check.sh --ctrl     # differential control-flow suite (while/
+#                               # scan/cond region ops, both pipelines) +
+#                               # single-artifact decode benchmark smoke
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -34,6 +37,12 @@ fi
 if [[ "$MODE" == "--serve" ]]; then
     python -m pytest tests/test_serve_batching.py tests/test_serve_paging.py -q
     python -m benchmarks.bench_serve --smoke
+    exit 0
+fi
+
+if [[ "$MODE" == "--ctrl" ]]; then
+    python -m pytest tests/test_control_flow.py -q
+    python -m benchmarks.bench_control_flow --smoke
     exit 0
 fi
 

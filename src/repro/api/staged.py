@@ -83,17 +83,35 @@ def infer_specs(arrays: Sequence[Any]) -> List[ArgSpec]:
 
 
 def _graph_const_token(graph) -> str:
-    """Hash of a DHLO graph's literal payloads, in deterministic order."""
+    """Hash of a DHLO graph's literal payloads, in deterministic order.
+
+    Recurses into region ops' nested body graphs (attrs holding a
+    ``DGraph`` or a tuple of them) — a region's closure constants are as
+    cache-relevant as top-level literals.
+    """
+    from ..core.dhlo import DGraph
+
     h = hashlib.sha1()
     seen = set()
-    for op in graph.ops:
-        for v in list(op.inputs) + list(op.shape_operands):
-            if v.literal is not None and v.vid not in seen:
-                seen.add(v.vid)
-                arr = np.asarray(v.literal)
-                h.update(str(arr.dtype).encode())
-                h.update(repr(arr.shape).encode())
-                h.update(arr.tobytes())
+
+    def walk(g) -> None:
+        for op in g.ops:
+            for v in list(op.inputs) + list(op.shape_operands):
+                if v.literal is not None and v.vid not in seen:
+                    seen.add(v.vid)
+                    arr = np.asarray(v.literal)
+                    h.update(str(arr.dtype).encode())
+                    h.update(repr(arr.shape).encode())
+                    h.update(arr.tobytes())
+            for av in op.attrs.values():
+                if isinstance(av, DGraph):
+                    walk(av)
+                elif isinstance(av, (tuple, list)):
+                    for x in av:
+                        if isinstance(x, DGraph):
+                            walk(x)
+
+    walk(graph)
     return h.hexdigest()[:16]
 
 
@@ -264,7 +282,9 @@ def _lower(fn: Callable, specs: Sequence[Optional[ArgSpec]],
     from ..core.placer import place
     from ..core.buffers import plan_buffers
 
-    graph, _ = bridge(fn, list(specs), name=options.name)
+    graph, _ = bridge(fn, list(specs), name=options.name,
+                      bounds={d.name: d.max for d in dims
+                              if d.max is not None})
     plan = plan_fusion(graph)
     placement = place(graph, mesh=options.mesh)
     # bucket-generic symbolic memory plan, decided ONCE here — every

@@ -170,8 +170,12 @@ class DimBounds:
         c = self.store.canon_dim(d)
         if isinstance(c, int):
             return c
-        if c.uid in self._caps:
-            return self._caps[c.uid]
+        # bounds recorded in the store (Dim.max declarations, region-op
+        # carry widening) combine with policy caps: tightest wins
+        cands = [x for x in (self._caps.get(c.uid), self.store.dim_bound(c))
+                 if x is not None]
+        if cands:
+            return min(cands)
         expr = self.dim_exprs.get(c.uid)
         if expr is None:
             return None

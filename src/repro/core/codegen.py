@@ -69,7 +69,14 @@ __all__ = [
     "dyn_symbols",
     "ClusterKernel",
     "pallas_cluster_kernels",
+    "REGION_OPS",
+    "emit_region_op",
 ]
+
+# DHLO region ops: bodies are nested DGraphs in attrs, executed by
+# lowering back to lax control flow (emit_region_op) — never through the
+# per-op emission table
+REGION_OPS = frozenset({"d.while", "d.scan", "d.cond"})
 
 
 def dyn_symbols(graph: DGraph) -> List[SymDim]:
@@ -110,6 +117,11 @@ class _ShapeEnv:
             return self.padded[c.uid]
         expr = self.exprs.get(c.uid) or self.exprs.get(d.uid)
         if expr is None:
+            # widened carry dims have no input binding and no derived
+            # expr — they pad to their recorded cap
+            cap = self.store.dim_bound(c)
+            if cap is not None:
+                return int(cap)
             raise KeyError(f"unbound dim {d!r}")
         return int(self._eval(expr, self.padded))
 
@@ -123,6 +135,9 @@ class _ShapeEnv:
             return self.actual[c.uid]
         expr = self.exprs.get(c.uid) or self.exprs.get(d.uid)
         if expr is None:
+            cap = self.store.dim_bound(c)
+            if cap is not None:
+                return int(cap)  # conservative: full padded extent valid
             raise KeyError(f"unbound dim {d!r}")
         return self._eval(expr, self.actual)
 
@@ -280,6 +295,98 @@ def _emit_masked(op: DOp, inputs, out_shapes, env: _ShapeEnv):
         return emit_op(op, inputs, out_shapes)
 
     return emit_op(op, inputs, out_shapes)
+
+
+# ------------------------------------------------------- region ops --
+
+def emit_region_op(op: DOp, ins: Sequence[Any], env: _ShapeEnv,
+                   masked: bool) -> List[Any]:
+    """Execute a DHLO region op by lowering it back to lax control flow.
+
+    Region bodies execute through :func:`_run_graph` on their nested
+    DGraphs, inside ``lax.while_loop``/``lax.scan``/``lax.switch`` — one
+    traced artifact regardless of trip count.  Each body invocation gets
+    a FRESH ``_ShapeEnv`` over the same padded/actual bindings: masks are
+    cached per env, and a mask traced in one lax scope must never leak
+    into another.
+
+    Masking: loop carries keep their (entry-bucket) padded shapes, so no
+    per-iteration masking is needed for ``d.while``/``d.cond``; a
+    ``d.scan`` over a dynamic length runs at the padded trip count with
+    an iteration index threaded in, and guards the carry so padded-tail
+    iterations are identity — stacked ys tail rows are garbage the
+    dispatch's output recovery slices away.
+    """
+    code = op.opcode
+    attrs = op.attrs
+    if code == "d.while":
+        cn, bn = attrs["cond_nconsts"], attrs["body_nconsts"]
+        cond_g, body_g = attrs["cond_graph"], attrs["body_graph"]
+        cond_consts = list(ins[:cn])
+        body_consts = list(ins[cn:cn + bn])
+        init = tuple(ins[cn + bn:])
+
+        def cond_fun(carry):
+            sub = _ShapeEnv(cond_g, env.padded, env.actual)
+            (pred,) = _run_graph(cond_g, cond_consts + list(carry), sub,
+                                 masked)
+            return pred
+
+        def body_fun(carry):
+            sub = _ShapeEnv(body_g, env.padded, env.actual)
+            return tuple(_run_graph(body_g, body_consts + list(carry), sub,
+                                    masked))
+
+        return list(lax.while_loop(cond_fun, body_fun, init))
+
+    if code == "d.scan":
+        nc, ncar = attrs["num_consts"], attrs["num_carry"]
+        body_g = attrs["body_graph"]
+        length_dim = attrs["length_dim"]
+        consts = list(ins[:nc])
+        init = tuple(ins[nc:nc + ncar])
+        xs = tuple(ins[nc + ncar:])
+        padded_len = env.padded_dim(length_dim)
+        dyn_len = masked and env.is_dynamic(length_dim)
+        actual_len = env.actual_dim(length_dim) if dyn_len else padded_len
+        idxs = lax.broadcasted_iota(jnp.int32, (padded_len,), 0)
+
+        def f(carry, row):
+            idx, xslices = row[0], list(row[1:])
+            sub = _ShapeEnv(body_g, env.padded, env.actual)
+            outs = _run_graph(body_g, consts + list(carry) + xslices, sub,
+                              masked)
+            new_carry, ys = tuple(outs[:ncar]), tuple(outs[ncar:])
+            if dyn_len:
+                # padded-tail iterations are identity on the carry (the
+                # row index travels with the row, so this is exact for
+                # reverse scans too)
+                keep = idx < actual_len
+                new_carry = tuple(jnp.where(keep, n, c)
+                                  for n, c in zip(new_carry, carry))
+            return new_carry, ys
+
+        final, ys = lax.scan(f, init, (idxs,) + xs, length=padded_len,
+                             reverse=attrs["reverse"],
+                             unroll=attrs["unroll"])
+        return list(final) + list(ys)
+
+    if code == "d.cond":
+        branch_graphs = attrs["branch_graphs"]
+        idx = jnp.clip(jnp.asarray(ins[0], jnp.int32), 0,
+                       len(branch_graphs) - 1)
+        operands = list(ins[1:])
+
+        def make(bg):
+            def branch(*args):
+                sub = _ShapeEnv(bg, env.padded, env.actual)
+                return tuple(_run_graph(bg, list(args), sub, masked))
+            return branch
+
+        out = lax.switch(idx, [make(bg) for bg in branch_graphs], *operands)
+        return list(out)
+
+    raise NotImplementedError(f"unknown region op {code}")
 
 
 # --------------------------------------------------- cluster kernels --
@@ -569,10 +676,13 @@ def _run_graph(graph: DGraph, arrays, env: _ShapeEnv, masked: bool,
 
     def run_op(op):
         ins = [read(v) for v in op.inputs] + [read(v) for v in op.shape_operands]
-        out_shapes = [env.padded_shape(o.shape) for o in op.outputs]
-        if masked:
+        if op.opcode in REGION_OPS:
+            outs = emit_region_op(op, ins, env, masked)
+        elif masked:
+            out_shapes = [env.padded_shape(o.shape) for o in op.outputs]
             outs = _emit_masked(op, ins, out_shapes, env)
         else:
+            out_shapes = [env.padded_shape(o.shape) for o in op.outputs]
             outs = emit_op(op, ins, out_shapes)
         for o, val in zip(op.outputs, outs):
             vals[o.vid] = val

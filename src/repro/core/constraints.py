@@ -73,6 +73,13 @@ class ShapeConstraintStore:
         self._value_size: Dict[int, SizeExpr] = {}
         # divisibility facts: root uid -> lcm-ish set of known divisors
         self._divisors: Dict[int, Set[int]] = {}
+        # declared/widened upper bounds: root uid -> cap.  Fed by
+        # ``Dim(max=...)`` contracts at bridge time and by the region-op
+        # carry-widening rule (propagation.carry_fixed_point); consumed by
+        # the memory planner's ``DimBounds`` and by padded codegen for
+        # widened carry dims (which have no input binding — they pad to
+        # the cap).
+        self._dim_bounds: Dict[int, int] = {}
         # mesh-divisibility facts (SPMD plan): dim name -> (axes, multiple).
         # A *plan-time* constraint: the bucket policy was tightened so
         # every bucket of the dim is a multiple of the owning mesh axes'
@@ -120,12 +127,35 @@ class ShapeConstraintStore:
         if ca_const is not None and cb_const is not None and ca_const != cb_const:
             raise ConstraintViolation(f"dim conflict: {ca_const} != {cb_const}")
         merged_div = self._divisors.get(root, set()) | self._divisors.get(rb, set())
+        bounds = [x for x in (self._dim_bounds.get(root),
+                              self._dim_bounds.get(rb)) if x is not None]
         new_root = self._dim_uf.union(root, rb)
         const = ca_const if ca_const is not None else cb_const
         if const is not None:
             self._dim_const[new_root] = const
         if merged_div:
             self._divisors[new_root] = merged_div
+        if bounds:
+            self._dim_bounds[new_root] = min(bounds)
+
+    def note_dim_bound(self, d: Dim, bound: int) -> None:
+        """Record an upper bound ``d <= bound``.  Tightest bound wins."""
+        c = self.canon_dim(d)
+        if isinstance(c, int):
+            if c > bound:
+                raise ConstraintViolation(
+                    f"dim bound conflict: {c} > declared max {bound}")
+            return
+        root = self._dim_uf.find(c.uid)
+        prev = self._dim_bounds.get(root)
+        self._dim_bounds[root] = int(bound) if prev is None else min(prev, int(bound))
+
+    def dim_bound(self, d: Dim) -> Optional[int]:
+        """Known upper bound for ``d``, or None.  Concrete dims bound themselves."""
+        c = self.canon_dim(d)
+        if isinstance(c, int):
+            return c
+        return self._dim_bounds.get(self._dim_uf.find(c.uid))
 
     def dims_equal(self, a: Dim, b: Dim) -> bool:
         ca, cb = self.canon_dim(a), self.canon_dim(b)

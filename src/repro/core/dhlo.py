@@ -183,10 +183,21 @@ class DGraph:
             # rank and dtype are structure; dim values are NOT
             return (idx[v.vid], v.rank, np.dtype(v.dtype).str)
 
+        def akey(v) -> str:
+            # region ops carry nested DGraphs in attrs: fold their own
+            # (shape-free) fingerprints in, never their repr — object
+            # identity must not leak into the cache key
+            if isinstance(v, DGraph):
+                return f"<region:{v.fingerprint()}>"
+            if isinstance(v, (tuple, list)) and any(
+                    isinstance(x, DGraph) for x in v):
+                return "(" + ",".join(akey(x) for x in v) + ")"
+            return repr(v)
+
         for p in self.params:
             h.update(repr(("param", vkey(p))).encode())
         for op in self.ops:
-            attrs = tuple(sorted((k, repr(v)) for k, v in op.attrs.items()))
+            attrs = tuple(sorted((k, akey(v)) for k, v in op.attrs.items()))
             h.update(
                 repr(
                     (

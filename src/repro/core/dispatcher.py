@@ -158,6 +158,9 @@ class DispatchLens:
     args: Tuple[ArgPlan, ...]
     outputs: Optional[Tuple[Tuple[Any, ...], ...]] = None
     pass_lens: bool = True
+    # one-line summaries of the artifact's region ops (d.while/d.scan/
+    # d.cond), surfaced as a header in the generated dispatch source
+    regions: Tuple[str, ...] = ()
 
 
 def dhlo_lens(graph: DGraph, syms: Sequence[SymDim]) -> DispatchLens:
@@ -191,6 +194,7 @@ def dhlo_lens(graph: DGraph, syms: Sequence[SymDim]) -> DispatchLens:
                 f"input argument; cannot generate dispatch for "
                 f"{graph.name!r}")
 
+    dim_exprs = getattr(graph, "dim_exprs", {})
     outputs: List[Tuple[Any, ...]] = []
     for o in graph.outputs:
         axes: List[Any] = []
@@ -199,16 +203,35 @@ def dhlo_lens(graph: DGraph, syms: Sequence[SymDim]) -> DispatchLens:
             if isinstance(c, SymDim):
                 if c.uid in sym_index:
                     axes.append(sym_index[c.uid])
+                elif dim_exprs.get(c.uid) is None \
+                        and dim_exprs.get(d.uid) is None:
+                    # widened carry dim (bounded, no derived expr): its
+                    # true extent is loop-dependent — keep the padded axis
+                    axes.append(None)
                 else:
                     axes.append(_derived_dim_evaluator(graph, syms, d))
             else:
                 axes.append(None)
         outputs.append(tuple(axes))
 
+    regions: List[str] = []
+    for op in graph.ops:
+        if op.opcode == "d.while":
+            regions.append(
+                f"d.while(cond={len(op.attrs['cond_graph'].ops)} ops, "
+                f"body={len(op.attrs['body_graph'].ops)} ops)")
+        elif op.opcode == "d.scan":
+            regions.append(
+                f"d.scan(body={len(op.attrs['body_graph'].ops)} ops, "
+                f"carries={op.attrs['num_carry']})")
+        elif op.opcode == "d.cond":
+            regions.append(
+                f"d.cond(branches={len(op.attrs['branch_graphs'])})")
+
     return DispatchLens(
         name=graph.name, sym_names=tuple(s.name for s in syms),
         sym_sites=tuple(tuple(s) for s in sites), args=tuple(args),
-        outputs=tuple(outputs), pass_lens=True)
+        outputs=tuple(outputs), pass_lens=True, regions=tuple(regions))
 
 
 def jit_lens(specs: Sequence[Any], sym_names: Sequence[str],
@@ -396,8 +419,18 @@ def generate_dispatch(
     mstats = DispatchMemStats(cap_bytes=cap_bytes or None)
     bytes_expr = " + ".join(byte_terms) if byte_terms else "0"
 
-    # --- memory-plan block: the wrapper-IR view of the buffer plan -----
+    # --- region-op block: traced control flow inside one artifact ------
     header: List[str] = []
+    if lens.regions:
+        header.append("# -- region ops (control flow traced INTO the "
+                      "bucketed artifact; the")
+        header.append("#    bucket key below is entry shapes only — "
+                      "iteration-varying shapes")
+        header.append("#    never multiply compile counts) --")
+        for r in lens.regions:
+            header.append(f"#   {r}")
+
+    # --- memory-plan block: the wrapper-IR view of the buffer plan -----
     if memory_plan is not None and getattr(memory_plan, "lines_text", None):
         rc = dict(memory_plan.reuse_counts)
         header.append("# -- memory plan (bucket-generic, symbolic; every "

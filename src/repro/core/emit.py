@@ -124,6 +124,10 @@ def emit_op(op: DOp, inputs: Sequence[jnp.ndarray],
         dim = params.get("dimension", -1)
         return [lax.sort(inputs[0], dimension=dim)]
     # ---- opaque fallback: rebind the original primitive --------------
+    if code in ("d.while", "d.scan", "d.cond"):
+        raise NotImplementedError(
+            f"region op {code} carries nested DGraph bodies and must be "
+            f"executed via codegen.emit_region_op, not the per-op table")
     prim = op.attrs.get("_prim")
     params = op.attrs.get("_params", {})
     if prim is None:

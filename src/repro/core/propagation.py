@@ -27,8 +27,9 @@ import math
 from dataclasses import dataclass
 from typing import Dict, Optional
 
+from .constraints import ConstraintViolation, ShapeConstraintStore
 from .dhlo import DGraph, DOp
-from .symshape import SymDim
+from .symshape import SymDim, fresh_symdim
 
 __all__ = [
     "PropClass",
@@ -37,6 +38,7 @@ __all__ = [
     "OP_TABLE",
     "op_info",
     "collect_semantic_constraints",
+    "carry_fixed_point",
 ]
 
 
@@ -123,6 +125,13 @@ _reg(["iota"], OpInfo(PropClass.IOTA, _M))
 _reg(["gather", "take"], OpInfo(PropClass.GATHER, _M))
 _reg(["scatter_add"], OpInfo(PropClass.UPDATE, _M))
 _reg(["sort"], OpInfo(PropClass.ELEMENTWISE, _M))
+# region ops (d.* control flow): bodies are nested DGraphs in attrs.
+# COMPUTE keeps them out of fusion clusters — a region executes as one
+# opaque launch (codegen.emit_region_op lowers it back to lax control
+# flow); its shape behavior is captured by the carry fixed-point rule
+# below, not by a propagation class.
+_reg(["d.while", "d.scan", "d.cond"],
+     OpInfo(PropClass.OPAQUE, CostClass.COMPUTE))
 # shape-calculation ops (host-placed by the placer, §4.2.1)
 _reg(["shape_of", "dim_size", "index_add", "index_mul"], OpInfo(PropClass.OPAQUE, CostClass.SHAPE))
 
@@ -204,3 +213,146 @@ def collect_semantic_constraints(graph: DGraph) -> None:
                     store.assert_dim_eq(lhs.shape[a], rhs.shape[b])
                 for a, b in zip(lb, rb):
                     store.assert_dim_eq(lhs.shape[a], rhs.shape[b])
+
+
+# --------------------------------------------------------------------------
+# Carry fixed-point rule for region ops (d.while / d.scan)
+# --------------------------------------------------------------------------
+
+def _expr_leaves(dim_exprs, d, acc) -> None:
+    if isinstance(d, int):
+        return
+    expr = dim_exprs.get(d.uid)
+    if expr is None:
+        acc[d.uid] = d
+        return
+    tag = expr[0]
+    if tag in ("mul", "sum"):
+        for x in expr[1]:
+            _expr_leaves(dim_exprs, x, acc)
+    elif tag in ("affine", "div"):
+        _expr_leaves(dim_exprs, expr[1], acc)
+
+
+def _expr_eval(dim_exprs, d, env):
+    if isinstance(d, int):
+        return d
+    expr = dim_exprs.get(d.uid)
+    if expr is None:
+        return env[d.uid]
+    tag = expr[0]
+    if tag == "mul":
+        v = 1
+        for x in expr[1]:
+            v *= _expr_eval(dim_exprs, x, env)
+        return v
+    if tag == "sum":
+        return sum(_expr_eval(dim_exprs, x, env) for x in expr[1])
+    if tag == "affine":
+        _, base, a, b = expr
+        return a * _expr_eval(dim_exprs, base, env) + b
+    if tag == "div":
+        _, base, k = expr
+        return _expr_eval(dim_exprs, base, env) // k
+    raise ValueError(f"unknown dim expr {expr}")
+
+
+def _provably_equal(store: ShapeConstraintStore, dim_exprs, da, db) -> bool:
+    """Can ``da == db`` be proved for every admissible symbol binding?
+
+    Structural canonical equality first; otherwise the derived exprs of
+    both dims are evaluated at two distinct leaf assignments (the trace
+    reps, then reps shifted by per-leaf offsets).  Identity-preserving
+    rewrites like ``(S-1)+1`` agree at both points; genuinely varying
+    dims (``S//2*2``) disagree at the shifted point.
+    """
+    if store.dims_equal(da, db):
+        return True
+    ca = store.canon_dim(da)
+    cb = store.canon_dim(db)
+    leaves: Dict[int, SymDim] = {}
+    try:
+        _expr_leaves(dim_exprs, ca, leaves)
+        _expr_leaves(dim_exprs, cb, leaves)
+        ordered = sorted(leaves.values(), key=lambda s: s.uid)
+        p1 = {s.uid: s.rep for s in ordered}
+        p2 = {s.uid: s.rep + 16 + 13 * i for i, s in enumerate(ordered)}
+        return (_expr_eval(dim_exprs, ca, p1) == _expr_eval(dim_exprs, cb, p1)
+                and _expr_eval(dim_exprs, ca, p2)
+                == _expr_eval(dim_exprs, cb, p2))
+    except (KeyError, ValueError):
+        return False
+
+
+def carry_fixed_point(store: ShapeConstraintStore, dim_exprs,
+                      entry_shape, out_shape, *,
+                      bounds: Optional[Dict[str, int]] = None,
+                      label: str = "carry"):
+    """Resolve a loop carry's shape across iterations (d.while / d.scan).
+
+    JAX's trace already guarantees the *representative* sizes of a carry
+    and its body output agree; this rule decides what that means
+    symbolically, per dim:
+
+    * provably equal (canonically unified, or their derived expressions
+      agree at two distinct bindings) — the dims are merged in the store
+      and the entry dim is kept;
+    * two plain symbols that merely coincide — the function *requires*
+      the equality to stay traceable, so it is asserted as a constraint;
+    * a derived dim that genuinely varies across iterations — the carry
+      **widens** to a fresh bounded symbol carrying the dim's declared
+      ``Dim(max=...)`` cap (looked up in ``bounds`` by symbol name, or in
+      the store's recorded bounds).  With no cap to widen to, the loop's
+      shape behavior is unbounded and a :class:`ConstraintViolation` is
+      raised naming the carry.
+
+    Returns the resolved symbolic shape for the region op's output.
+    """
+    if len(entry_shape) != len(out_shape):
+        raise ConstraintViolation(
+            f"{label}: rank changes across iterations "
+            f"({len(entry_shape)} -> {len(out_shape)})")
+    bounds = bounds or {}
+    resolved = []
+    for i, (din, dout) in enumerate(zip(entry_shape, out_shape)):
+        if isinstance(din, int) and isinstance(dout, int):
+            if din != dout:
+                raise ConstraintViolation(
+                    f"{label}: dim {i} changes across iterations "
+                    f"({din} -> {dout})")
+            resolved.append(din)
+            continue
+        if _provably_equal(store, dim_exprs, din, dout):
+            store.assert_dim_eq(din, dout)
+            resolved.append(din)
+            continue
+        def _plain_symbol(d):
+            return (isinstance(d, SymDim)
+                    and dim_exprs.get(d.uid) is None
+                    and isinstance(store.canon_dim(d), SymDim))
+
+        if _plain_symbol(din) and _plain_symbol(dout):
+            # two independent input symbols in a carry position: the loop
+            # itself requires them equal (jax re-checks the carry aval on
+            # every trace), so the tie is a real constraint, not a widen
+            store.assert_dim_eq(din, dout)
+            resolved.append(din)
+            continue
+        cap = None
+        for d in (din, dout):
+            if isinstance(d, SymDim):
+                cap = bounds.get(d.name) if cap is None else cap
+                cap = store.dim_bound(d) if cap is None else cap
+        if cap is None:
+            raise ConstraintViolation(
+                f"{label}: dim {i} changes across loop iterations "
+                f"({din!r} -> {dout!r}) with no declared bound — give the "
+                f"dim a Dim(max=...) contract so it can widen to a "
+                f"bounded symbol")
+        base = din if isinstance(din, SymDim) else dout
+        widened = fresh_symdim(f"{base.name}^", rep=base.rep)
+        store.note_dim_bound(widened, int(cap))
+        store.assert_dim_eq(din, widened)
+        store.assert_dim_eq(dout, widened)
+        resolved.append(widened)
+    return tuple(resolved)

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .buffers import CachedArena, plan_buffers
-from .codegen import _ShapeEnv  # exact-shape env reuse
+from .codegen import REGION_OPS, _ShapeEnv, emit_region_op
 from .dhlo import DGraph, DValue
 from .emit import emit_op
 from .symshape import SymDim
@@ -108,8 +108,11 @@ class NimbleVM:
         for i, op in enumerate(g.ops):
             ins = [read(v) for v in op.inputs]
             ins += [read(v) for v in op.shape_operands]
-            out_shapes = [env.padded_shape(o.shape) for o in op.outputs]
-            outs = emit_op(op, ins, out_shapes)
+            if op.opcode in REGION_OPS:
+                outs = emit_region_op(op, ins, env, masked=False)
+            else:
+                out_shapes = [env.padded_shape(o.shape) for o in op.outputs]
+                outs = emit_op(op, ins, out_shapes)
             if self.sync_per_op:
                 for o in outs:
                     jax.block_until_ready(o)  # one "kernel launch" per op

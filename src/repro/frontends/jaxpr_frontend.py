@@ -37,10 +37,20 @@ import numpy as np
 from jax.extend import core as jcore
 
 from ..core.dhlo import DGraph, DOp, DValue
-from ..core.propagation import collect_semantic_constraints
+from ..core.propagation import carry_fixed_point, collect_semantic_constraints
 from ..core.symshape import Dim, SymDim, SymShape, dim_value, fresh_symdim
 
-__all__ = ["ArgSpec", "TreeSpec", "bridge", "eval_dim"]
+__all__ = ["ArgSpec", "TreeSpec", "UnsupportedPrimitiveError", "bridge",
+           "eval_dim"]
+
+
+class UnsupportedPrimitiveError(NotImplementedError):
+    """A higher-order primitive the bridge cannot lower to DHLO.
+
+    Raised (naming the op) instead of falling through to the opaque
+    rebind path — a closed-over jaxpr traced at representative shapes
+    would silently compute garbage at any other bucket.
+    """
 
 
 @dataclass(frozen=True)
@@ -128,6 +138,8 @@ class _Bridge:
         # representative value -> SymDim, for resymbolization
         self.rep_to_dim: Dict[int, SymDim] = {}
         self._rep_iter = itertools.count()
+        # symbol name -> declared Dim(max=...) cap, for carry widening
+        self.bounds: Dict[str, int] = {}
 
     # ------------------------------------------------------------ symbols
     def symbol(self, name: str) -> SymDim:
@@ -214,6 +226,120 @@ _INLINE = {"pjit", "jit", "closed_call", "custom_jvp_call",
            "custom_vjp_call_jaxpr", "core_call"}
 
 
+def _bridge_region(b: _Bridge, closed, param_shapes, param_dtypes,
+                   name: str) -> DGraph:
+    """Recursively lower a closed-over jaxpr into a nested region DGraph.
+
+    The sub-graph *shares* the parent's constraint store and derived-dim
+    table — one symbolic universe — so shapes flowing through the region
+    boundary keep their identity; only the value environment is scoped.
+    """
+    outer_graph, outer_env = b.graph, b.env
+    sub = DGraph(name=name)
+    sub.store = outer_graph.store
+    sub.dim_exprs = outer_graph.dim_exprs
+    b.graph, b.env = sub, {}
+    try:
+        inner = closed.jaxpr
+        for var, sh, dt in zip(inner.invars, param_shapes, param_dtypes):
+            b.write(var, sub.add_param(tuple(sh), dt))
+        for cvar, cval in zip(inner.constvars, closed.consts):
+            b.write(cvar, sub.add_const(np.asarray(cval)))
+        for eqn in inner.eqns:
+            _bridge_eqn(b, eqn)
+        sub.set_outputs([b.read(a) for a in inner.outvars])
+    finally:
+        b.graph, b.env = outer_graph, outer_env
+    # op-semantic constraints of the region body land in the shared store
+    # now (the top-level pass does not descend into regions), so the
+    # carry fixed-point that runs next sees them
+    collect_semantic_constraints(sub)
+    return sub
+
+
+def _bridge_while(b: _Bridge, eqn, in_vals: List[DValue]) -> None:
+    g = b.graph
+    params = eqn.params
+    cn, bn = params["cond_nconsts"], params["body_nconsts"]
+    cond_args = in_vals[:cn] + in_vals[cn + bn:]
+    body_args = in_vals[cn:]
+    cond_graph = _bridge_region(
+        b, params["cond_jaxpr"], [v.shape for v in cond_args],
+        [v.dtype for v in cond_args], f"{g.name}.while.cond")
+    body_graph = _bridge_region(
+        b, params["body_jaxpr"], [v.shape for v in body_args],
+        [v.dtype for v in body_args], f"{g.name}.while.body")
+    carry = in_vals[cn + bn:]
+    out_shapes = [
+        carry_fixed_point(g.store, g.dim_exprs, cv.shape, ov.shape,
+                          bounds=b.bounds, label=f"while carry {i}")
+        for i, (cv, ov) in enumerate(zip(carry, body_graph.outputs))]
+    op = g.add_op("d.while", in_vals, out_shapes,
+                  [v.aval.dtype for v in eqn.outvars],
+                  attrs={"cond_graph": cond_graph, "body_graph": body_graph,
+                         "cond_nconsts": cn, "body_nconsts": bn})
+    for var, val in zip(eqn.outvars, op.outputs):
+        b.write(var, val)
+
+
+def _bridge_scan(b: _Bridge, eqn, in_vals: List[DValue]) -> None:
+    g = b.graph
+    params = eqn.params
+    nc, ncar = params["num_consts"], params["num_carry"]
+    consts, carry = in_vals[:nc], in_vals[nc:nc + ncar]
+    xs = in_vals[nc + ncar:]
+    length_dim: Dim = xs[0].shape[0] if xs else int(params["length"])
+    body_shapes = [v.shape for v in consts + carry] + \
+        [tuple(v.shape[1:]) for v in xs]
+    body_dtypes = [v.dtype for v in consts + carry] + [v.dtype for v in xs]
+    body_graph = _bridge_region(b, params["jaxpr"], body_shapes, body_dtypes,
+                                f"{g.name}.scan.body")
+    out_shapes = [
+        carry_fixed_point(g.store, g.dim_exprs, cv.shape, ov.shape,
+                          bounds=b.bounds, label=f"scan carry {i}")
+        for i, (cv, ov) in enumerate(zip(carry, body_graph.outputs[:ncar]))]
+    out_shapes += [(length_dim,) + tuple(y.shape)
+                   for y in body_graph.outputs[ncar:]]
+    op = g.add_op("d.scan", in_vals, out_shapes,
+                  [v.aval.dtype for v in eqn.outvars],
+                  attrs={"body_graph": body_graph, "num_consts": nc,
+                         "num_carry": ncar, "length_dim": length_dim,
+                         "reverse": bool(params.get("reverse", False)),
+                         "unroll": int(params.get("unroll", 1) or 1)})
+    for var, val in zip(eqn.outvars, op.outputs):
+        b.write(var, val)
+
+
+def _bridge_cond(b: _Bridge, eqn, in_vals: List[DValue]) -> None:
+    g = b.graph
+    operands = in_vals[1:]  # in_vals[0] is the branch index
+    branch_graphs = tuple(
+        _bridge_region(b, br, [v.shape for v in operands],
+                       [v.dtype for v in operands], f"{g.name}.cond.br{i}")
+        for i, br in enumerate(eqn.params["branches"]))
+    base = branch_graphs[0]
+    for bg in branch_graphs[1:]:
+        for a, o in zip(base.outputs, bg.outputs):
+            g.store.assert_shape_eq(a.shape, o.shape)
+    op = g.add_op("d.cond", in_vals, [v.shape for v in base.outputs],
+                  [v.aval.dtype for v in eqn.outvars],
+                  attrs={"branch_graphs": branch_graphs})
+    for var, val in zip(eqn.outvars, op.outputs):
+        b.write(var, val)
+
+
+_REGION_BRIDGES = {"while": _bridge_while, "scan": _bridge_scan,
+                   "cond": _bridge_cond}
+
+
+def _has_subjaxpr(v: Any) -> bool:
+    if isinstance(v, (jcore.Jaxpr, jcore.ClosedJaxpr)):
+        return True
+    if isinstance(v, (tuple, list)):
+        return any(_has_subjaxpr(x) for x in v)
+    return False
+
+
 def _sym_out_shape_ew(b: _Bridge, in_vals: List[DValue], aval) -> SymShape:
     """Elementwise result: shape of the highest-rank symbolic operand."""
     for v in in_vals:
@@ -244,6 +370,9 @@ def _bridge_eqn(b: _Bridge, eqn) -> None:
             return
 
     in_vals = [b.read(a) for a in eqn.invars]
+    if name in _REGION_BRIDGES:
+        _REGION_BRIDGES[name](b, eqn, in_vals)
+        return
     g = b.graph
     attrs: Dict[str, Any] = {"_prim": prim, "_params": params}
 
@@ -454,13 +583,15 @@ def _bridge_eqn(b: _Bridge, eqn) -> None:
         return
 
     # ---- generic fallback: keep the primitive; resymbolize outputs ----
-    # call-like primitives must be inlined above — binding a rep-traced
+    # higher-order primitives must never reach here — binding a rep-traced
     # inner jaxpr at a different bucket shape would be silently wrong
-    for pk in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
-        if pk in params and name not in ("scan", "while", "cond"):
-            raise NotImplementedError(
-                f"call-like primitive {name!r} with {pk} was not inlined — "
-                f"add it to _INLINE in jaxpr_frontend.py")
+    sub_keys = sorted(k for k, v in params.items() if _has_subjaxpr(v))
+    if sub_keys:
+        raise UnsupportedPrimitiveError(
+            f"higher-order primitive {name!r} (closed-over jaxpr in params "
+            f"{sub_keys}) is not supported by the DHLO bridge; supported "
+            f"region ops are while/scan/cond — plain call-like primitives "
+            f"belong in _INLINE in jaxpr_frontend.py")
     local = [d for v in in_vals for d in v.shape]
     out_shapes = [tuple(b.resymbolize(s, local) for s in v.aval.shape)
                   for v in eqn.outvars]
@@ -471,15 +602,26 @@ def _bridge_eqn(b: _Bridge, eqn) -> None:
 
 
 def bridge(fn: Callable, arg_specs: Sequence[ArgSpec], *, name: str = "graph",
-           collect_hints: bool = True) -> Tuple[DGraph, List[ArgSpec]]:
-    """Lower ``fn`` to a DHLO graph, collecting shape constraints (§4.2.1)."""
+           collect_hints: bool = True,
+           bounds: Optional[Dict[str, int]] = None,
+           ) -> Tuple[DGraph, List[ArgSpec]]:
+    """Lower ``fn`` to a DHLO graph, collecting shape constraints (§4.2.1).
+
+    ``bounds`` maps symbol names to their declared ``Dim(max=...)`` caps;
+    the caps are recorded in the constraint store up front so region-op
+    carry widening (and the memory planner) can use them.
+    """
     b = _Bridge(name)
+    b.bounds = dict(bounds or {})
     sym_shapes: List[SymShape] = []
     for spec in arg_specs:
         dims: List[Dim] = []
         for s in spec.shape:
             dims.append(b.symbol(s) if isinstance(s, str) else int(s))
         sym_shapes.append(tuple(dims))
+    for nm, cap in b.bounds.items():
+        if nm in b.symbols and cap is not None:
+            b.graph.store.note_dim_bound(b.symbols[nm], int(cap))
 
     concrete = [jax.ShapeDtypeStruct(tuple(dim_value(d) for d in sh), spec.dtype)
                 for sh, spec in zip(sym_shapes, arg_specs)]

@@ -27,7 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["ArchConfig", "param_init", "DTYPES", "cross_entropy_loss"]
+__all__ = ["ArchConfig", "param_init", "DTYPES", "cross_entropy_loss",
+           "greedy_decode"]
 
 DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32}
 
@@ -172,6 +173,47 @@ def param_init(rng: jax.Array, shape: Tuple[int, ...], dtype,
         fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
         scale = 1.0 / math.sqrt(fan_in)
     return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+def greedy_decode(step_fn: Callable, cache, first_tokens, lens, *,
+                  max_new: int, eos_id: int):
+    """Greedy autoregressive decode as ONE traced ``lax.while_loop``.
+
+    ``step_fn(cache, tokens, lens) -> (logits, cache)`` is a decode step
+    already closed over params (and any model kwargs such as whisper's
+    ``enc_out``).  The loop early-exits as soon as every row has emitted
+    ``eos_id`` — the whole decode is a single region op inside one bucketed
+    artifact instead of ``max_new`` separate dispatches, so the compile
+    count stays keyed on *entry* shapes only.
+
+    Rows that finish keep emitting ``eos_id`` (their buffer stays frozen);
+    the cache still advances uniformly for every row, matching a batched
+    Python reference loop step for step.
+
+    Returns ``(tokens (B, max_new) int32, n_steps int32, cache)``.
+    """
+    b = first_tokens.shape[0]
+    buf = jnp.full((b, max_new), eos_id, jnp.int32)
+
+    def cond(c):
+        i, _, _, _, _, done = c
+        return jnp.logical_and(i < max_new, jnp.logical_not(jnp.all(done)))
+
+    def body(c):
+        i, buf, cur, lens, cache, done = c
+        logits, cache = step_fn(cache, cur, lens)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        nxt = jnp.where(done, jnp.int32(eos_id), nxt)
+        buf = jax.lax.dynamic_update_slice(buf, nxt[:, None], (0, i))
+        done = jnp.logical_or(done, nxt == jnp.int32(eos_id))
+        return (i + 1, buf, nxt[:, None], lens + 1, cache, done)
+
+    init = (jnp.int32(0), buf,
+            jnp.asarray(first_tokens, jnp.int32).reshape(b, 1),
+            jnp.asarray(lens, jnp.int32), cache,
+            jnp.zeros((b,), jnp.bool_))
+    n, buf, _, _, cache, _ = jax.lax.while_loop(cond, body, init)
+    return buf, n, cache
 
 
 def cross_entropy_loss(logits: jax.Array, labels: jax.Array,

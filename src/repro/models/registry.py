@@ -29,6 +29,10 @@ class Model:
     # sequence axis to page (recurrent state)
     init_block_pool: Optional[Callable] = None  # (n_blocks, block_size) -> pool
     page_axes: Optional[Callable] = None        # () -> per-leaf seq-axis tree
+    # whole decode loop as ONE traced lax.while_loop (early EOS exit);
+    # (params, cache, tokens, lens, *, max_new, eos_id, **kw)
+    #   -> (tokens (B, max_new), n_steps, cache)
+    greedy_decode: Optional[Callable] = None
 
 
 def cache_batch_axis(shape, batch: int) -> Optional[int]:
@@ -152,6 +156,10 @@ def _lm_bundle(mod, cfg: ArchConfig) -> Model:
         init_block_pool=(lambda n, bs: mod.init_block_pool(cfg, n, bs))
         if paged else None,
         page_axes=(lambda: mod.page_axes(cfg)) if paged else None,
+        greedy_decode=(lambda params, cache, tokens, lens, **kw:
+                       mod.greedy_decode(cfg, params, cache, tokens, lens,
+                                         **kw))
+        if hasattr(mod, "greedy_decode") else None,
     )
 
 
@@ -177,6 +185,8 @@ def _whisper_bundle(cfg: ArchConfig) -> Model:
         # decode_step kwargs themselves (the serve engine is LM-only)
         prefill=replay_prefill(decode),
         verify=replay_verify(decode),
+        greedy_decode=lambda params, cache, tokens, lens, **kw:
+            whisper.greedy_decode(cfg, params, cache, tokens, lens, **kw),
     )
 
 

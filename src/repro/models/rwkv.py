@@ -16,7 +16,8 @@ from jax.sharding import PartitionSpec as P
 
 from ..dist.context import maybe_shard
 from . import layers as L
-from .common import ArchConfig, cross_entropy_loss, param_init
+from .common import ArchConfig, cross_entropy_loss, greedy_decode as \
+    _greedy_decode, param_init
 
 Params = Dict[str, Any]
 
@@ -137,3 +138,14 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Params, tokens,
     x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
     x = L.norm_apply(cfg, params["ln_f"], x)
     return x @ params["head"], new_cache
+
+
+def greedy_decode(cfg: ArchConfig, params: Params, cache: Params, tokens,
+                  lens, *, max_new: int, eos_id: int = 0):
+    """Greedy generation as one traced ``lax.while_loop`` (early exit when
+    every row has emitted ``eos_id``) — the recurrent state threads through
+    the loop carry, so the whole decode is a single region op.
+    """
+    step = lambda c, t, l: decode_step(cfg, params, c, t, l)
+    return _greedy_decode(step, cache, tokens, lens,
+                          max_new=max_new, eos_id=eos_id)

@@ -15,7 +15,8 @@ from jax.sharding import PartitionSpec as P
 
 from ..dist.context import maybe_shard
 from . import layers as L
-from .common import ArchConfig, cross_entropy_loss, param_init
+from .common import ArchConfig, cross_entropy_loss, greedy_decode as \
+    _greedy_decode, param_init
 
 Params = Dict[str, Any]
 
@@ -160,3 +161,14 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Params, tokens,
                                    caches=cache)
     x = L.norm_apply(cfg, params["ln_f"], x)
     return x @ params["head"], new_cache
+
+
+def greedy_decode(cfg: ArchConfig, params: Params, cache: Params, tokens,
+                  lens, *, enc_out, max_new: int, eos_id: int = 0):
+    """Whole greedy transcription loop as one traced ``lax.while_loop``
+    (early exit once every row emits ``eos_id``) — a single region op in
+    the compiled artifact rather than ``max_new`` host dispatches.
+    """
+    step = lambda c, t, l: decode_step(cfg, params, c, t, l, enc_out=enc_out)
+    return _greedy_decode(step, cache, tokens, lens,
+                          max_new=max_new, eos_id=eos_id)

@@ -1,0 +1,370 @@
+"""Differential control-flow suite: traced lax.while_loop / lax.scan /
+lax.cond as first-class DHLO region ops (``d.while`` / ``d.scan`` /
+``d.cond``).
+
+The contract under test, on BOTH pipelines:
+
+* compiled-vs-eager parity across >= 2 bucket signatures — including scans
+  whose carry transform is iteration-count sensitive (padded extra trips
+  would corrupt the carry without the dhlo trip-count guard);
+* compile counts are O(#entry-shape buckets): data-dependent trip counts
+  and iteration-varying interior shapes never multiply compile counts;
+* nested regions (a while inside a scan body) round-trip;
+* carry widening: a carry dim that changes across iterations unifies into
+  a fresh *bounded* symbol when a ``Dim(max=...)`` cap is declarable, and
+  raises :class:`ConstraintViolation` when it is not;
+* unsupported higher-order primitives raise a named
+  :class:`UnsupportedPrimitiveError` instead of silently mis-lowering.
+
+The jit pipeline's documented contract is "the function is lens-aware":
+inputs are zero-padded to the bucket and outputs are not re-sliced, so the
+jit-side differential checks compare the valid region and use pad-neutral
+bodies where trip count matters.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.api import ArgSpec, CompileOptions, Dim, compile as disc_compile
+from repro.core.constraints import ConstraintViolation, ShapeConstraintStore
+from repro.core.propagation import carry_fixed_point
+from repro.core.symshape import fresh_symdim
+from repro.core.vm import NimbleVM
+from repro.frontends.jaxpr_frontend import UnsupportedPrimitiveError
+
+from _hypothesis_compat import given, settings, st
+
+PIPELINES = ("dhlo", "jit")
+
+
+def _compile(fn, spec=((Dim("S", max=64), 4),), pipeline="dhlo", **opts):
+    return disc_compile(fn, spec,
+                        options=CompileOptions(pipeline=pipeline, **opts))
+
+
+def _x(s, d=4, seed=0):
+    rng = np.random.RandomState(seed + s)
+    return (rng.randn(s, d) * 0.1).astype(np.float32)
+
+
+def _check(cf, fn, x, pipeline, rtol=1e-5):
+    got = jax.tree.map(np.asarray, cf(x))
+    want = jax.tree.map(np.asarray, fn(jnp.asarray(x)))
+    flat_g, _ = jax.tree.flatten(got)
+    flat_w, _ = jax.tree.flatten(want)
+    for g, w in zip(flat_g, flat_w):
+        if pipeline == "jit" and g.shape != w.shape:
+            # jit pipeline: outputs stay bucket-padded (lens-aware contract)
+            g = g[tuple(slice(0, n) for n in w.shape)]
+        assert g.shape == w.shape
+        np.testing.assert_allclose(g, w, rtol=rtol, atol=1e-6)
+
+
+# ---------------------------------------------------------------- while --
+
+
+def while_fn(x):
+    """Data-dependent trip count: loop until the accumulator crosses a
+    threshold derived from the input."""
+    def cond(c):
+        return c[0] < 7
+
+    def body(c):
+        return (c[0] + 1, c[1] * 1.25 + x.sum())
+
+    return lax.while_loop(cond, body, (jnp.int32(0), jnp.float32(1.0)))[1]
+
+
+class TestWhileDifferential:
+    @pytest.mark.parametrize("pipeline", PIPELINES)
+    def test_parity_across_buckets(self, pipeline):
+        cf = _compile(while_fn, pipeline=pipeline)
+        for s in (5, 13, 37, 61):
+            _check(cf, while_fn, _x(s), pipeline)
+        # 4 sizes, 3 pow2 buckets (16/64) -> compile count is O(#buckets)
+        assert cf.n_compiles == len({16, 16, 64, 64})
+
+    def test_trip_count_does_not_multiply_compiles(self):
+        """Same entry bucket, wildly different iteration counts: ONE
+        compile.  The while trip count is a runtime property, not a
+        bucket-key component."""
+        def f(x):
+            def cond(c):
+                return c[1] < x[0, 0]
+
+            def body(c):
+                return (c[0] + 1, c[1] * 2.0)
+
+            return lax.while_loop(cond, body,
+                                  (jnp.int32(0), jnp.float32(1.0)))[0]
+
+        cf = _compile(f)
+        counts = set()
+        for thresh in (1.5, 100.0, 1e6):
+            x = np.ones((9, 4), np.float32)
+            x[0, 0] = thresh
+            counts.add(int(cf(x)))
+        assert len(counts) == 3       # genuinely different trip counts
+        assert cf.n_compiles == 1     # one entry bucket -> one compile
+
+
+# ----------------------------------------------------------------- scan --
+
+
+def scan_carry_fn(x):
+    """Iteration-count-sensitive carry (c doubles every step): padded
+    extra iterations corrupt it unless the region masks the trip count."""
+    def body(c, xi):
+        return c * 2.0 + xi.sum(), c
+
+    c, ys = lax.scan(body, jnp.float32(1.0), x)
+    return c
+
+
+def scan_ys_fn(x):
+    def body(c, xi):
+        return c + 1.0, xi * c
+
+    c, ys = lax.scan(body, jnp.float32(1.0), x)
+    return ys
+
+
+class TestScanDifferential:
+    def test_carry_exact_under_padding_dhlo(self):
+        """S=13 in a 16-bucket: 3 padded trips would scale the carry by
+        2**3 without the index guard.  Must be exact on the dhlo path."""
+        cf = _compile(scan_carry_fn)
+        for s in (5, 13, 16, 21, 37):
+            _check(cf, scan_carry_fn, _x(s), "dhlo")
+
+    def test_carry_parity_jit_pad_neutral(self):
+        """The jit pipeline replays the function on zero-padded inputs, so
+        its differential check uses a pad-neutral carry (c + xi.sum())."""
+        def f(x):
+            def body(c, xi):
+                return c + xi.sum(), c
+
+            return lax.scan(body, jnp.float32(0.0), x)[0]
+
+        cf = _compile(f, pipeline="jit")
+        for s in (5, 13, 37):
+            _check(cf, f, _x(s), "jit")
+
+    @pytest.mark.parametrize("pipeline", PIPELINES)
+    def test_ys_outer_dim_recovered(self, pipeline):
+        cf = _compile(scan_ys_fn, pipeline=pipeline)
+        for s in (7, 13, 33):
+            _check(cf, scan_ys_fn, _x(s), pipeline)
+
+    def test_reverse_scan_parity(self):
+        def f(x):
+            def body(c, xi):
+                return c * 2.0 + xi.sum(), c + xi[0]
+
+            return lax.scan(body, jnp.float32(1.0), x, reverse=True)
+
+        cf = _compile(f)
+        for s in (5, 16, 29):
+            _check(cf, f, _x(s), "dhlo")
+
+    def test_compile_count_is_O_buckets(self):
+        cf = _compile(scan_ys_fn)
+        buckets = set()
+        for s in (3, 5, 9, 13, 16, 19, 30, 31, 33, 50):
+            cf(_x(s))
+            buckets.add(16 if s <= 16 else (32 if s <= 32 else 64))
+        assert cf.n_compiles == len(buckets)
+
+
+# ----------------------------------------------------------------- cond --
+
+
+def cond_fn(x):
+    return lax.cond(x.sum() > 0.0,
+                    lambda a: a * 2.0,
+                    lambda a: a - 1.0, x)
+
+
+class TestCondDifferential:
+    @pytest.mark.parametrize("pipeline", PIPELINES)
+    def test_both_branches_both_buckets(self, pipeline):
+        cf = _compile(cond_fn, pipeline=pipeline)
+        for s in (9, 40):
+            pos = np.abs(_x(s)) + 0.1
+            _check(cf, cond_fn, pos, pipeline)            # true branch
+            _check(cf, cond_fn, -pos, pipeline)           # false branch
+        assert cf.n_compiles == 2  # branch taken is never a bucket key
+
+
+# --------------------------------------------------------------- nested --
+
+
+def nested_fn(x):
+    """A while loop inside every scan iteration."""
+    def body(c, xi):
+        def wcond(s):
+            return s[0] < 3
+
+        def wbody(s):
+            return (s[0] + 1, s[1] + xi.sum())
+
+        _, acc = lax.while_loop(wcond, wbody, (jnp.int32(0), c))
+        return acc, acc
+
+    c, ys = lax.scan(body, jnp.float32(0.0), x)
+    return ys
+
+
+class TestNestedRegions:
+    @pytest.mark.parametrize("pipeline", PIPELINES)
+    def test_while_inside_scan(self, pipeline):
+        cf = _compile(nested_fn, pipeline=pipeline)
+        for s in (6, 13, 37):
+            _check(cf, nested_fn, _x(s), pipeline)
+        assert cf.n_compiles == 2
+
+
+# ---------------------------------------------------- execution surfaces --
+
+
+class TestExecutionSurfaces:
+    def test_vm_executes_region_ops(self):
+        """The NimbleVM baseline interprets region ops through the same
+        emit_region_op as codegen (exact shapes, no masking needed)."""
+        cf = _compile(scan_carry_fn)
+        x = _x(11)
+        cf(x)  # force lowering
+        vm = NimbleVM(cf.lower().graph, sync_per_op=False)
+        (got,) = vm(x)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(scan_carry_fn(jnp.asarray(x))),
+            rtol=1e-5)
+
+    def test_dispatch_source_names_regions(self):
+        """The generated dispatch advertises its region ops and the
+        bucket-on-entry policy — the artifact is self-describing."""
+        cf = _compile(nested_fn)
+        cf(_x(5))
+        src = cf.dispatch_source
+        assert "region ops" in src
+        assert "d.scan(body=" in src
+        assert "entry shapes only" in src
+
+    def test_region_attrs_fingerprint_is_shape_free(self):
+        """Two lowerings of the same control-flow function share one
+        shape-free fingerprint (bucketed artifacts are reusable)."""
+        a = _compile(scan_ys_fn)
+        b = _compile(scan_ys_fn)
+        a(_x(5)), b(_x(20))
+        assert a.lower().graph.fingerprint() == b.lower().graph.fingerprint()
+
+
+# ------------------------------------------------------- carry widening --
+
+
+class TestCarryWidening:
+    def _store(self):
+        return ShapeConstraintStore()
+
+    def test_identity_rewrite_unifies_without_widening(self):
+        """(S-1)+1 is provably S at two evaluation points: the carry dim
+        unifies with the entry dim, no fresh symbol."""
+        store = self._store()
+        S = fresh_symdim("S", 37)
+        t1 = fresh_symdim("S-1", 36)
+        t2 = fresh_symdim("(S-1)+1", 37)
+        de = {t1.uid: ("affine", S, 1, -1), t2.uid: ("affine", t1, 1, 1)}
+        out = carry_fixed_point(store, de, (S, 4), (t2, 4))
+        assert out == (S, 4)
+        assert store.dims_equal(S, t2)
+
+    def test_varying_dim_with_cap_widens_to_bounded_symbol(self):
+        store = self._store()
+        S = fresh_symdim("S", 41)
+        g = fresh_symdim("S+1", 42)
+        de = {g.uid: ("affine", S, 1, 1)}
+        out = carry_fixed_point(store, de, (S, 4), (g, 4),
+                                bounds={"S": 64})
+        w = out[0]
+        assert w.uid not in (S.uid, g.uid)   # fresh symbol
+        assert store.dim_bound(w) == 64      # carries the declared cap
+        # both the entry and the out dim unified into the widened symbol
+        assert store.dims_equal(S, w) and store.dims_equal(g, w)
+
+    def test_varying_dim_without_cap_raises(self):
+        store = self._store()
+        S = fresh_symdim("S", 43)
+        g = fresh_symdim("S+1", 44)
+        de = {g.uid: ("affine", S, 1, 1)}
+        with pytest.raises(ConstraintViolation,
+                           match="changes across loop iterations"):
+            carry_fixed_point(store, de, (S, 4), (g, 4))
+
+    def test_rank_mismatch_raises(self):
+        store = self._store()
+        S = fresh_symdim("S", 47)
+        with pytest.raises(ConstraintViolation):
+            carry_fixed_point(store, {}, (S, 4), (S,))
+
+    def test_concrete_mismatch_raises(self):
+        with pytest.raises(ConstraintViolation):
+            carry_fixed_point(self._store(), {}, (8, 4), (9, 4))
+
+    def test_note_dim_bound_tightest_wins_across_union(self):
+        store = self._store()
+        a = fresh_symdim("A", 37)
+        b = fresh_symdim("B", 37)
+        store.note_dim_bound(a, 128)
+        store.note_dim_bound(b, 64)
+        store.assert_dim_eq(a, b)
+        assert store.dim_bound(a) == 64 and store.dim_bound(b) == 64
+
+
+# ------------------------------------------- unsupported higher-order ops --
+
+
+class TestUnsupportedPrimitive:
+    def test_named_error_for_higher_order_primitive(self):
+        def f(x):
+            mv = lambda v: 2.0 * v
+            return lax.custom_linear_solve(mv, x.sum(axis=0),
+                                           lambda m, b: b / 2.0)
+
+        with pytest.raises(UnsupportedPrimitiveError,
+                           match="custom_linear_solve"):
+            _compile(f, spec=((Dim("S", max=32), 4),))
+
+    def test_error_is_a_not_implemented_error(self):
+        # callers that previously caught NotImplementedError keep working
+        assert issubclass(UnsupportedPrimitiveError, NotImplementedError)
+
+
+# ----------------------------------------------------- property fuzzing --
+
+
+_FUZZ_CF = {}
+
+
+def _fuzz_artifact(pipeline):
+    if pipeline not in _FUZZ_CF:
+        _FUZZ_CF[pipeline] = _compile(scan_ys_fn, pipeline=pipeline)
+    return _FUZZ_CF[pipeline]
+
+
+class TestShapeFuzz:
+    @settings(max_examples=12, deadline=None)
+    @given(s=st.integers(min_value=1, max_value=63))
+    def test_scan_parity_any_size(self, s):
+        cf = _fuzz_artifact("dhlo")
+        _check(cf, scan_ys_fn, _x(int(s)), "dhlo")
+        # pow2 policy over 1..63 -> at most 3 buckets (16/32/64)
+        assert cf.n_compiles <= 3
+
+    @settings(max_examples=8, deadline=None)
+    @given(s=st.integers(min_value=1, max_value=63))
+    def test_scan_parity_any_size_jit(self, s):
+        cf = _fuzz_artifact("jit")
+        _check(cf, scan_ys_fn, _x(int(s)), "jit")
+        assert cf.n_compiles <= 3
