@@ -74,10 +74,49 @@ def control_flow_dispatch() -> str:
     return cf.dispatch_source
 
 
+def health_report() -> str:
+    """``report()["health"]`` for a two-replica engine that survived one
+    injected transient launch fault and one replica drain (fake clock:
+    replica 1's last beat is 9 s old against a 5 s deadline)."""
+    import jax
+    import numpy as np
+
+    from disc import FaultSpec, ServeConfig, ServeEngine, faults
+    from repro.configs import get_config
+    from repro.data.pipeline import Request
+    from repro.models.registry import get_model
+
+    cfg = get_config("tinyllama_11b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_batch=1, max_seq=64, replicas=2,
+                                  heartbeat_deadline_s=5.0))
+    t = [1.0]
+    eng._clock = lambda: t[0]       # injectable clock keeps ages exact
+    for r in range(2):
+        eng.heartbeat(r)
+    rng = np.random.RandomState(0)
+    reqs = [Request(rid=i,
+                    tokens=rng.randint(0, cfg.vocab,
+                                       size=ln).astype(np.int32),
+                    max_new_tokens=3)
+            for i, ln in enumerate((6, 9))]
+    with faults.inject(FaultSpec("serve.launch", at=[0], transient=True)):
+        eng.submit(reqs)
+        for _ in range(2):
+            eng.step()              # both admitted, prefill under way
+        t[0] = 10.0
+        eng.heartbeat(0)            # replica 1 misses its deadline
+        eng.run_until_done(max_steps=200)
+    return json.dumps(eng.report()["health"], indent=2, sort_keys=True)
+
+
 SNIPPETS = {
     "memory-dispatch": memory_dispatch,
     "memory-report": memory_report,
     "control-flow-dispatch": control_flow_dispatch,
+    "health-report": health_report,
 }
 
 

@@ -16,6 +16,10 @@
 #   scripts/check.sh --ctrl     # differential control-flow suite (while/
 #                               # scan/cond region ops, both pipelines) +
 #                               # single-artifact decode benchmark smoke
+#   scripts/check.sh --ft       # fault-tolerance: differential fault-
+#                               # injection suite (taxonomy, retry ladders,
+#                               # deadlines, replica drain) + a seeded
+#                               # chaos pass of the serve benchmark
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -43,6 +47,12 @@ fi
 if [[ "$MODE" == "--ctrl" ]]; then
     python -m pytest tests/test_control_flow.py -q
     python -m benchmarks.bench_control_flow --smoke
+    exit 0
+fi
+
+if [[ "$MODE" == "--ft" ]]; then
+    python -m pytest tests/test_faults.py -q
+    python -m benchmarks.bench_serve --smoke --chaos
     exit 0
 fi
 

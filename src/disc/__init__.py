@@ -14,10 +14,18 @@ from repro.api import (  # noqa: F401
     Compiled,
     CompiledFunction,
     CompileCache,
+    CompileError,
     CompileOptions,
+    DeadlineExceeded,
     Dim,
+    DiscError,
     EXACT,
+    FaultInjector,
+    FaultSpec,
+    LaunchError,
     Lowered,
+    PoolExhausted,
+    RetryPolicy,
     NimbleVM,
     POW2,
     ShardingProfile,
@@ -25,6 +33,7 @@ from repro.api import (  # noqa: F401
     UnknownBackendError,
     bridge,
     compile,
+    faults,
     get_backend,
     get_mesh,
     get_profile,

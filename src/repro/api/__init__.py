@@ -25,7 +25,17 @@ internals.
 """
 from ..core.bucketing import BucketPolicy, EXACT, POW2, pow2_bucket  # noqa: F401
 from ..core.cache import CompileCache, CacheStats  # noqa: F401
+from ..errors import (  # noqa: F401
+    CompileError,
+    DeadlineExceeded,
+    DiscError,
+    LaunchError,
+    PoolExhausted,
+    RetryPolicy,
+)
 from ..core.vm import NimbleVM  # noqa: F401
+from ..ft import faults  # noqa: F401
+from ..ft.faults import FaultInjector, FaultSpec  # noqa: F401
 from ..dist import (  # noqa: F401
     ShardingProfile, get_mesh, get_profile, list_profiles, make_mesh,
     use_mesh,
@@ -52,6 +62,10 @@ __all__ = [
     # bucketing / caching
     "BucketPolicy", "POW2", "EXACT", "pow2_bucket", "CompileCache",
     "CacheStats",
+    # error taxonomy + fault injection (robustness plane)
+    "DiscError", "CompileError", "LaunchError", "PoolExhausted",
+    "DeadlineExceeded", "RetryPolicy", "faults", "FaultSpec",
+    "FaultInjector",
     # SPMD / distribution
     "ShardingProfile", "get_profile", "list_profiles", "make_mesh",
     "use_mesh", "get_mesh",

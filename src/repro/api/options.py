@@ -126,6 +126,12 @@ class CompileOptions:
     * ``cache``                — share a :class:`CompileCache` between
       several compiled artifacts (entries are keyed by per-artifact
       fingerprint and never collide)
+    * ``fallback_backend``     — degradation ladder (robustness plane):
+      the backend new compiles demote to once the configured backend's
+      cluster kernels cross ``backend_demotion_strikes`` failed runs
+      between them (``None`` disables demotion).  Individual failed
+      kernels always fall back per-op and demote themselves after
+      ``ClusterKernel.demote_after`` strikes regardless
     * ``name``                 — artifact name for diagnostics
     """
 
@@ -141,6 +147,8 @@ class CompileOptions:
     mesh: Optional[Any] = None
     sharding_profile: Optional[Any] = None   # name or ShardingProfile
     cache: Optional[CompileCache] = None
+    fallback_backend: str = "xla"
+    backend_demotion_strikes: Optional[int] = 8
     name: str = "disc"
 
     def __post_init__(self):

@@ -43,6 +43,7 @@ import numpy as np
 
 from ..core.bucketing import BucketPolicy
 from ..core.cache import CompileCache
+from ..errors import CONTROL_EXCEPTIONS, CompileError, classify_transient
 from ..core.codegen import dyn_symbols
 from ..core.dispatcher import dhlo_lens, generate_dispatch, jit_lens
 from ..core.symshape import SymDim
@@ -462,7 +463,27 @@ class Compiled:
         return mem
 
     # ------------------------------------------------- device compilation --
+    def _maybe_demote_backend(self) -> None:
+        """Degradation ladder, backend rung: when this backend's cluster
+        kernels have accumulated ``backend_demotion_strikes`` failed runs
+        between them, new bucket/exact compiles build through the
+        fallback backend (``xla``) instead — already-compiled entries
+        keep serving (their clusters already fell back per-op)."""
+        strikes_cap = self.options.backend_demotion_strikes
+        kernels = self.backend.cluster_kernels
+        if (strikes_cap is None or not kernels
+                or self.backend.name == self.options.fallback_backend):
+            return
+        total = sum(k.strikes for k in kernels.values())
+        if total >= strikes_cap:
+            from ..core.codegen import KERNEL_DEMOTIONS
+            KERNEL_DEMOTIONS.append(
+                f"backend:{self.backend.name}->"
+                f"{self.options.fallback_backend} after {total} strikes")
+            self.backend = get_backend(self.options.fallback_backend)
+
     def _compile_bucket(self, key: Tuple[int, ...]):
+        self._maybe_demote_backend()
         low = self.lowered
         padded = {s.uid: int(k) for s, k in zip(low.syms, key)}
         self._bucket_compiles += 1
@@ -503,6 +524,7 @@ class Compiled:
         # or promote-on-change purges it — its compiled executable is
         # actually freed, instead of living on inside a shared wrapper's
         # trace cache
+        self._maybe_demote_backend()
         self._exact_compiles += 1
         return self.backend.build_exact(self.lowered.graph,
                                         self.lowered.plan)
@@ -656,18 +678,28 @@ class CompiledFunction:
         self._compiled = None
         try:
             compiled = self._ensure()
-        except Exception as e:
-            # roll back: the pre-promotion artifact stays valid for calls
-            # that respect the original ties
+        except CONTROL_EXCEPTIONS:
+            # never swallow control flow — but still roll back so the
+            # pre-promotion artifact survives an interrupt mid-re-lower
             self._specs, self.options, self._lowered, self._compiled = \
                 snapshot
-            raise ValueError(
+            raise
+        except Exception as e:
+            # roll back: the pre-promotion artifact stays valid for calls
+            # that respect the original ties.  Classify before wrapping
+            # (a transient backend OOM mid-re-lower is retryable; a
+            # genuine equality requirement is not) and chain the original
+            # error class into the raised CompileError.
+            self._specs, self.options, self._lowered, self._compiled = \
+                snapshot
+            raise CompileError(
                 f"promote-on-change failed for {self.options.name!r}: a "
                 f"call broke a dim tie inferred from the first call, but "
                 f"re-lowering with independent dims "
                 f"{[s.shape for s in split if s is not None]} did not "
                 f"succeed — the function itself may require the equality "
-                f"({e})") from e
+                f"({type(e).__name__}: {e})",
+                transient=classify_transient(e)) from e
         prev.cache.stats.promotions += 1
         # the superseded artifact's entries are unreachable — free the
         # executables they pin.  This must happen before the refined

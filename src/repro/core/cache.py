@@ -15,7 +15,11 @@ from __future__ import annotations
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Set, Tuple
+
+from ..errors import (CONTROL_EXCEPTIONS, DEFAULT_RETRY, RetryPolicy,
+                      wrap_compile_error)
+from ..ft import faults
 
 __all__ = ["CompileCache", "CacheStats"]
 
@@ -30,6 +34,11 @@ class CacheStats:
     # promote-on-change re-lowerings: a call broke a dim tie inferred from
     # the first call, so the artifact was re-lowered with independent dims
     promotions: int = 0
+    # fault plane: transient compile failures retried with backoff, and
+    # §4.4 exact escalations whose compile failed permanently (the exact
+    # sig is pinned to the padded bucket path thereafter)
+    retries: int = 0
+    escalation_failures: int = 0
 
     @property
     def compiles(self) -> int:
@@ -44,6 +53,8 @@ class CacheStats:
             "escalations": self.escalations,
             "evictions": self.evictions,
             "promotions": self.promotions,
+            "retries": self.retries,
+            "escalation_failures": self.escalation_failures,
         }
 
 
@@ -55,7 +66,37 @@ class CompileCache:
         self.escalation_threshold = escalation_threshold
         self._entries: "OrderedDict[Tuple, Any]" = OrderedDict()
         self._exact_hits: Dict[Tuple, int] = {}
+        # exact signatures whose escalation compile failed permanently:
+        # should_escalate() answers False for them forever after, so the
+        # dispatch keeps serving the padded bucket artifact instead of
+        # re-attempting a compile that cannot succeed on every call
+        self._failed_exact: Set[Tuple] = set()
+        self.retry_policy: RetryPolicy = DEFAULT_RETRY
         self.stats = CacheStats()
+
+    def _compile_with_retry(self, compile_fn: Callable[[], Any],
+                            what: str, site: str) -> Any:
+        """Run ``compile_fn`` under the taxonomy: raw errors are wrapped
+        into :class:`~repro.errors.CompileError` (classified transient or
+        permanent), transient failures retry with capped exponential
+        backoff, and the named fault site fires first when an injector is
+        installed."""
+        attempt = 0
+        while True:
+            try:
+                if faults.ACTIVE is not None:
+                    faults.ACTIVE.check(site, key=what)
+                return compile_fn()
+            except CONTROL_EXCEPTIONS:
+                raise
+            except Exception as e:  # noqa: BLE001 — classified below
+                err = wrap_compile_error(e, what)
+                if not err.transient \
+                        or attempt >= self.retry_policy.max_retries:
+                    raise err from e
+                self.stats.retries += 1
+                time.sleep(self.retry_policy.delay(attempt))
+                attempt += 1
 
     # --------------------------------------------------------- bucketed --
     def get_or_compile(self, bucket_sig: Tuple, compile_fn: Callable[[], Any],
@@ -75,8 +116,16 @@ class CompileCache:
             return entry
         self.stats.misses += 1
         t0 = time.perf_counter()
-        entry = compile_fn()
-        self.stats.compile_seconds += time.perf_counter() - t0
+        try:
+            # the fault-site key carries the artifact fingerprint so an
+            # injector can target one artifact (match="prefill") of a
+            # shared cache
+            entry = self._compile_with_retry(
+                compile_fn,
+                f"{fingerprint or self.fingerprint} bucket {bucket_sig}",
+                "compile.bucket")
+        finally:
+            self.stats.compile_seconds += time.perf_counter() - t0
         self._entries[key] = entry
         self._evict()
         return entry
@@ -90,9 +139,19 @@ class CompileCache:
         if threshold is None:
             return False
         key = (fingerprint or self.fingerprint, exact_sig)
+        if key in self._failed_exact:
+            return False
         n = self._exact_hits.get(key, 0) + 1
         self._exact_hits[key] = n
         return n >= threshold
+
+    def note_escalation_failure(self, exact_sig: Tuple,
+                                fingerprint: Optional[str] = None) -> None:
+        """Record a permanently failed §4.4 escalation compile: the exact
+        signature is pinned to the padded bucket path (``should_escalate``
+        answers False for it from now on)."""
+        self._failed_exact.add((fingerprint or self.fingerprint, exact_sig))
+        self.stats.escalation_failures += 1
 
     def get_or_compile_exact(self, exact_sig: Tuple,
                              compile_fn: Callable[[], Any],
@@ -106,8 +165,13 @@ class CompileCache:
         self.stats.misses += 1
         self.stats.escalations += 1
         t0 = time.perf_counter()
-        entry = compile_fn()
-        self.stats.compile_seconds += time.perf_counter() - t0
+        try:
+            entry = self._compile_with_retry(
+                compile_fn,
+                f"{fingerprint or self.fingerprint} exact {exact_sig}",
+                "compile.exact")
+        finally:
+            self.stats.compile_seconds += time.perf_counter() - t0
         self._entries[key] = entry
         self._evict()
         return entry
@@ -127,6 +191,8 @@ class CompileCache:
             del self._entries[k]
         self._exact_hits = {k: v for k, v in self._exact_hits.items()
                             if k[0] != fingerprint}
+        self._failed_exact = {k for k in self._failed_exact
+                              if k[0] != fingerprint}
         return len(dead)
 
     def _evict(self) -> None:

@@ -57,6 +57,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..errors import CONTROL_EXCEPTIONS
+from ..ft import faults
 from .dhlo import DGraph, DOp, DValue
 from .emit import emit_op
 from .fusion import REDUCE_ROOT_KINDS, Cluster, cluster_live_outs
@@ -471,6 +473,12 @@ def _to_blocks(tensors: Sequence[Any], padded_ref: Tuple[int, ...]):
             else jnp.broadcast_to(t, padded_ref) for t in tensors]
 
 
+#: process-lifetime demotion journal: one entry per kernel instance that
+#: crossed its strike budget (``report()["health"]`` and the serve stats
+#: read its length) — append-only, never reset
+KERNEL_DEMOTIONS: List[str] = []
+
+
 class ClusterKernel:
     """One fused-kernel template implementation for a backend.
 
@@ -481,13 +489,34 @@ class ClusterKernel:
     kernel (one per compiled bucket signature, not per call) — they let
     tests and benchmarks prove a cluster actually executed through the
     fused path instead of silently falling back to per-op XLA.
+
+    Degradation ladder: every failed :meth:`run` is a **strike**; after
+    ``demote_after`` strikes the instance is *demoted* — clusters skip it
+    and emit per-op (the always-available library path, Nimble-style)
+    without re-attempting a kernel that keeps failing.  Demotions land in
+    :data:`KERNEL_DEMOTIONS`.
     """
 
     template: str = ""
+    #: strikes before the instance stops being tried (None = never demote)
+    demote_after: Optional[int] = 3
 
     def __init__(self) -> None:
         self.runs = 0
         self.fallbacks = 0
+        self.strikes = 0
+        self.demoted = False
+
+    def strike(self) -> None:
+        """Record one failed run; demote at the budget."""
+        self.strikes += 1
+        self.fallbacks += 1
+        if (not self.demoted and self.demote_after is not None
+                and self.strikes >= self.demote_after):
+            self.demoted = True
+            KERNEL_DEMOTIONS.append(
+                f"{type(self).__name__}[{self.template}] after "
+                f"{self.strikes} strikes")
 
     def run(self, graph: DGraph, cluster: Cluster, read, env: "_ShapeEnv",
             masked: bool) -> Dict[int, Any]:
@@ -692,16 +721,23 @@ def _run_graph(graph: DGraph, arrays, env: _ShapeEnv, masked: bool,
     if kernels and plan is not None:
         for cluster in plan.clusters:
             kern = kernels.get(cluster.template) if cluster.template else None
+            if kern is not None and kern.demoted:
+                kern = None  # struck out: straight to the per-op path
             if kern is not None:
                 try:
+                    if faults.ACTIVE is not None:
+                        faults.ACTIVE.check("kernel.cluster",
+                                            key=cluster.template)
                     vals.update(kern.run(graph, cluster, read, env, masked))
                     kern.runs += 1
                     for op in cluster.ops:
                         for vid in frees_by_oid.get(op.oid, ()):
                             vals.pop(vid, None)
                     continue
+                except CONTROL_EXCEPTIONS:
+                    raise
                 except Exception:
-                    kern.fallbacks += 1  # conservative fallback to XLA
+                    kern.strike()  # conservative fallback to XLA
             for op in cluster.ops:
                 run_op(op)
     else:

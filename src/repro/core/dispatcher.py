@@ -45,6 +45,7 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
 
 import numpy as np
 
+from ..errors import CompileError
 from ..frontends.jaxpr_frontend import TreeSpec, eval_dim
 from .bucketing import BucketPolicy
 from .cache import CompileCache
@@ -500,16 +501,28 @@ def generate_dispatch(
 
     # --- §4.4 static escalation: hot exact signatures go unpadded ------
     if escalation_threshold is not None:
+        # degradation ladder: a failed escalation compile falls back to
+        # the padded bucket artifact below — permanent failures pin the
+        # exact sig (should_escalate answers False thereafter), transient
+        # ones may escalate again on a later call
         w("    if _cache.should_escalate(exact, _fp, _esc):")
-        w("        fn = _cache.get_or_compile_exact(exact, _compile_exact, _fp)")
+        w("        try:")
+        w("            fn = _cache.get_or_compile_exact("
+          "exact, _compile_exact, _fp)")
+        w("        except _CompileError as _ce:")
+        w("            fn = None")
+        w("            if not _ce.transient:")
+        w("                _cache.note_escalation_failure(exact, _fp)")
         # under a mesh, exact shapes need not divide the axes: re-fit
         # the planned shardings to the concrete shapes per arg
         call_arrays = "arrays" if sharding is None else "_put_exact(arrays)"
+        w("        if fn is not None:")
         if lens.outputs is None:
-            w(f"        return fn(*{call_arrays})")
+            w(f"            return fn(*{call_arrays})")
         else:
-            w(f"        return list(fn(*{call_arrays}))")
+            w(f"            return list(fn(*{call_arrays}))")
         ns["_compile_exact"] = compile_exact
+        ns["_CompileError"] = CompileError
         if sharding is not None:
             ns["_put_exact"] = sharding.put_exact
 

@@ -81,6 +81,10 @@ class Request:
     # seconds) into a synthetic trace (0.0 = available immediately)
     priority: int = 0
     arrival: float = 0.0
+    # completion deadline in seconds from submission (None = no deadline):
+    # the serve engine checks it at admission and between steps, retiring
+    # expired requests FAILED with a DeadlineExceeded reason
+    deadline_s: Optional[float] = None
 
     def __post_init__(self) -> None:
         if self.rid is None:

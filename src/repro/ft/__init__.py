@@ -1,1 +1,3 @@
+from . import faults  # noqa: F401
+from .faults import FaultInjector, FaultSpec  # noqa: F401
 from .supervisor import Supervisor, HeartbeatMonitor, ElasticPlan  # noqa: F401

@@ -29,6 +29,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import faults
+
 __all__ = ["HeartbeatMonitor", "ElasticPlan", "Supervisor"]
 
 
@@ -42,6 +44,9 @@ class HeartbeatMonitor:
 
     def beat(self, host: str, *, t: Optional[float] = None,
              step_seconds: Optional[float] = None) -> None:
+        if faults.ACTIVE is not None and faults.ACTIVE.suppress(
+                "ft.heartbeat", key=host):
+            return          # injected heartbeat loss: the beat is dropped
         self.last_seen[host] = time.time() if t is None else t
         if step_seconds is not None:
             window = self.step_times[host]

@@ -94,8 +94,13 @@ from ..api.options import CompileOptions, Dim, TreeSpec
 from ..api.staged import compile as disc_compile
 from ..core.bucketing import BucketPolicy, POW2
 from ..core.cache import CompileCache
+from ..core.codegen import KERNEL_DEMOTIONS
 from ..data.pipeline import Request
+from ..errors import (CONTROL_EXCEPTIONS, DEFAULT_RETRY, DiscError,
+                      RetryPolicy, wrap_launch_error)
 from ..frontends.jaxpr_frontend import ArgSpec
+from ..ft import faults
+from ..ft.supervisor import HeartbeatMonitor
 from ..models.registry import (Model, cache_batch_axis, replay_prefill,
                                row_keep_mask)
 from .paging import BlockAllocator, PagedKVPool, blocks_for, pick_victim
@@ -156,6 +161,22 @@ STATS_KEYS: Dict[str, str] = {
                    "requests_completed, occupied_slots (slot-range "
                    "[r*max_batch, (r+1)*max_batch) counters under "
                    "least-loaded routing)",
+    "failed_requests": "requests retired FAILED (permanent launch "
+                       "failure, recompute budget exhausted under pool "
+                       "pressure, deadline expiry) — reasons in "
+                       "``engine.failed[rid]``",
+    "retries": "transient launch retries (capped exponential backoff); "
+               "transient *compile* retries live in the compile cache's "
+               "stats",
+    "kernel_demotions": "cluster-kernel / backend demotions journaled "
+                        "process-wide during this engine's run (length "
+                        "delta of repro.core.codegen.KERNEL_DEMOTIONS)",
+    "deadline_expirations": "requests failed because Request.deadline_s "
+                            "passed (checked at admission and between "
+                            "steps)",
+    "replica_drains": "replicas drained after missing the heartbeat "
+                      "deadline (slots preempted back to the queue, "
+                      "traffic continues on survivors)",
 }
 
 
@@ -203,6 +224,20 @@ class ServeConfig:
     speculative: Optional[Any] = None
     # max draft tokens per slot per verify launch
     speculative_k: int = 4
+    # --- fault-tolerance plane -----------------------------------------
+    # bounded recompute: a request preempted (and requeued for greedy
+    # recompute) more than this many times is retired FAILED with a
+    # PoolExhausted reason instead of spinning in the preemption loop
+    # forever (None = unbounded, the pre-taxonomy livelock behavior)
+    max_recomputes: Optional[int] = 50
+    # transient launch failures retry under this policy before the launch
+    # group is failed (None = the shared DEFAULT_RETRY)
+    launch_retry: Optional[RetryPolicy] = None
+    # replica health: a replica whose last heartbeat (engine.heartbeat(r))
+    # is older than this is drained — its slots preempt back to the queue
+    # and admission routes around it until a beat restores it.  None
+    # disables monitoring (no drain, no heartbeats required)
+    heartbeat_deadline_s: Optional[float] = None
 
 
 @dataclass
@@ -289,6 +324,23 @@ class ServeEngine:
         self.queue: List[Request] = []
         self.done: Dict[int, List[int]] = {}
         self.rejected: List[int] = []   # rids refused at submit()
+        # fault plane: rid -> failure reason for requests retired FAILED
+        # (permanent launch error, PoolExhausted, DeadlineExceeded)
+        self.failed: Dict[int, str] = {}
+        self._recomputes: Dict[int, int] = {}   # rid -> preempt count
+        self._deadlines: Dict[int, float] = {}  # rid -> absolute deadline
+        self._clock = time.monotonic            # injectable (tests/docs)
+        self._retry = scfg.launch_retry or DEFAULT_RETRY
+        self._kdem0 = len(KERNEL_DEMOTIONS)
+        self._replica_alive = [True] * scfg.replicas
+        self.monitor: Optional[HeartbeatMonitor] = None
+        if scfg.heartbeat_deadline_s is not None:
+            self.monitor = HeartbeatMonitor(
+                [f"replica{r}" for r in range(scfg.replicas)],
+                deadline_s=scfg.heartbeat_deadline_s)
+            now = self._clock()
+            for r in range(scfg.replicas):
+                self.monitor.beat(f"replica{r}", t=now)
         self._admit_order = get_admission_policy(scfg.admission)
         self._prefill_impl = (model.prefill if scfg.prefill_mode == "batched"
                               else replay_prefill(model.decode_step))
@@ -563,6 +615,10 @@ class ServeEngine:
                     dropped.append(r.rid)
                     continue
             accepted.append(r)
+            if r.deadline_s is not None and r.rid not in self._deadlines:
+                # absolute deadline fixed at first submission; a
+                # preemption requeue of the same rid keeps the original
+                self._deadlines[r.rid] = self._clock() + r.deadline_s
         self.stats["rejected_requests"] += len(dropped)
         self.rejected.extend(dropped)
         self.queue.extend(accepted)
@@ -586,8 +642,10 @@ class ServeEngine:
         Blocks free up as slots retire, so blocked admission is
         pressure, not deadlock."""
         mb = self.scfg.max_batch
+        # a drained replica offers no slots until a heartbeat restores it
         free_by_rep = [[i for i in range(r * mb, (r + 1) * mb)
                         if self.slots[i] is None]
+                       if self._replica_alive[r] else []
                        for r in range(self.scfg.replicas)]
         n_free = sum(len(f) for f in free_by_rep)
         if not n_free or not self.queue:
@@ -626,16 +684,133 @@ class ServeEngine:
             self._rep_counters[rep]["admitted"] += 1
         self.queue = [r for r in self.queue if r.rid not in taken]
 
-    def _preempt(self, i: int) -> None:
-        """Evict slot ``i`` on pool pressure: release its blocks and
-        requeue the request with prompt+generated as the new prompt.
-        Greedy decoding makes recompute exact — the resumed request
-        continues with precisely the tokens it would have produced —
-        so preemption trades recompute time for memory, never output."""
+    # -------------------------------------------------------- fault plane --
+    def _forget(self, rid: int) -> None:
+        """Drop a retired rid's scheduler bookkeeping."""
+        self._carry.pop(rid, None)
+        self._recomputes.pop(rid, None)
+        self._deadlines.pop(rid, None)
+
+    def _fail_request(self, rid: int, reason: str) -> None:
+        """Retire ``rid`` FAILED: recorded with its reason, counted, and
+        every bookkeeping entry dropped — the rest of the engine keeps
+        serving."""
+        self.failed[rid] = reason
+        self.stats["failed_requests"] += 1
+        self._forget(rid)
+
+    def _fail_slot(self, i: int, reason: str) -> None:
+        """Fail the request occupying slot ``i`` and free the slot."""
         slot = self.slots[i]
-        freed = self.alloc.release(i)
-        self.stats["kv_preemptions"] += 1
-        self.stats["kv_evictions"] += freed
+        if self.paged:
+            self.alloc.release(i)
+        self.slots[i] = None
+        self.lens[i] = 0
+        self._fail_request(slot.rid, reason)
+
+    def _launch(self, kind: str, fn: Callable, *args):
+        """Run one artifact launch under the taxonomy: transient failures
+        (backend RESOURCE_EXHAUSTED, injected transients) retry with
+        capped exponential backoff; a permanent failure raises a
+        classified :class:`~repro.errors.DiscError` for the caller to
+        fail exactly the requests in the launch group."""
+        attempt = 0
+        while True:
+            try:
+                if faults.ACTIVE is not None:
+                    faults.ACTIVE.check("serve.launch", key=kind)
+                return fn(*args)
+            except CONTROL_EXCEPTIONS:
+                raise
+            except DiscError as e:   # already classified (e.g. a
+                err = e              # CompileError out of dispatch)
+            except Exception as e:  # noqa: BLE001 — classified below
+                err = wrap_launch_error(e, kind)
+            if not err.transient or attempt >= self._retry.max_retries:
+                raise err
+            self.stats["retries"] += 1
+            time.sleep(self._retry.delay(attempt))
+            attempt += 1
+
+    def heartbeat(self, replica: int, *, t: Optional[float] = None) -> None:
+        """Record a liveness beat for ``replica`` (requires
+        ``ServeConfig(heartbeat_deadline_s=...)``).  A beat from a
+        drained replica restores it at the next step."""
+        if self.monitor is None:
+            raise ValueError(
+                "ServeEngine.heartbeat() needs replica health monitoring: "
+                "set ServeConfig(heartbeat_deadline_s=...)")
+        self.monitor.beat(f"replica{replica}",
+                          t=self._clock() if t is None else t)
+
+    def _check_replicas(self) -> None:
+        """Drain replicas silent past the heartbeat deadline — their
+        slots preempt back to the queue (existing preemption machinery,
+        no recompute-budget penalty) and admission routes around them —
+        and restore drained replicas that have beaten again."""
+        dead = set(self.monitor.dead_hosts(now=self._clock()))
+        mb = self.scfg.max_batch
+        for r in range(self.scfg.replicas):
+            is_dead = f"replica{r}" in dead
+            if is_dead and self._replica_alive[r]:
+                self._replica_alive[r] = False
+                self.stats["replica_drains"] += 1
+                for i in range(r * mb, (r + 1) * mb):
+                    if self.slots[i] is not None:
+                        self._preempt(i, drain=True)
+            elif not is_dead and not self._replica_alive[r]:
+                self._replica_alive[r] = True   # restored on recovery
+
+    def _check_deadlines(self) -> None:
+        """Fail queued and in-slot requests whose deadline passed."""
+        if not self._deadlines:
+            return
+        now = self._clock()
+        expired = {rid for rid, d in self._deadlines.items() if now > d}
+        if not expired:
+            return
+        for i, s in enumerate(self.slots):
+            if s is not None and s.rid in expired:
+                self.stats["deadline_expirations"] += 1
+                self._fail_slot(i, f"DeadlineExceeded: deadline_s passed "
+                                   f"after {len(s.generated)} tokens")
+        still = [r for r in self.queue if r.rid in expired]
+        for r in still:
+            self.stats["deadline_expirations"] += 1
+            self._fail_request(r.rid, "DeadlineExceeded: deadline_s "
+                                      "passed before completion")
+        self.queue = [r for r in self.queue if r.rid not in expired]
+
+    def _preempt(self, i: int, *, drain: bool = False) -> None:
+        """Evict slot ``i`` on pool pressure (or replica drain): release
+        its blocks and requeue the request with prompt+generated as the
+        new prompt.  Greedy decoding makes recompute exact — the resumed
+        request continues with precisely the tokens it would have
+        produced — so preemption trades recompute time for memory, never
+        output.
+
+        Pool-pressure preemptions are bounded by
+        ``ServeConfig(max_recomputes=...)``: a request past its budget is
+        retired FAILED (PoolExhausted) instead of spinning forever.
+        Drain preemptions (replica fault, not memory pressure) don't
+        consume the budget."""
+        slot = self.slots[i]
+        if not drain and self.scfg.max_recomputes is not None:
+            n = self._recomputes.get(slot.rid, 0) + 1
+            if n > self.scfg.max_recomputes:
+                if self.paged:
+                    self.stats["kv_evictions"] += len(self.alloc.owned(i))
+                self._fail_slot(
+                    i, f"PoolExhausted: preempted {n - 1} times under "
+                       f"pool pressure (max_recomputes="
+                       f"{self.scfg.max_recomputes})")
+                return
+            self._recomputes[slot.rid] = n
+        if self.paged:
+            freed = self.alloc.release(i)
+            if not drain:
+                self.stats["kv_preemptions"] += 1
+                self.stats["kv_evictions"] += freed
         toks = slot.tokens
         if slot.generated:
             toks = np.concatenate(
@@ -686,8 +861,10 @@ class ServeEngine:
         if self.paged:
             # claim blocks for every member's chunk before building the
             # launch; a member that cannot allocate even after preempting
-            # every unprotected victim waits for a later step (committed
-            # members are protected, so at least one always launches)
+            # every unprotected victim sheds itself back to the queue
+            # (admission re-gates it on pool headroom; the bounded
+            # recompute budget turns a permanently starved slot into a
+            # PoolExhausted failure instead of a livelock)
             kept = []
             for i, cl in members:
                 s = self.slots[i]
@@ -696,6 +873,8 @@ class ServeEngine:
                 protect = {j for j, _ in kept} | {i}
                 if self._ensure_blocks(i, s.pos + cl, protect):
                     kept.append((i, cl))
+                else:
+                    self._preempt(i)
             members = kept
             if not members:
                 return
@@ -711,15 +890,27 @@ class ServeEngine:
             lens[r] = cl
             offsets[r] = s.pos
 
+        try:
+            if self.paged:
+                tview = {"tables": self.alloc.table()[idx]}
+                logits, new_pool = self._launch(
+                    "prefill", self._prefill_fn, self.params,
+                    self.pool.tree, tview, tokens, lens, offsets)
+            else:
+                rows = jax.tree.map(
+                    lambda c: c[:, idx] if c.ndim > 1 else c, self.cache)
+                logits, new_rows = self._launch(
+                    "prefill", self._prefill_fn, self.params, rows, tokens,
+                    lens, offsets)
+        except DiscError as e:
+            # a failed launch fails ONLY this launch group; queued and
+            # decode-state requests are untouched
+            for i, _ in members:
+                self._fail_slot(i, f"LaunchError(prefill): {e}")
+            return
         if self.paged:
-            tview = {"tables": self.alloc.table()[idx]}
-            logits, self.pool.tree = self._prefill_fn(
-                self.params, self.pool.tree, tview, tokens, lens, offsets)
+            self.pool.tree = new_pool
         else:
-            rows = jax.tree.map(lambda c: c[:, idx] if c.ndim > 1 else c,
-                                self.cache)
-            logits, new_rows = self._prefill_fn(self.params, rows, tokens,
-                                                lens, offsets)
             self.cache = jax.tree.map(
                 lambda full, row: full.at[:, idx].set(
                     row[:, :nb].astype(full.dtype))
@@ -808,17 +999,23 @@ class ServeEngine:
         for i in active_idx:
             tokens[i, 0] = self.slots[i].generated[-1]
             active[i] = True
-        if self.paged:
-            logits, self.pool.tree = self._decode_fn(
-                self.params, self.pool.tree,
-                jnp.asarray(self.alloc.table()), jnp.asarray(tokens),
-                jnp.asarray(self.lens), jnp.asarray(active))
-        else:
-            t, l, a = self._put_args(jnp.asarray(tokens),
-                                     jnp.asarray(self.lens),
-                                     jnp.asarray(active))
-            logits, self.cache = self._decode_fn(self.params, self.cache,
-                                                 t, l, a)
+        try:
+            if self.paged:
+                logits, self.pool.tree = self._launch(
+                    "decode", self._decode_fn, self.params, self.pool.tree,
+                    jnp.asarray(self.alloc.table()), jnp.asarray(tokens),
+                    jnp.asarray(self.lens), jnp.asarray(active))
+            else:
+                t, l, a = self._put_args(jnp.asarray(tokens),
+                                         jnp.asarray(self.lens),
+                                         jnp.asarray(active))
+                logits, self.cache = self._launch(
+                    "decode", self._decode_fn, self.params, self.cache,
+                    t, l, a)
+        except DiscError as e:
+            for i in active_idx:
+                self._fail_slot(i, f"LaunchError(decode): {e}")
+            return
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
         self._mark_decode_launch()
         for i in active_idx:
@@ -874,15 +1071,21 @@ class ServeEngine:
         if not live:
             return
         fills = self.lens.copy()
-        if self.paged:
-            ids, self.pool.tree = self._verify_fn(
-                self.params, self.pool.tree,
-                jnp.asarray(self.alloc.table()), jnp.asarray(tokens),
-                jnp.asarray(dlens), jnp.asarray(fills))
-        else:
-            ids, self.cache = self._verify_fn(
-                self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(dlens), jnp.asarray(fills))
+        try:
+            if self.paged:
+                ids, self.pool.tree = self._launch(
+                    "verify", self._verify_fn, self.params, self.pool.tree,
+                    jnp.asarray(self.alloc.table()), jnp.asarray(tokens),
+                    jnp.asarray(dlens), jnp.asarray(fills))
+            else:
+                ids, self.cache = self._launch(
+                    "verify", self._verify_fn, self.params, self.cache,
+                    jnp.asarray(tokens), jnp.asarray(dlens),
+                    jnp.asarray(fills))
+        except DiscError as e:
+            for i in live:
+                self._fail_slot(i, f"LaunchError(verify): {e}")
+            return
         ids = np.asarray(ids)
         self._mark_decode_launch()
         for i in live:
@@ -917,6 +1120,7 @@ class ServeEngine:
                 or self.lens[i] >= self.scfg.max_seq - 1):
             self.done[slot.rid] = slot.generated
             self.stats["requests_completed"] += 1
+            self._forget(slot.rid)
             self._rep_counters[self._replica_of(i)][
                 "requests_completed"] += 1
             if self.paged:
@@ -930,6 +1134,9 @@ class ServeEngine:
         decode step — the ``prefill_interleave`` budget decides which when
         both kinds of work are pending."""
         t0 = time.monotonic()
+        if self.monitor is not None:
+            self._check_replicas()
+        self._check_deadlines()
         self._admit()
         has_p = any(s is not None and s.state == "prefill"
                     for s in self.slots)
@@ -957,6 +1164,38 @@ class ServeEngine:
         return self.done
 
     # ------------------------------------------------------ introspection --
+    def report(self) -> Dict[str, Any]:
+        """Engine health + stats in one structured view.
+
+        ``report()["health"]`` is the fault plane's summary: replica
+        liveness (with last-beat ages under monitoring), FAILED requests
+        with their reasons, the fault counters, compile-cache
+        retry/escalation-failure totals, and any kernel/backend
+        demotions journaled during this engine's run."""
+        now = self._clock()
+        replicas = []
+        for r, alive in enumerate(self._replica_alive):
+            entry: Dict[str, Any] = {"replica": r, "alive": bool(alive)}
+            if self.monitor is not None:
+                seen = self.monitor.last_seen[f"replica{r}"]
+                entry["last_beat_age_s"] = round(now - seen, 3)
+            replicas.append(entry)
+        cs = self.compile_cache.stats
+        health = {
+            "alive_replicas": int(sum(self._replica_alive)),
+            "replicas": replicas,
+            "failed": {rid: self.failed[rid]
+                       for rid in sorted(self.failed)},
+            "counters": {k: self.stats[k] for k in
+                         ("failed_requests", "retries", "kernel_demotions",
+                          "deadline_expirations", "replica_drains")},
+            "compile": {"retries": cs.retries,
+                        "escalation_failures": cs.escalation_failures},
+            "kernel_demotions": list(KERNEL_DEMOTIONS[self._kdem0:]),
+        }
+        return {"health": health, "stats": dict(self.stats),
+                "compiles": self.compile_counts()}
+
     def compile_counts(self) -> Dict[str, Dict[str, int]]:
         """Per-artifact compile counts (``{"bucket", "exact", "total"}``
         each) — the observable O(#buckets) contract."""
@@ -989,6 +1228,7 @@ class ServeEngine:
             for _ in range(self.scfg.replicas)]
         self._busy_s = 0.0
         self._last_decode_t = None
+        self._kdem0 = len(KERNEL_DEMOTIONS)   # demotion delta restarts
         self._refresh_stats()
 
     def _refresh_stats(self) -> None:
@@ -996,6 +1236,7 @@ class ServeEngine:
         self.stats["prefill_compiles"] = pc["total"]
         self.stats["prefill_escalations"] = pc["exact"]
         self.stats["prefill_bucket_pairs"] = len(self._bucket_pairs)
+        self.stats["kernel_demotions"] = len(KERNEL_DEMOTIONS) - self._kdem0
         occ = sum(s is not None for s in self.slots)
         self.stats["peak_active_slots"] = max(
             self.stats["peak_active_slots"], occ)

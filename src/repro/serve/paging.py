@@ -38,6 +38,7 @@ from typing import Any, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from ..ft import faults
 from ..models.layers import paged_gather, paged_scatter
 from ..models.registry import Model
 
@@ -97,6 +98,9 @@ class BlockAllocator:
             return True
         if missing > len(self._free):
             return False
+        if faults.ACTIVE is not None and faults.ACTIVE.suppress(
+                "pool.alloc", key=f"slot{slot}"):
+            return False    # injected pool pressure: allocation denied
         for _ in range(missing):
             self._owned[slot].append(self._free.pop())
         return True

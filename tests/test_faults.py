@@ -1,0 +1,582 @@
+"""Differential fault-injection suite for the robustness plane.
+
+For every named injection site (:data:`repro.ft.faults.SITES`) the serve
+engine must degrade, not die: non-faulted requests finish with tokens
+bit-identical to a fault-free run, ``run_until_done`` never raises, and
+the taxonomy counters (``failed_requests``, ``retries``,
+``deadline_expirations``, ``replica_drains``, ``kernel_demotions``)
+tick.  The compile-fault ladder is exercised on both pipelines
+(``dhlo`` + ``jit``) through ``disc.compile``, and the engine-level
+differential runs both without and with a mesh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ArgSpec, compile as disc_compile
+from repro.api.backends import _make_aot_backend, register_backend
+from repro.configs import get_config
+from repro.core import codegen
+from repro.data.pipeline import Request
+from repro.errors import (CONTROL_EXCEPTIONS, CompileError, DeadlineExceeded,
+                          DiscError, LaunchError, PoolExhausted, RetryPolicy,
+                          classify_transient, retry_call, wrap_compile_error,
+                          wrap_launch_error)
+from repro.ft import faults
+from repro.ft.faults import FaultInjector, FaultSpec
+from repro.launch.mesh import make_mesh
+from repro.models.registry import get_model
+from repro.serve.engine import STATS_KEYS, ServeConfig, ServeEngine
+
+N_DEV = len(jax.devices())
+needs2 = pytest.mark.skipif(N_DEV < 2, reason="needs >=2 devices")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinyllama_11b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(autouse=True)
+def _no_injector_leak():
+    """A test that leaves an injector installed would fault every test
+    after it; fail loudly and clean up."""
+    yield
+    leaked = faults.ACTIVE is not None
+    faults.clear()
+    assert not leaked, "test left a FaultInjector installed"
+
+
+def _requests(vocab, lens, max_new=5, rid0=0):
+    rng = np.random.RandomState(11)
+    return [Request(rid=rid0 + i,
+                    tokens=rng.randint(0, vocab, size=ln).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i, ln in enumerate(lens)]
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_seq", 64)
+    return ServeEngine(model, params, ServeConfig(**kw))
+
+
+def _run(model, params, reqs, **kw):
+    eng = _engine(model, params, **kw)
+    eng.submit(reqs)
+    done = eng.run_until_done(max_steps=400)
+    return eng, done
+
+
+LENS = [5, 9, 12]
+
+
+# ------------------------------------------------------------- taxonomy --
+
+class TestTaxonomy:
+    def test_hierarchy_preserves_builtin_types(self):
+        # multiple inheritance keeps pre-taxonomy except/raises contracts
+        assert issubclass(CompileError, ValueError)
+        assert issubclass(LaunchError, RuntimeError)
+        assert issubclass(PoolExhausted, RuntimeError)
+        assert issubclass(DeadlineExceeded, TimeoutError)
+        for k in (CompileError, LaunchError, PoolExhausted,
+                  DeadlineExceeded):
+            assert issubclass(k, DiscError)
+
+    def test_classify_transient(self):
+        from repro.core.constraints import ConstraintViolation
+        from repro.frontends.jaxpr_frontend import UnsupportedPrimitiveError
+        assert not classify_transient(ConstraintViolation("8 % 3"))
+        assert not classify_transient(UnsupportedPrimitiveError("nope"))
+        assert not classify_transient(TypeError("bad arg"))
+        assert classify_transient(RuntimeError("RESOURCE_EXHAUSTED: hbm"))
+        assert classify_transient(MemoryError("out of memory"))
+        # an already-classified error speaks for itself
+        assert classify_transient(LaunchError("x", transient=True))
+        assert not classify_transient(CompileError("x", transient=False))
+
+    def test_wrappers_chain_and_classify(self):
+        src = RuntimeError("RESOURCE_EXHAUSTED while allocating")
+        ce = wrap_compile_error(src, "bucket (8,)")
+        assert ce.transient and ce.__cause__ is src
+        assert "bucket (8,)" in str(ce)
+        le = wrap_launch_error(ValueError("shape"), "decode")
+        assert not le.transient and isinstance(le, LaunchError)
+        # wrapping an already-wrapped error is the identity
+        assert wrap_compile_error(ce, "again") is ce
+        assert wrap_launch_error(le, "again") is le
+
+    def test_retry_call_retries_transient_only(self):
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise LaunchError("flap", transient=True)
+            return "ok"
+
+        pol = RetryPolicy(max_retries=3, backoff_s=0.0)
+        assert retry_call(flaky, policy=pol, sleep=lambda s: None) == "ok"
+        assert calls["n"] == 3
+
+        def perm():
+            raise LaunchError("dead", transient=False)
+
+        with pytest.raises(LaunchError, match="dead"):
+            retry_call(perm, policy=pol, sleep=lambda s: None)
+
+    def test_control_exceptions_never_swallowed(self):
+        def boom():
+            raise KeyboardInterrupt
+        with pytest.raises(KeyboardInterrupt):
+            retry_call(boom, policy=RetryPolicy(max_retries=5,
+                                                backoff_s=0.0),
+                       sleep=lambda s: None)
+        assert KeyboardInterrupt in CONTROL_EXCEPTIONS
+
+    def test_backoff_is_capped_exponential(self):
+        pol = RetryPolicy(max_retries=9, backoff_s=0.01, multiplier=2.0,
+                          cap_s=0.04)
+        assert pol.delay(0) == pytest.approx(0.01)
+        assert pol.delay(1) == pytest.approx(0.02)
+        assert pol.delay(5) == pytest.approx(0.04)   # capped
+
+
+# ------------------------------------------------------------- injector --
+
+class TestInjector:
+    def test_unknown_site_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault site"):
+            FaultSpec("compile.bukcet")
+
+    def test_disabled_by_default(self):
+        assert faults.ACTIVE is None
+
+    def test_at_indexes_matching_calls(self):
+        # `at` counts calls the spec MATCHES, so match="decode", at=[0]
+        # fires on the first decode no matter how many prefills preceded
+        inj = FaultInjector([FaultSpec("serve.launch", match="decode",
+                                       at=[0])])
+        inj.suppress("serve.launch", key="prefill")
+        inj.suppress("serve.launch", key="prefill")
+        assert inj.suppress("serve.launch", key="decode")
+        assert not inj.suppress("serve.launch", key="decode")
+        assert inj.calls["serve.launch"] == 4
+        assert inj.fired["serve.launch"] == 1
+
+    def test_times_bounds_firing(self):
+        inj = FaultInjector([FaultSpec("pool.alloc", times=2)])
+        hits = [inj.suppress("pool.alloc") for _ in range(5)]
+        assert hits == [True, True, False, False, False]
+
+    def test_seeded_probability_is_deterministic(self):
+        def schedule(seed):
+            inj = FaultInjector([FaultSpec("pool.alloc", p=0.3)], seed=seed)
+            return [inj.suppress("pool.alloc") for _ in range(64)]
+        assert schedule(7) == schedule(7)
+        assert schedule(7) != schedule(8)
+        assert any(schedule(7)) and not all(schedule(7))
+
+    def test_check_raises_classified_default_errors(self):
+        with faults.inject(FaultSpec("compile.bucket", transient=True),
+                           FaultSpec("serve.launch")) as inj:
+            with pytest.raises(CompileError, match="transient fault") as ei:
+                inj.check("compile.bucket")
+            assert ei.value.transient
+            with pytest.raises(LaunchError, match="permanent fault") as ei:
+                inj.check("serve.launch")
+            assert not ei.value.transient
+        assert faults.ACTIVE is None   # context manager uninstalls
+
+    def test_chaos_injector_is_seed_deterministic(self):
+        a = FaultInjector.chaos(seed=3, rate=0.5)
+        b = FaultInjector.chaos(seed=3, rate=0.5)
+        fires = [a.suppress("pool.alloc") for _ in range(32)]
+        assert fires == [b.suppress("pool.alloc") for _ in range(32)]
+        assert {s.site for s in a.specs} == set(faults.SITES)
+
+
+# ------------------------------------- compile ladder (both pipelines) --
+
+def _ew(x, y):
+    return jnp.tanh(x) * y + jnp.exp(x * 0.5)
+
+
+class TestCompileLadder:
+    @pytest.mark.parametrize("pipeline", ["dhlo", "jit"])
+    def test_transient_compile_fault_retried_invisibly(self, pipeline):
+        cf = disc_compile(_ew, [ArgSpec(("B", 8)), ArgSpec(("B", 8))],
+                          pipeline=pipeline)
+        x = np.random.RandomState(0).randn(5, 8).astype(np.float32)
+        with faults.inject(FaultSpec("compile.bucket", times=1,
+                                     transient=True)):
+            # jit-pipeline outputs stay bucket-padded (callers slice)
+            out = np.asarray(cf(x, x))[:len(x)]
+        np.testing.assert_allclose(
+            out, np.asarray(_ew(jnp.asarray(x), jnp.asarray(x))),
+            rtol=1e-5, atol=1e-6)
+        assert cf.cache_stats()["retries"] == 1
+
+    @pytest.mark.parametrize("pipeline", ["dhlo", "jit"])
+    def test_permanent_compile_fault_raises_then_cache_recovers(
+            self, pipeline):
+        cf = disc_compile(_ew, [ArgSpec(("B", 8)), ArgSpec(("B", 8))],
+                          pipeline=pipeline)
+        x = np.random.RandomState(1).randn(4, 8).astype(np.float32)
+        with faults.inject(FaultSpec("compile.bucket")):
+            with pytest.raises(CompileError, match="injected permanent"):
+                cf(x, x)
+        # the failure never became a poisoned cache entry
+        out = np.asarray(cf(x, x))[:len(x)]
+        np.testing.assert_allclose(
+            out, np.asarray(_ew(jnp.asarray(x), jnp.asarray(x))),
+            rtol=1e-5, atol=1e-6)
+
+    def test_failed_escalation_falls_back_to_padded_bucket(self):
+        cf = disc_compile(_ew, [ArgSpec(("B", 8)), ArgSpec(("B", 8))],
+                          escalation_threshold=2)
+        ref = disc_compile(_ew, [ArgSpec(("B", 8)), ArgSpec(("B", 8))])
+        x = np.random.RandomState(2).randn(5, 8).astype(np.float32)
+        with faults.inject(FaultSpec("compile.exact")):
+            outs = [np.asarray(cf(x, x)) for _ in range(5)]
+        for o in outs:
+            np.testing.assert_allclose(o, np.asarray(ref(x, x)),
+                                       rtol=1e-5, atol=1e-6)
+        st = cf.cache_stats()
+        # the permanent failure pinned the exact signature: exactly one
+        # attempt, zero exact compiles, every call on the bucket path
+        assert st["escalation_failures"] == 1
+        assert cf.compile_counts()["exact"] == 0
+
+    def test_transient_escalation_failure_does_not_pin(self):
+        cf = disc_compile(_ew, [ArgSpec(("B", 8)), ArgSpec(("B", 8))],
+                          escalation_threshold=2)
+        x = np.random.RandomState(3).randn(5, 8).astype(np.float32)
+        # times=3 exhausts the in-cache retry budget (1 try + 2 retries)
+        # on the first escalation attempt: that call falls back to the
+        # bucket path but the signature is NOT pinned — a later call
+        # escalates successfully once the fault clears
+        with faults.inject(FaultSpec("compile.exact", times=3,
+                                     transient=True)):
+            for _ in range(4):
+                cf(x, x)
+        assert cf.cache_stats()["escalation_failures"] == 0
+        assert cf.cache_stats()["retries"] == 2
+        cf(x, x)
+        assert cf.compile_counts()["exact"] == 1
+
+
+# ------------------------------------------------- kernel demotion ladder --
+
+def _fresh_pallas(name):
+    """A pallas clone with its OWN kernel instances so strike/demotion
+    state never leaks into the shared registry."""
+    return register_backend(
+        name, _make_aot_backend(name, "pallas clone (fault tests)",
+                                codegen.pallas_cluster_kernels()),
+        overwrite=True)
+
+
+class TestKernelDemotion:
+    def test_strikes_demote_kernel_but_outputs_stay_correct(self):
+        bk = _fresh_pallas("pallas_ft_kernel")
+        cf = disc_compile(_ew, [ArgSpec(("B", "D")), ArgSpec(("B", "D"))],
+                          backend="pallas_ft_kernel")
+        rng = np.random.RandomState(4)
+        j0 = len(codegen.KERNEL_DEMOTIONS)
+        with faults.inject(FaultSpec("kernel.cluster")):
+            # three distinct B buckets (16/32/64) -> three trace-time
+            # kernel attempts, each striking the kLoop instance; per-op
+            # fallback keeps every output correct
+            for b in (4, 17, 33):
+                x = rng.randn(b, 8).astype(np.float32)
+                np.testing.assert_allclose(
+                    np.asarray(cf(x, x)),
+                    np.asarray(_ew(jnp.asarray(x), jnp.asarray(x))),
+                    rtol=1e-5, atol=1e-6)
+        kern = bk.cluster_kernels["kLoop"]
+        assert kern.strikes == 3 and kern.demoted
+        journal = codegen.KERNEL_DEMOTIONS[j0:]
+        assert any("kLoop" in e for e in journal)
+        # demoted: the next bucket compiles WITHOUT trying the kernel
+        x = rng.randn(65, 8).astype(np.float32)
+        np.testing.assert_allclose(
+            np.asarray(cf(x, x)),
+            np.asarray(_ew(jnp.asarray(x), jnp.asarray(x))),
+            rtol=1e-5, atol=1e-6)
+        assert kern.strikes == 3   # no further attempts
+
+    def test_backend_demotes_to_fallback_after_strike_budget(self):
+        _fresh_pallas("pallas_ft_backend")
+        cf = disc_compile(_ew, [ArgSpec(("B", "D")), ArgSpec(("B", "D"))],
+                          backend="pallas_ft_backend",
+                          backend_demotion_strikes=2)
+        rng = np.random.RandomState(5)
+        j0 = len(codegen.KERNEL_DEMOTIONS)
+        with faults.inject(FaultSpec("kernel.cluster")):
+            for b in (4, 17, 33):   # distinct B buckets: 16, 32, 64
+                x = rng.randn(b, 8).astype(np.float32)
+                cf(x, x)
+        # two strikes crossed the budget: the third bucket compiled on
+        # the demoted-to backend (default fallback: xla)
+        assert cf._compiled.backend.name == "xla"
+        assert any(e.startswith("backend:pallas_ft_backend->xla")
+                   for e in codegen.KERNEL_DEMOTIONS[j0:])
+        x = rng.randn(6, 8).astype(np.float32)
+        np.testing.assert_allclose(
+            np.asarray(cf(x, x)),
+            np.asarray(_ew(jnp.asarray(x), jnp.asarray(x))),
+            rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------- engine differential suite --
+
+class TestServeDifferential:
+    def test_transient_launch_fault_full_parity(self, tiny):
+        cfg, model, params = tiny
+        _, base = _run(model, params, _requests(cfg.vocab, LENS))
+        with faults.inject(FaultSpec("serve.launch", at=[0],
+                                     transient=True)):
+            eng, done = _run(model, params, _requests(cfg.vocab, LENS))
+        assert done == base            # bit-identical, fault invisible
+        assert eng.stats["retries"] >= 1
+        assert not eng.failed
+
+    def test_permanent_decode_fault_fails_group_only(self, tiny):
+        cfg, model, params = tiny
+        with faults.inject(FaultSpec("serve.launch", match="decode",
+                                     at=[1])):
+            eng = _engine(model, params)
+            eng.submit(_requests(cfg.vocab, LENS))
+            done = eng.run_until_done(max_steps=400)
+            # only the second decode launch's group died
+            assert set(eng.failed) == set(r.rid for r in
+                                          _requests(cfg.vocab, LENS))
+            assert all("LaunchError(decode)" in v
+                       for v in eng.failed.values())
+            assert eng.stats["failed_requests"] == len(LENS)
+            assert not done
+            # the engine keeps serving: a fresh wave completes with
+            # tokens bit-identical to a fault-free engine's
+            wave2 = _requests(cfg.vocab, [7, 10], rid0=100)
+            eng.submit(wave2)
+            done2 = eng.run_until_done(max_steps=400)
+        _, base2 = _run(model, params, _requests(cfg.vocab, [7, 10],
+                                                 rid0=100))
+        assert done2 == base2
+
+    def test_permanent_prefill_fault_spares_other_group(self, tiny):
+        cfg, model, params = tiny
+        # 5 and 40 land in different S buckets -> two prefill groups;
+        # only the first-launched group fails
+        reqs = _requests(cfg.vocab, [5, 40])
+        with faults.inject(FaultSpec("serve.launch", match="prefill",
+                                     at=[0])):
+            eng, done = _run(model, params, reqs)
+        assert len(eng.failed) == 1 and len(done) == 1
+        (frid,) = eng.failed
+        (orid,) = done
+        assert "LaunchError(prefill)" in eng.failed[frid]
+        solo = [r for r in _requests(cfg.vocab, [5, 40]) if r.rid == orid]
+        _, base = _run(model, params, solo)
+        assert done[orid] == base[orid]   # survivor is bit-identical
+
+    def test_compile_fault_during_serve_fails_group_not_engine(self, tiny):
+        cfg, model, params = tiny
+        # the artifact compiles lazily INSIDE the first launch: a
+        # permanent bucket-compile failure is a launch-group failure
+        with faults.inject(FaultSpec("compile.bucket", match="prefill")):
+            eng, done = _run(model, params, _requests(cfg.vocab, LENS))
+        assert not done
+        assert set(eng.failed) and all(
+            "LaunchError(prefill)" in v or "injected permanent" in v
+            for v in eng.failed.values())
+
+    def test_pool_alloc_fault_preempts_and_recovers(self, tiny):
+        cfg, model, params = tiny
+        paged = dict(kv_block_size=16, kv_pool_blocks=12)
+        _, base = _run(model, params, _requests(cfg.vocab, LENS), **paged)
+        with faults.inject(FaultSpec("pool.alloc", times=2)):
+            eng, done = _run(model, params, _requests(cfg.vocab, LENS),
+                             **paged)
+        assert done == base            # greedy recompute is exact
+        assert not eng.failed
+        eng.alloc.assert_consistent()
+
+    def test_pool_exhaustion_bounds_recompute(self, tiny):
+        cfg, model, params = tiny
+        with faults.inject(FaultSpec("pool.alloc")):   # every alloc denied
+            eng, done = _run(model, params, _requests(cfg.vocab, LENS),
+                             kv_block_size=16, kv_pool_blocks=12,
+                             max_recomputes=2)
+        # bounded recompute turns the livelock into PoolExhausted
+        assert not done
+        assert set(eng.failed) == {r.rid
+                                   for r in _requests(cfg.vocab, LENS)}
+        assert all("PoolExhausted" in v for v in eng.failed.values())
+        assert not eng.queue and all(s is None for s in eng.slots)
+        eng.alloc.assert_consistent()
+
+    def test_deadline_expires_only_late_request(self, tiny):
+        cfg, model, params = tiny
+        def reqs():
+            out = _requests(cfg.vocab, LENS, max_new=6)
+            out[2].deadline_s = 3.0    # expires mid-run (fake clock)
+            return out
+        _, base = _run(model, params, _requests(cfg.vocab, LENS[:2],
+                                                max_new=6))
+        eng = _engine(model, params)
+        t = [0.0]
+        eng._clock = lambda: t[0]
+        eng.submit(reqs())
+        for _ in range(3):
+            eng.step()
+        t[0] = 5.0                     # past rid 2's absolute deadline
+        done = eng.run_until_done(max_steps=400)
+        assert set(eng.failed) == {2}
+        assert "DeadlineExceeded" in eng.failed[2]
+        assert eng.stats["deadline_expirations"] == 1
+        assert {k: done[k] for k in base} == base   # survivors identical
+
+    def test_deadline_checked_at_admission(self, tiny):
+        cfg, model, params = tiny
+        eng = _engine(model, params, max_batch=1)
+        t = [0.0]
+        eng._clock = lambda: t[0]
+        r = _requests(cfg.vocab, [6], max_new=4)
+        r[0].deadline_s = 1.0
+        eng.submit(r)
+        t[0] = 2.0                     # expired while still queued
+        eng.step()
+        assert eng.failed[0].endswith("before completion")
+        assert eng.stats["deadline_expirations"] == 1
+
+    def test_replica_drain_preempts_and_survivors_serve(self, tiny):
+        cfg, model, params = tiny
+        # monitoring never changes generated tokens: the baseline runs
+        # without it (a real-clock baseline with a 5 s deadline and no
+        # beats could drain spuriously under first-launch compile cost)
+        _, base = _run(model, params, _requests(cfg.vocab, [6, 9]),
+                       max_batch=1, replicas=2)
+        eng = _engine(model, params, max_batch=1, replicas=2,
+                      heartbeat_deadline_s=5.0)
+        t = [1.0]
+        eng._clock = lambda: t[0]
+        for r in range(2):
+            eng.heartbeat(r)           # beats at t=1
+        eng.submit(_requests(cfg.vocab, [6, 9]))
+        for _ in range(2):
+            eng.step()                 # both admitted, prefill started
+        t[0] = 10.0
+        eng.heartbeat(0)               # only replica 0 stays live
+        done = eng.run_until_done(max_steps=400)
+        assert eng.stats["replica_drains"] == 1
+        assert eng._replica_alive == [True, False]
+        assert not eng.failed          # drained request requeued, not lost
+        assert set(done) == set(base)
+        # the survivor replica's own request never moved: bit-identical;
+        # the drained one recomputed via prefill (prefix preserved)
+        per_rep = eng.stats["per_replica"]
+        assert per_rep[1]["requests_completed"] == 0
+        for rid in done:
+            assert done[rid][:1] == base[rid][:1]
+        # recovery: a beat restores the replica and it serves again
+        eng.heartbeat(1)
+        eng.submit(_requests(cfg.vocab, [7], rid0=50))
+        eng.run_until_done(max_steps=400)
+        assert 50 in eng.done
+        assert eng._replica_alive == [True, True]
+        assert eng.stats["per_replica"][1]["admitted"] >= 1
+
+    def test_injected_heartbeat_loss_drains_replica(self, tiny):
+        cfg, model, params = tiny
+        with faults.inject(FaultSpec("ft.heartbeat", match="replica1")):
+            # replica 1's init beat is dropped -> drained at step 0;
+            # traffic lands on replica 0 and completes
+            eng, done = _run(model, params, _requests(cfg.vocab, [6, 9]),
+                             max_batch=1, replicas=2,
+                             heartbeat_deadline_s=60.0)
+        _, base = _run(model, params, _requests(cfg.vocab, [6, 9]),
+                       max_batch=1, replicas=1)
+        assert eng.stats["replica_drains"] == 1
+        assert eng._replica_alive == [True, False]
+        assert done == base            # single-replica parity
+        assert eng.stats["per_replica"][1]["admitted"] == 0
+
+    def test_report_health_structure(self, tiny):
+        cfg, model, params = tiny
+        with faults.inject(FaultSpec("serve.launch", at=[0],
+                                     transient=True)):
+            eng, _ = _run(model, params, _requests(cfg.vocab, [5]),
+                          heartbeat_deadline_s=60.0)
+        rep = eng.report()
+        h = rep["health"]
+        assert h["alive_replicas"] == 1
+        assert h["replicas"][0]["alive"]
+        assert "last_beat_age_s" in h["replicas"][0]
+        assert h["counters"]["retries"] >= 1
+        assert set(h["counters"]) == {"failed_requests", "retries",
+                                      "kernel_demotions",
+                                      "deadline_expirations",
+                                      "replica_drains"}
+        assert h["failed"] == {}
+        assert set(h["compile"]) == {"retries", "escalation_failures"}
+        assert set(rep) == {"health", "stats", "compiles"}
+        assert set(rep["stats"]) == set(STATS_KEYS)
+
+    def test_chaos_run_completes_every_request(self, tiny):
+        cfg, model, params = tiny
+        reqs = _requests(cfg.vocab, [5, 9, 12, 7], max_new=4)
+        inj = FaultInjector.chaos(seed=12, rate=0.04,
+                                  sites=("serve.launch", "pool.alloc"))
+        with faults.inject(injector=inj):
+            eng, done = _run(model, params, reqs, kv_block_size=16,
+                             kv_pool_blocks=16)
+        # graceful degradation: every request retired done or failed,
+        # never dropped, never an engine crash
+        assert set(done) | set(eng.failed) == {r.rid for r in reqs}
+        eng.alloc.assert_consistent()
+
+
+# ----------------------------------------------------------- mesh (SPMD) --
+
+class TestServeDifferentialMesh:
+    @needs2
+    def test_transient_launch_fault_parity_under_mesh(self, tiny):
+        cfg, model, params = tiny
+        mesh = make_mesh((2,), ("data",))
+        kw = dict(max_batch=2, replicas=1, mesh=mesh,
+                  sharding_profile="dp")
+        _, base = _run(model, params, _requests(cfg.vocab, [6, 9]), **kw)
+        with faults.inject(FaultSpec("serve.launch", at=[0],
+                                     transient=True)):
+            eng, done = _run(model, params, _requests(cfg.vocab, [6, 9]),
+                             **kw)
+        assert done == base
+        assert eng.stats["retries"] >= 1 and not eng.failed
+
+    @needs2
+    def test_replica_drain_under_mesh(self, tiny):
+        cfg, model, params = tiny
+        mesh = make_mesh((2,), ("data",))
+        kw = dict(max_batch=1, replicas=2, mesh=mesh,
+                  sharding_profile="dp", heartbeat_deadline_s=5.0)
+        eng = _engine(model, params, **kw)
+        t = [1.0]
+        eng._clock = lambda: t[0]
+        for r in range(2):
+            eng.heartbeat(r)
+        eng.submit(_requests(cfg.vocab, [6, 9]))
+        for _ in range(2):
+            eng.step()
+        t[0] = 10.0
+        eng.heartbeat(0)
+        done = eng.run_until_done(max_steps=400)
+        assert eng.stats["replica_drains"] == 1
+        assert not eng.failed
+        assert set(done) == {0, 1}     # both completed on the survivor
