@@ -1,0 +1,216 @@
+"""Observability-plane benchmark: tracer overhead + cost accounting.
+
+Three measurements over the serve smoke trace (same workload as
+``bench_serve``):
+
+* **disabled-tracer overhead** — interleaved best-of passes with no
+  tracer installed (``trace.ACTIVE is None``, the production state) vs
+  a zero-capacity :class:`~repro.obs.trace.Tracer` that fires every
+  guard and span call but records nothing — a strict upper bound on
+  the disabled-hook cost, held within 2% of disabled throughput.  A
+  full recording tracer rides along as a third arm for the record.
+* **dynamic-shape cost accounting** — the prefill artifact's per-bucket
+  hit histogram, padding-waste ratio (padded vs true launch bytes), and
+  host-dispatch vs entry-call wall split, published as labeled gauges
+  in the metrics registry for ≥ 2 buckets.
+* **Chrome trace export** — the traced pass exports
+  ``BENCH_obs_trace.json`` and every event is validated against the
+  ``trace_event`` schema (the file loads in Perfetto / chrome://tracing).
+
+Writes ``BENCH_obs.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+from typing import Dict, List
+
+import jax
+
+from disc import ServeConfig, ServeEngine, observe
+from repro.configs import get_config
+from repro.models.registry import get_model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+from .bench_serve import _run_trace, _trace
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def validate_trace_event(ev: Dict) -> None:
+    """Assert one exported event obeys the Chrome ``trace_event`` schema."""
+    for k in ("name", "cat", "ph", "ts", "pid", "tid", "args"):
+        assert k in ev, f"trace event missing {k!r}: {ev}"
+    assert isinstance(ev["ts"], (int, float)) and ev["ts"] >= 0
+    assert isinstance(ev["args"], dict)
+    if ev["ph"] == "X":
+        assert isinstance(ev["dur"], (int, float)) and ev["dur"] >= 0
+    elif ev["ph"] == "i":
+        assert ev["s"] == "t"
+    elif ev["ph"] in ("b", "e"):
+        assert isinstance(ev["id"], str)
+    else:
+        assert ev["ph"] == "C", f"unknown phase {ev['ph']!r}"
+
+
+def _warm(model, params, scfg, reqs_fn) -> ServeEngine:
+    """One engine, warmed until a whole pass adds no compiles."""
+    eng = ServeEngine(model, params, scfg)
+    warm = -1
+    for _ in range(4):
+        if eng.stats["prefill_compiles"] == warm:
+            break
+        warm = eng.stats["prefill_compiles"]
+        _run_trace(eng, reqs_fn())
+        eng.done.clear()
+    return eng
+
+def _tracer_overhead(model, params, scfg, reqs_fn, smoke: bool) -> Dict:
+    """Interleaved best-of passes over three arms sharing one warmed
+    engine (identical compile state; interleaving cancels thermal /
+    scheduler drift):
+
+    * **disabled** — ``trace.ACTIVE is None``, the production state;
+    * **noop tracer** — a zero-capacity :class:`Tracer`
+      (``max_events=0``): every ``ACTIVE is not None`` guard fires and
+      every span site pays the full begin/end call, but recording is
+      dropped.  This arm is a strict *upper bound* on the disabled-hook
+      cost (the disabled state skips the calls entirely), the same
+      methodology as ``bench_serve``'s no-op fault injector — holding
+      it within 2% proves the guards are free when tracing is off;
+    * **recording** — a real tracer capturing every event, reported so
+      the cost of actually tracing is on the record (on this reduced
+      2-layer model each serve step is ~2ms, so the fixed per-span cost
+      reads far larger than it would against a real model's step time).
+    """
+    assert obs_trace.ACTIVE is None, "tracer leaked into the benchmark"
+    eng = _warm(model, params, scfg, reqs_fn)
+    reps = 4 if smoke else 3     # smoke's trace is tiny: repeat it so one
+                                 # measured pass is long enough to be stable
+
+    def one_pass() -> float:
+        eng.reset_stats()
+        for _ in range(reps):
+            _run_trace(eng, reqs_fn())
+            eng.done.clear()
+        return eng.stats["tokens_per_sec"]
+
+    best = {"disabled": 0.0, "noop_tracer": 0.0, "recording": 0.0}
+    events = 0
+
+    def one_round() -> float:
+        nonlocal events
+        best["disabled"] = max(best["disabled"], one_pass())
+        with obs_trace.tracing(obs_trace.Tracer(max_events=0)):
+            best["noop_tracer"] = max(best["noop_tracer"], one_pass())
+        with obs_trace.tracing() as tr:
+            best["recording"] = max(best["recording"], one_pass())
+        events = max(events, len(tr.events))
+        return best["noop_tracer"] / max(best["disabled"], 1e-9)
+
+    # best-of is monotone, so extra interleaved rounds only tighten both
+    # arms toward their noise floor — keep going (bounded) while the
+    # ratio still looks like scheduler noise rather than real overhead
+    ratio = 0.0
+    for r in range(9 if smoke else 10):
+        ratio = one_round()
+        if r >= (2 if smoke else 3) and ratio >= 0.985:
+            break
+    return {"disabled_tokens_per_sec": round(best["disabled"], 1),
+            "noop_tracer_tokens_per_sec": round(best["noop_tracer"], 1),
+            "recording_tokens_per_sec": round(best["recording"], 1),
+            "overhead_ratio": round(ratio, 4),
+            "recording_ratio": round(
+                best["recording"] / max(best["disabled"], 1e-9), 4),
+            "events_per_recorded_pass": events}
+
+
+def main(csv: List[str], smoke: bool = False) -> None:
+    cfg = dataclasses.replace(get_config("tinyllama_11b").reduced(),
+                              n_layers=2, vocab=512)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # the bench_serve throughput trace: prompts spanning several S
+    # buckets so the cost gauges have ≥ 2 buckets to report
+    tput = (dict(n=8, lo=24, hi=80, max_new=4) if smoke
+            else dict(n=24, lo=48, hi=160, max_new=4))
+    scfg = ServeConfig(max_batch=4, max_seq=128 if smoke else 256)
+    reqs_fn = lambda: _trace(cfg.vocab, **tput)  # noqa: E731
+
+    # ---- disabled-tracer overhead on the serve hot path ----------------
+    overhead = _tracer_overhead(model, params, scfg, reqs_fn, smoke)
+    csv.append(f"obs_tracer_overhead,,ratio={overhead['overhead_ratio']}"
+               f";disabled_tps={overhead['disabled_tokens_per_sec']}")
+    assert overhead["overhead_ratio"] >= 0.98, \
+        (f"tracer hooks cost {(1 - overhead['overhead_ratio']):.1%} "
+         f"throughput even at zero capacity (2% budget) — the disabled "
+         f"state pays strictly less")
+    if not smoke:
+        assert overhead["recording_ratio"] >= 0.90, \
+            "recording a full trace cost >10% serve throughput"
+
+    # ---- cost accounting + Chrome export over one traced pass ----------
+    eng = _warm(model, params, scfg, reqs_fn)
+    eng.reset_stats()
+    with obs_trace.tracing() as tr:
+        _run_trace(eng, reqs_fn())
+        trace_path = ROOT / "BENCH_obs_trace.json"
+        observe.export_chrome_trace(trace_path)
+    eng.done.clear()
+
+    doc = json.loads(trace_path.read_text())
+    phases = set()
+    for ev in doc["traceEvents"]:
+        validate_trace_event(ev)
+        phases.add(ev["ph"])
+    assert {"X", "b", "e"} <= phases, f"trace missing phases: {phases}"
+    csv.append(f"obs_chrome_trace,,events={len(doc['traceEvents'])}"
+               f";file={trace_path.name}")
+
+    snap = observe()
+    cost = snap["dispatch"]["prefill"]
+    assert len(cost["per_bucket"]) >= 2, \
+        f"need ≥2 prefill buckets for the gauges, got {cost['per_bucket']}"
+    reg = obs_metrics.REGISTRY
+    for bucket, pb in cost["per_bucket"].items():
+        reg.gauge("pad_waste_ratio", artifact="prefill",
+                  bucket=bucket).set(pb["pad_waste_ratio"])
+        reg.gauge("host_dispatch_seconds", artifact="prefill",
+                  bucket=bucket).set(pb["host_dispatch_seconds"])
+        reg.gauge("entry_seconds", artifact="prefill",
+                  bucket=bucket).set(pb["entry_seconds"])
+    gauges = observe()["gauges"]
+    csv.append(f"obs_pad_waste,,overall={cost['pad_waste_ratio']:.3f}"
+               f";buckets={len(cost['per_bucket'])}")
+
+    out = {
+        "model": "tinyllama_11b.reduced(n_layers=2, vocab=512)",
+        "smoke": smoke,
+        "config": {"max_batch": scfg.max_batch, "max_seq": scfg.max_seq,
+                   "trace": tput},
+        "tracer_overhead": overhead,
+        "cost_accounting": {
+            "prefill": cost,
+            "gauges": {k: round(v, 6) for k, v in sorted(gauges.items())},
+        },
+        "chrome_trace": {"path": trace_path.name,
+                         "events": len(doc["traceEvents"]),
+                         "phases": sorted(phases), "valid": True},
+        "observe_domains": sorted(k for k in snap
+                                  if k in obs_metrics.DOMAINS),
+    }
+    (ROOT / "BENCH_obs.json").write_text(json.dumps(out, indent=2) + "\n")
+    csv.append(f"obs_bench_json,,{(ROOT / 'BENCH_obs.json').name}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    rows: List[str] = []
+    main(rows, smoke=args.smoke)
+    print("\n".join(rows))

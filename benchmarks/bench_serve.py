@@ -428,7 +428,21 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--chaos", action="store_true",
                     help="run the seeded random-fault pass as well")
+    ap.add_argument("--trace", type=str, default=None, metavar="PATH",
+                    help="record the whole run under the obs tracer and "
+                         "export a Chrome trace_event JSON to PATH "
+                         "(load it at ui.perfetto.dev)")
     args = ap.parse_args()
     rows: List[str] = []
-    main(rows, smoke=args.smoke, chaos=args.chaos)
+    if args.trace:
+        from disc import observe
+        observe.start_trace()
+        try:
+            main(rows, smoke=args.smoke, chaos=args.chaos)
+            observe.export_chrome_trace(args.trace)
+        finally:
+            observe.stop_trace()
+        rows.append(f"serve_chrome_trace,,{args.trace}")
+    else:
+        main(rows, smoke=args.smoke, chaos=args.chaos)
     print("\n".join(rows))

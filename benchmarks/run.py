@@ -17,7 +17,7 @@ from typing import List
 
 from . import (bench_buffers, bench_compile_overhead, bench_control_flow,
                bench_dist, bench_fig3_frameworks, bench_fig4_static_gap,
-               bench_roofline, bench_serve, bench_table2_nimble,
+               bench_obs, bench_roofline, bench_serve, bench_table2_nimble,
                bench_table3_kernels)
 
 SUITES = {
@@ -31,6 +31,7 @@ SUITES = {
     "serve": bench_serve.main,
     "dist": bench_dist.main,
     "ctrl": bench_control_flow.main,
+    "obs": bench_obs.main,
 }
 
 

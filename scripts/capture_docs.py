@@ -16,7 +16,30 @@ Snippets must be deterministic across processes: they render dimension
 from __future__ import annotations
 
 import json
+import re
 import sys
+
+#: keys holding wall-clock measurements — redacted to 0.0 in captured
+#: snapshots (they vary run to run; everything else is live output)
+_TIMING_KEY = re.compile(r"(seconds|per_sec|_s$|^t$|age_s$)")
+
+
+def _redact_timing(obj):
+    if isinstance(obj, dict):
+        out = {}
+        for k, v in obj.items():
+            if (_TIMING_KEY.search(k) and isinstance(v, (int, float))
+                    and not isinstance(v, bool)):
+                out[k] = 0.0
+            elif k == "artifact" and isinstance(v, str):
+                # fingerprints hash live param buffers — per-process
+                out[k] = re.sub(r"[0-9a-f]{8,}$", "<fp>", v)
+            else:
+                out[k] = _redact_timing(v)
+        return out
+    if isinstance(obj, list):
+        return [_redact_timing(v) for v in obj]
+    return obj
 
 
 def _artifact():
@@ -112,11 +135,49 @@ def health_report() -> str:
     return json.dumps(eng.report()["health"], indent=2, sort_keys=True)
 
 
+def observe_snapshot() -> str:
+    """``disc.observe()`` after a two-request serve run on a fresh
+    registry — one snapshot spanning compile, dispatch, memory, serve,
+    and health.  Wall-clock-valued keys are redacted to ``0.0`` (they
+    vary run to run); every other value is live output."""
+    import jax
+    import numpy as np
+
+    import disc
+    from repro.configs import get_config
+    from repro.data.pipeline import Request
+    from repro.models.registry import get_model
+    from repro.obs import metrics as obs_metrics
+
+    # fresh registry BEFORE constructing the engine: collectors register
+    # at construction into the then-current registry
+    prev = obs_metrics.REGISTRY
+    obs_metrics.REGISTRY = obs_metrics.MetricsRegistry()
+    try:
+        cfg = get_config("tinyllama_11b").reduced()
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = disc.ServeEngine(model, params,
+                               disc.ServeConfig(max_batch=2, max_seq=64))
+        rng = np.random.RandomState(0)
+        eng.submit([Request(rid=i,
+                            tokens=rng.randint(0, cfg.vocab,
+                                               size=ln).astype(np.int32),
+                            max_new_tokens=2)
+                    for i, ln in enumerate((6, 9))])
+        eng.run_until_done(max_steps=100)
+        snap = disc.observe()
+    finally:
+        obs_metrics.REGISTRY = prev
+    return json.dumps(_redact_timing(snap), indent=2, sort_keys=True)
+
+
 SNIPPETS = {
     "memory-dispatch": memory_dispatch,
     "memory-report": memory_report,
     "control-flow-dispatch": control_flow_dispatch,
     "health-report": health_report,
+    "observe-snapshot": observe_snapshot,
 }
 
 

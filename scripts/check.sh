@@ -20,6 +20,11 @@
 #                               # injection suite (taxonomy, retry ladders,
 #                               # deadlines, replica drain) + a seeded
 #                               # chaos pass of the serve benchmark
+#   scripts/check.sh --obs      # observability: tracing/metrics/cost-
+#                               # accounting suite + obs benchmark smoke,
+#                               # which holds disabled-tracer serve overhead
+#                               # under 2% and schema-validates the exported
+#                               # Chrome trace
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -53,6 +58,12 @@ fi
 if [[ "$MODE" == "--ft" ]]; then
     python -m pytest tests/test_faults.py -q
     python -m benchmarks.bench_serve --smoke --chaos
+    exit 0
+fi
+
+if [[ "$MODE" == "--obs" ]]; then
+    python -m pytest tests/test_observability.py -q
+    python -m benchmarks.bench_obs --smoke
     exit 0
 fi
 

@@ -11,6 +11,11 @@ not compiler surface, and stay importable.  Anything under ``repro.core``,
 explicit per-file allowlist below names the two benchmarks that measure
 internals (buffer planning, fusion cost classes) by design.
 
+The observability plane (``repro.obs``) is importable from anywhere —
+it exists to be reached by tooling — but is itself checked the other
+way: no file under ``src/repro/obs`` may import from ``repro.serve`` or
+``repro.launch`` (instrumentation imports flow inward only).
+
 Usage: PYTHONPATH=src python scripts/import_lint.py   (exit 1 on violation)
 """
 from __future__ import annotations
@@ -27,8 +32,15 @@ PUBLIC_PREFIXES = ("disc", "repro.api")
 ALLOWED_PREFIXES = PUBLIC_PREFIXES + (
     "repro.models", "repro.configs", "repro.data", "repro.checkpoint",
     "repro.train", "repro.optim", "repro.roofline", "repro.kernels",
-    "repro.dist",
+    "repro.dist", "repro.obs",
 )
+
+#: ``repro/obs`` is the instrumentation plane: every layer may import it,
+#: but it must never import the layers it instruments — otherwise adding
+#: a span to the serve engine could create an import cycle.
+OBS_DIR = "src/repro/obs"
+OBS_PACKAGE = "repro.obs"
+OBS_FORBIDDEN = ("repro.serve", "repro.launch")
 
 # benchmarks measuring compiler *internals* on purpose
 FILE_ALLOWLIST = {
@@ -50,6 +62,33 @@ def imports_of(path: pathlib.Path):
                 yield node.module, node.lineno
 
 
+def obs_imports_inward_only() -> list:
+    """Violations of the ``repro.obs`` inward-only rule (resolves
+    relative imports, so ``from ..serve import x`` is caught too)."""
+    bad = []
+    pkg_parts = OBS_PACKAGE.split(".")
+    for path in sorted((ROOT / OBS_DIR).glob("*.py")):
+        rel = path.relative_to(ROOT).as_posix()
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for node in ast.walk(tree):
+            mods = []
+            if isinstance(node, ast.Import):
+                mods = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom):
+                if node.level == 0:
+                    mods = [node.module or ""]
+                else:
+                    base = pkg_parts[:len(pkg_parts) - node.level + 1]
+                    mods = [".".join(base + ([node.module]
+                                             if node.module else []))]
+            for mod in mods:
+                if any(mod == f or mod.startswith(f + ".")
+                       for f in OBS_FORBIDDEN):
+                    bad.append(f"{rel}:{node.lineno}: {mod} "
+                               f"(repro.obs imports flow inward only)")
+    return bad
+
+
 def committed_bytecode() -> list:
     """Python bytecode tracked by git (should be .gitignore'd instead)."""
     try:
@@ -66,6 +105,7 @@ def main() -> int:
     for p in committed_bytecode():
         bad.append(f"{p}: committed bytecode (add to .gitignore and "
                    f"`git rm --cached` it)")
+    bad.extend(obs_imports_inward_only())
     for d in SCANNED:
         for path in sorted((ROOT / d).glob("*.py")):
             rel = path.relative_to(ROOT).as_posix()

@@ -24,11 +24,13 @@ from repro.api import (  # noqa: F401
     FaultSpec,
     LaunchError,
     Lowered,
+    Observe,
     PoolExhausted,
     RetryPolicy,
     NimbleVM,
     POW2,
     ShardingProfile,
+    Tracer,
     TreeSpec,
     UnknownBackendError,
     bridge,
@@ -41,6 +43,7 @@ from repro.api import (  # noqa: F401
     list_backends,
     list_profiles,
     make_mesh,
+    observe,
     pow2_bucket,
     register_backend,
     use_mesh,

@@ -41,6 +41,7 @@ from ..dist import (  # noqa: F401
     use_mesh,
 )
 from ..frontends.jaxpr_frontend import ArgSpec, bridge  # noqa: F401
+from ..obs import Observe, Tracer, observe  # noqa: F401
 from .backends import (  # noqa: F401
     Backend,
     UnknownBackendError,
@@ -69,6 +70,8 @@ __all__ = [
     # SPMD / distribution
     "ShardingProfile", "get_profile", "list_profiles", "make_mesh",
     "use_mesh", "get_mesh",
+    # observability plane
+    "observe", "Observe", "Tracer",
     # baselines & serving
     "NimbleVM", "bridge", "ServeEngine", "ServeConfig",
     "ADMISSION_POLICIES",

@@ -47,6 +47,8 @@ from ..errors import CONTROL_EXCEPTIONS, CompileError, classify_transient
 from ..core.codegen import dyn_symbols
 from ..core.dispatcher import dhlo_lens, generate_dispatch, jit_lens
 from ..core.symshape import SymDim
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..frontends.jaxpr_frontend import ArgSpec, TreeSpec, bridge
 from .backends import get_backend
 from .options import CompileOptions, Dim, normalize_specs
@@ -247,6 +249,19 @@ class Lowered:
 
 def _lower(fn: Callable, specs: Sequence[Optional[ArgSpec]],
            dims: Sequence[Dim], options: CompileOptions) -> Lowered:
+    sp = (obs_trace.ACTIVE.begin("lower", cat="compile",
+                                 artifact=options.name,
+                                 pipeline=options.pipeline)
+          if obs_trace.ACTIVE is not None else None)
+    try:
+        return _lower_impl(fn, specs, dims, options)
+    finally:
+        if sp is not None:
+            sp.end()
+
+
+def _lower_impl(fn: Callable, specs: Sequence[Optional[ArgSpec]],
+                dims: Sequence[Dim], options: CompileOptions) -> Lowered:
     policy = options.policy_with_dims(dims)
     sharding_plan = None
     if options.mesh is not None:
@@ -351,6 +366,21 @@ class Compiled:
             sharding=lowered.sharding_plan,
             memory_plan=lowered.buffer_plan)
         self._mstats = self._dispatch._mstats
+        obs_metrics.register_collector("dispatch", self._obs_dispatch,
+                                       name=options.name)
+        obs_metrics.register_collector("memory", self._obs_memory,
+                                       name=options.name)
+
+    def _obs_dispatch(self) -> Dict[str, Any]:
+        """Pull collector: ``disc.observe()["dispatch"][name]``."""
+        return self._mstats.cost_dict()
+
+    def _obs_memory(self) -> Dict[str, Any]:
+        """Pull collector: ``disc.observe()["memory"][name]`` (the light
+        staging view; ``memory_report()`` has the full per-bucket plan)."""
+        return dict(self._mstats.as_dict(),
+                    planning=bool(self.options.memory_planning
+                                  and self.lowered.pipeline == "dhlo"))
 
     # ------------------------------------------------------------ public --
     def __call__(self, *arrays):
@@ -390,6 +420,12 @@ class Compiled:
     def cache_stats(self) -> Dict[str, float]:
         return self.cache.stats.as_dict()
 
+    def cost_report(self) -> Dict[str, Any]:
+        """Dynamic-shape cost accounting for this artifact: per-bucket
+        hit histogram, padding-waste ratio (padded vs true bytes per
+        launch), and the host-dispatch vs entry-call wall split."""
+        return self._mstats.cost_dict()
+
     def compile_counts(self) -> Dict[str, int]:
         """Per-artifact compile counts (meaningful under shared caches)."""
         return {"bucket": self._bucket_compiles,
@@ -425,6 +461,7 @@ class Compiled:
                 "backend_covered_clusters": covered,
             })
         rep["memory"] = self.memory_report()
+        rep["dispatch_cost"] = self.cost_report()
         return rep
 
     def memory_report(self) -> Dict[str, Any]:
@@ -480,6 +517,10 @@ class Compiled:
             KERNEL_DEMOTIONS.append(
                 f"backend:{self.backend.name}->"
                 f"{self.options.fallback_backend} after {total} strikes")
+            obs_metrics.record_event(
+                "backend.demote", artifact=self.options.name,
+                backend=self.backend.name,
+                fallback=self.options.fallback_backend, strikes=total)
             self.backend = get_backend(self.options.fallback_backend)
 
     def _compile_bucket(self, key: Tuple[int, ...]):
@@ -701,6 +742,9 @@ class CompiledFunction:
                 f"({type(e).__name__}: {e})",
                 transient=classify_transient(e)) from e
         prev.cache.stats.promotions += 1
+        obs_metrics.record_event(
+            "promote", artifact=self.options.name,
+            symbols=list(compiled.lowered.sym_names))
         # the superseded artifact's entries are unreachable — free the
         # executables they pin.  This must happen before the refined
         # artifact compiles its first bucket: under the dhlo pipeline the

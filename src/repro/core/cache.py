@@ -20,6 +20,8 @@ from typing import Any, Callable, Dict, Optional, Set, Tuple
 from ..errors import (CONTROL_EXCEPTIONS, DEFAULT_RETRY, RetryPolicy,
                       wrap_compile_error)
 from ..ft import faults
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 
 __all__ = ["CompileCache", "CacheStats"]
 
@@ -73,6 +75,12 @@ class CompileCache:
         self._failed_exact: Set[Tuple] = set()
         self.retry_policy: RetryPolicy = DEFAULT_RETRY
         self.stats = CacheStats()
+        obs_metrics.register_collector("compile", self._obs_collect,
+                                       name=fingerprint)
+
+    def _obs_collect(self) -> Dict[str, Any]:
+        """Pull collector for ``disc.observe()["compile"]``."""
+        return dict(self.stats.as_dict(), entries=len(self._entries))
 
     def _compile_with_retry(self, compile_fn: Callable[[], Any],
                             what: str, site: str) -> Any:
@@ -115,17 +123,25 @@ class CompileCache:
             self._entries.move_to_end(key)
             return entry
         self.stats.misses += 1
+        fp = fingerprint or self.fingerprint
+        sp = (obs_trace.ACTIVE.begin("compile.bucket", cat="compile",
+                                     key=str(bucket_sig), artifact=fp[:40],
+                                     cache_hit=False)
+              if obs_trace.ACTIVE is not None else None)
         t0 = time.perf_counter()
         try:
             # the fault-site key carries the artifact fingerprint so an
             # injector can target one artifact (match="prefill") of a
             # shared cache
             entry = self._compile_with_retry(
-                compile_fn,
-                f"{fingerprint or self.fingerprint} bucket {bucket_sig}",
-                "compile.bucket")
+                compile_fn, f"{fp} bucket {bucket_sig}", "compile.bucket")
         finally:
-            self.stats.compile_seconds += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.stats.compile_seconds += dt
+            if sp is not None:
+                sp.end()
+        obs_metrics.record_event("compile.bucket", key=str(bucket_sig),
+                                 artifact=fp[:40], seconds=round(dt, 4))
         self._entries[key] = entry
         self._evict()
         return entry
@@ -152,6 +168,9 @@ class CompileCache:
         answers False for it from now on)."""
         self._failed_exact.add((fingerprint or self.fingerprint, exact_sig))
         self.stats.escalation_failures += 1
+        obs_metrics.record_event(
+            "escalate.fail", key=str(exact_sig),
+            artifact=(fingerprint or self.fingerprint)[:40])
 
     def get_or_compile_exact(self, exact_sig: Tuple,
                              compile_fn: Callable[[], Any],
@@ -164,14 +183,22 @@ class CompileCache:
             return entry
         self.stats.misses += 1
         self.stats.escalations += 1
+        fp = fingerprint or self.fingerprint
+        sp = (obs_trace.ACTIVE.begin("compile.exact", cat="compile",
+                                     key=str(exact_sig), artifact=fp[:40],
+                                     cache_hit=False)
+              if obs_trace.ACTIVE is not None else None)
         t0 = time.perf_counter()
         try:
             entry = self._compile_with_retry(
-                compile_fn,
-                f"{fingerprint or self.fingerprint} exact {exact_sig}",
-                "compile.exact")
+                compile_fn, f"{fp} exact {exact_sig}", "compile.exact")
         finally:
-            self.stats.compile_seconds += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.stats.compile_seconds += dt
+            if sp is not None:
+                sp.end()
+        obs_metrics.record_event("escalate", key=str(exact_sig),
+                                 artifact=fp[:40], seconds=round(dt, 4))
         self._entries[key] = entry
         self._evict()
         return entry

@@ -59,6 +59,8 @@ from jax import lax
 
 from ..errors import CONTROL_EXCEPTIONS
 from ..ft import faults
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .dhlo import DGraph, DOp, DValue
 from .emit import emit_op
 from .fusion import REDUCE_ROOT_KINDS, Cluster, cluster_live_outs
@@ -517,6 +519,9 @@ class ClusterKernel:
             KERNEL_DEMOTIONS.append(
                 f"{type(self).__name__}[{self.template}] after "
                 f"{self.strikes} strikes")
+            obs_metrics.record_event(
+                "kernel.demote", kernel=type(self).__name__,
+                template=self.template, strikes=self.strikes)
 
     def run(self, graph: DGraph, cluster: Cluster, read, env: "_ShapeEnv",
             masked: bool) -> Dict[int, Any]:
@@ -724,19 +729,30 @@ def _run_graph(graph: DGraph, arrays, env: _ShapeEnv, masked: bool,
             if kern is not None and kern.demoted:
                 kern = None  # struck out: straight to the per-op path
             if kern is not None:
+                sp = (obs_trace.ACTIVE.begin(
+                          "kernel.cluster", cat="backend",
+                          template=cluster.template,
+                          kernel=type(kern).__name__, ops=len(cluster.ops))
+                      if obs_trace.ACTIVE is not None else None)
                 try:
                     if faults.ACTIVE is not None:
                         faults.ACTIVE.check("kernel.cluster",
                                             key=cluster.template)
                     vals.update(kern.run(graph, cluster, read, env, masked))
                     kern.runs += 1
+                    if sp is not None:
+                        sp.end(runs=kern.runs)
                     for op in cluster.ops:
                         for vid in frees_by_oid.get(op.oid, ()):
                             vals.pop(vid, None)
                     continue
                 except CONTROL_EXCEPTIONS:
+                    if sp is not None:
+                        sp.end(error=True)
                     raise
                 except Exception:
+                    if sp is not None:
+                        sp.end(error=True, strikes=kern.strikes + 1)
                     kern.strike()  # conservative fallback to XLA
             for op in cluster.ops:
                 run_op(op)

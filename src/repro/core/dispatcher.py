@@ -47,6 +47,8 @@ import numpy as np
 
 from ..errors import CompileError
 from ..frontends.jaxpr_frontend import TreeSpec, eval_dim
+from ..obs import trace as obs_trace
+from ..obs.clock import CLOCK as _obs_clock
 from .bucketing import BucketPolicy
 from .cache import CompileCache
 from .dhlo import DGraph
@@ -68,10 +70,20 @@ class DispatchMemStats:
     jax calls (on CPU jax may alias a NumPy input zero-copy); instead the
     generated flow drops each staging reference right after the entry
     call, and this object keeps the byte trail.
+
+    On top of the staging-byte trail it carries the dynamic-shape cost
+    accounting (always on — a handful of dict/int ops per call): a
+    per-bucket hit histogram, padded vs *true* element bytes per launch
+    (the padding-waste ratio), and the host-dispatch vs entry-call wall
+    split (the dispatch-overhead timer).  ``as_dict()`` keeps its
+    original staging-only schema (docs capture it); the cost accounting
+    is exposed separately via :meth:`cost_dict`.
     """
 
     __slots__ = ("calls", "last_bytes", "peak_bytes", "total_bytes",
-                 "cap_bytes", "saved_bytes")
+                 "cap_bytes", "saved_bytes", "true_last_bytes",
+                 "true_total_bytes", "host_seconds", "entry_seconds",
+                 "per_bucket")
 
     def __init__(self, cap_bytes: Optional[int] = None) -> None:
         self.calls = 0
@@ -80,6 +92,13 @@ class DispatchMemStats:
         self.total_bytes = 0
         self.cap_bytes = cap_bytes
         self.saved_bytes = 0
+        self.true_last_bytes = 0
+        self.true_total_bytes = 0
+        self.host_seconds = 0.0
+        self.entry_seconds = 0.0
+        # bucket key -> [calls, padded_bytes, true_bytes,
+        #               host_seconds, entry_seconds]
+        self.per_bucket: Dict[Tuple, list] = {}
 
     def note(self, nbytes: int) -> None:
         self.calls += 1
@@ -90,12 +109,57 @@ class DispatchMemStats:
         if self.cap_bytes is not None:
             self.saved_bytes += self.cap_bytes - nbytes
 
+    def note_call(self, key: Tuple, nbytes: int, true_nbytes: int) -> None:
+        """One bucketed launch: padded staging bytes vs true bytes."""
+        self.note(nbytes)
+        self.true_last_bytes = true_nbytes
+        self.true_total_bytes += true_nbytes
+        pb = self.per_bucket.get(key)
+        if pb is None:
+            pb = self.per_bucket[key] = [0, 0, 0, 0.0, 0.0]
+        pb[0] += 1
+        pb[1] += nbytes
+        pb[2] += true_nbytes
+
+    def note_times(self, key: Tuple, host_s: float, entry_s: float) -> None:
+        """Wall split for one launch: generated host flow vs entry call."""
+        self.host_seconds += host_s
+        self.entry_seconds += entry_s
+        pb = self.per_bucket.get(key)
+        if pb is not None:
+            pb[3] += host_s
+            pb[4] += entry_s
+
     def as_dict(self) -> Dict[str, Optional[int]]:
         return {"calls": self.calls, "last_bytes": self.last_bytes,
                 "peak_bytes": self.peak_bytes,
                 "total_bytes": self.total_bytes,
                 "cap_bytes": self.cap_bytes,
                 "saved_bytes": self.saved_bytes}
+
+    def cost_dict(self) -> Dict[str, Any]:
+        """The dynamic-shape cost view: bucket-hit histogram, padding
+        waste, and the host-dispatch / entry-call wall split."""
+        waste = (1.0 - self.true_total_bytes / self.total_bytes) \
+            if self.total_bytes else 0.0
+        return {
+            "calls": self.calls,
+            "bucket_hits": {str(k): v[0]
+                            for k, v in sorted(self.per_bucket.items())},
+            "pad_waste_ratio": round(waste, 4),
+            "padded_bytes": self.total_bytes,
+            "true_bytes": self.true_total_bytes,
+            "host_dispatch_seconds": round(self.host_seconds, 6),
+            "entry_seconds": round(self.entry_seconds, 6),
+            "per_bucket": {
+                str(k): {"calls": v[0], "padded_bytes": v[1],
+                         "true_bytes": v[2],
+                         "pad_waste_ratio": round(
+                             1.0 - v[2] / v[1], 4) if v[1] else 0.0,
+                         "host_dispatch_seconds": round(v[3], 6),
+                         "entry_seconds": round(v[4], 6)}
+                for k, v in sorted(self.per_bucket.items())},
+        }
 
 
 # ------------------------------------------------------------------ lens --
@@ -398,27 +462,34 @@ def generate_dispatch(
     # worst case fixes every symbol at its policy cap, when all are
     # capped — the delta per call is what bucketing saved vs the caps)
     byte_terms: List[str] = []
+    true_terms: List[str] = []
     cap_bytes: Optional[int] = 0
     for ap in lens.args:
         if not (ap.shape is not None and ap.dynamic):
             continue
         itemsize = np.dtype(ap.dtype).itemsize
-        parts, cap_prod = [], itemsize
+        parts, true_parts, cap_prod = [], [], itemsize
         for d in ap.shape:
             if isinstance(d, DynAxis):
                 parts.append(f"key[{d.sym}]")
+                true_parts.append(f"s_{d.sym}")
                 cap = policy.cap(lens.sym_names[d.sym])
                 cap_prod = None if (cap is None or cap_prod is None) \
                     else cap_prod * cap
             else:
                 parts.append(str(d))
+                true_parts.append(str(d))
                 if cap_prod is not None:
                     cap_prod *= d
         byte_terms.append(f"{itemsize}*" + "*".join(parts))
+        true_terms.append(f"{itemsize}*" + "*".join(true_parts))
         cap_bytes = None if (cap_bytes is None or cap_prod is None) \
             else cap_bytes + cap_prod
     mstats = DispatchMemStats(cap_bytes=cap_bytes or None)
     bytes_expr = " + ".join(byte_terms) if byte_terms else "0"
+    # true (unpadded) launch bytes: same terms over the exact sizes —
+    # the padded/true delta per bucket is the padding-waste accounting
+    true_bytes_expr = " + ".join(true_terms) if true_terms else "0"
 
     # --- region-op block: traced control flow inside one artifact ------
     header: List[str] = []
@@ -451,7 +522,13 @@ def generate_dispatch(
         "_esc": escalation_threshold,
         "_cache": cache,
         "_zero_lens": np.zeros((1,), np.int32),
+        "_clk": _obs_clock,
+        "_trace": obs_trace,
+        "_name": lens.name,
     }
+
+    # dispatch-overhead timer (always on): host flow vs entry call
+    w("    _t0 = _clk()")
 
     # --- dynamic-size extraction: one site per symbol, straight-line ---
     for i in range(n_syms):
@@ -526,11 +603,25 @@ def generate_dispatch(
         if sharding is not None:
             ns["_put_exact"] = sharding.put_exact
 
-    w(f"    _mstats.note({bytes_expr})")
+    w(f"    _pb = {bytes_expr}")
+    w(f"    _tb = {true_bytes_expr}")
+    w("    _mstats.note_call(key, _pb, _tb)")
     ns["_mstats"] = mstats
     w("    entry = _get(('bucket', _fp, key))")
+    # span hooks are emitted unconditionally (the source is identical
+    # whether tracing is on or off); the runtime guard is one attribute
+    # load + `is None` test, the ft/faults.py zero-overhead discipline
+    w("    _tr = _trace.ACTIVE")
+    w("    _sp = _tr.begin('dispatch', cat='dispatch', artifact=_name, "
+      "bucket=key, pad_bytes=_pb - _tb, cache_hit=entry is not None) "
+      "if _tr is not None else None")
     w("    if entry is None:")
-    w("        entry = _compile(key)")
+    w("        try:")
+    w("            entry = _compile(key)")
+    w("        except BaseException:")
+    w("            if _sp is not None:")
+    w("                _sp.end(error=True)")
+    w("            raise")
     if lens.pass_lens:
         if n_syms:
             w("    lens = _np.array(["
@@ -610,13 +701,26 @@ def generate_dispatch(
         for var in staged_vars:
             w(f"    {var} = None  # plan: free staging")
 
+    def _timed_call():
+        w("    _t1 = _clk()")
+        w("    try:")
+        w(f"        outs = {call}")
+        w("    except BaseException:")
+        w("        if _sp is not None:")
+        w("            _sp.end(error=True)")
+        w("        raise")
+        w("    _t2 = _clk()")
+        w("    _mstats.note_times(key, _t1 - _t0, _t2 - _t1)")
+        w("    if _sp is not None:")
+        w("        _sp.end(entry_seconds=_t2 - _t1)")
+
     # --- output recovery: slice back to true shapes (dhlo only) --------
     if lens.outputs is None:
-        w(f"    outs = {call}")
+        _timed_call()
         _free_staging()
         w("    return outs")
     else:
-        w(f"    outs = {call}")
+        _timed_call()
         _free_staging()
         out_exprs = []
         for oi, axes in enumerate(lens.outputs):

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .buffers import CachedArena, plan_buffers
 from .codegen import REGION_OPS, _ShapeEnv, emit_region_op
 from .dhlo import DGraph, DValue
@@ -75,8 +77,27 @@ class NimbleVM:
         self._frees = self.buffer_plan.frees_after(graph) \
             if memory_planning else {}
         self._reuse_lines = sum(self.buffer_plan.reuse_counts.values())
+        obs_metrics.register_collector("vm", self._obs_collect)
+
+    def _obs_collect(self) -> Dict[str, Any]:
+        """Pull collector for ``disc.observe()["vm"]``."""
+        s = self.stats
+        return {"calls": s.calls, "op_dispatches": s.op_dispatches,
+                "interp_seconds": round(s.interp_seconds, 6),
+                "planned_peak_bytes": s.planned_peak_bytes,
+                "naive_peak_bytes": s.naive_peak_bytes, "reuses": s.reuses}
 
     def __call__(self, *arrays):
+        sp = (obs_trace.ACTIVE.begin("vm.interp", cat="vm",
+                                     graph=self.graph.name)
+              if obs_trace.ACTIVE is not None else None)
+        try:
+            return self._interp(arrays)
+        finally:
+            if sp is not None:
+                sp.end(op_dispatches=self.stats.op_dispatches)
+
+    def _interp(self, arrays):
         t0 = time.perf_counter()
         g = self.graph
         # interpret shape bindings

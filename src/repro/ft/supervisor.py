@@ -23,22 +23,33 @@ from __future__ import annotations
 
 import json
 import pathlib
-import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import faults
+from ..obs.clock import CLOCK
 
 __all__ = ["HeartbeatMonitor", "ElasticPlan", "Supervisor"]
 
 
 class HeartbeatMonitor:
+    """Per-host last-seen timestamps against a monotonic deadline.
+
+    Timestamps default to the shared ``obs`` clock (``perf_counter`` —
+    the old ``time.time()`` wall clock jumps under NTP adjustment, which
+    could declare every host dead or resurrect one).  Pass ``clock`` (or
+    explicit ``t=``/``now=`` values) to drive time deterministically in
+    tests.
+    """
+
     def __init__(self, hosts: Sequence[str], *, deadline_s: float = 60.0,
-                 straggler_factor: float = 2.0):
+                 straggler_factor: float = 2.0,
+                 clock: Optional[Callable[[], float]] = None):
         self.deadline_s = deadline_s
         self.straggler_factor = straggler_factor
+        self._clock: Callable[[], float] = clock or CLOCK
         self.last_seen: Dict[str, float] = {h: 0.0 for h in hosts}
         self.step_times: Dict[str, List[float]] = {h: [] for h in hosts}
 
@@ -47,7 +58,7 @@ class HeartbeatMonitor:
         if faults.ACTIVE is not None and faults.ACTIVE.suppress(
                 "ft.heartbeat", key=host):
             return          # injected heartbeat loss: the beat is dropped
-        self.last_seen[host] = time.time() if t is None else t
+        self.last_seen[host] = self._clock() if t is None else t
         if step_seconds is not None:
             window = self.step_times[host]
             window.append(step_seconds)
@@ -55,7 +66,7 @@ class HeartbeatMonitor:
                 window.pop(0)
 
     def dead_hosts(self, *, now: Optional[float] = None) -> List[str]:
-        now = time.time() if now is None else now
+        now = self._clock() if now is None else now
         return [h for h, seen in self.last_seen.items()
                 if now - seen > self.deadline_s]
 
@@ -104,10 +115,12 @@ class Supervisor:
     """Journals steps; on failure, emits (restore_step, ElasticPlan)."""
 
     def __init__(self, workdir, *, hosts: Sequence[str], model_axis: int,
-                 deadline_s: float = 60.0):
+                 deadline_s: float = 60.0,
+                 clock: Optional[Callable[[], float]] = None):
         self.workdir = pathlib.Path(workdir)
         self.workdir.mkdir(parents=True, exist_ok=True)
-        self.monitor = HeartbeatMonitor(hosts, deadline_s=deadline_s)
+        self.monitor = HeartbeatMonitor(hosts, deadline_s=deadline_s,
+                                        clock=clock)
         self.model_axis = model_axis
         self.journal_path = self.workdir / "supervisor_journal.json"
         self.events: List[Dict] = []

@@ -18,7 +18,6 @@ Results land in reports/dryrun/<mesh>/<arch>__<cell>.json plus stdout.
 import argparse
 import json
 import pathlib
-import time
 import traceback
 from functools import partial
 
@@ -28,6 +27,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCH_IDS, get_config
+from ..obs.clock import CLOCK as _clock
 from ..dist.context import use_mesh
 from ..dist.spmd import fit_spec as _fit_spec
 from ..models.registry import get_model
@@ -83,7 +83,7 @@ def lower_cell(arch_id: str, cell_name: str, *, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "2x16x16" if multi_pod else "16x16"
     chips = int(np.prod(list(mesh.shape.values())))
-    t0 = time.time()
+    t0 = _clock()
 
     with use_mesh(mesh):
         batch_sds = input_specs(cfg, cell)
@@ -134,9 +134,9 @@ def lower_cell(arch_id: str, cell_name: str, *, multi_pod: bool,
                           donate_argnums=(1,))
             lowered = jfn.lower(params_sds, cache_sds, batch_sds)
 
-        t_lower = time.time() - t0
+        t_lower = _clock() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = _clock() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     terms = analyze_compiled(compiled, arch=arch_id, cell=cell_name,

@@ -7,12 +7,12 @@
 """
 import argparse
 import dataclasses
-import time
 
 import jax
 
 from ..api import ServeConfig, ServeEngine
 from ..configs import ARCH_IDS, get_config
+from ..obs.clock import CLOCK as _clock
 from ..data.pipeline import VarLenRequestStream
 from ..models.registry import get_model
 
@@ -43,10 +43,10 @@ def main():
     stream = VarLenRequestStream(vocab=cfg.vocab, min_len=4,
                                  max_len=args.max_seq // 2, seed=0)
     reqs = stream.sample(args.requests)
-    t0 = time.time()
+    t0 = _clock()
     engine.submit(reqs)
     done = engine.run_until_done()
-    dt = time.time() - t0
+    dt = _clock() - t0
     print(f"{len(done)}/{args.requests} requests in {dt:.1f}s; "
           f"{engine.stats['tokens_generated']} tokens; "
           f"prefill compiles {engine.stats['prefill_compiles']}")

@@ -14,7 +14,6 @@ supervisor heartbeats, optional gradient compression.
 import argparse
 import dataclasses
 import pathlib
-import time
 
 import jax
 import numpy as np
@@ -25,6 +24,7 @@ from ..data.pipeline import SyntheticLMStream
 from ..dist.context import use_mesh
 from ..ft.supervisor import Supervisor
 from ..models.registry import get_model
+from ..obs.clock import CLOCK as _clock
 from ..train.step import TrainConfig, make_train_step, train_state_init
 
 
@@ -73,7 +73,7 @@ def main():
 
     step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0,))
     for step in range(start, args.steps):
-        t0 = time.time()
+        t0 = _clock()
         batch = {k: jax.numpy.asarray(v)
                  for k, v in stream.batch_at(step).items()}
         if cfg.family == "encdec":
@@ -82,7 +82,7 @@ def main():
                 rng.randn(args.batch, cfg.encoder_len, cfg.d_model),
                 jax.numpy.float32)
         state, metrics = step_fn(state, batch)
-        dt = time.time() - t0
+        dt = _clock() - t0
         sup.record_step(step, "host0", dt)
         if step % 10 == 0:
             print(f"step {step:4d}  loss {float(metrics['loss']):.4f}  "

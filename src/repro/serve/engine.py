@@ -103,6 +103,9 @@ from ..ft import faults
 from ..ft.supervisor import HeartbeatMonitor
 from ..models.registry import (Model, cache_batch_axis, replay_prefill,
                                row_keep_mask)
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
+from ..obs.clock import CLOCK as _WALL
 from .paging import BlockAllocator, PagedKVPool, blocks_for, pick_victim
 from .policies import get_admission_policy
 from .speculative import get_proposer
@@ -330,6 +333,7 @@ class ServeEngine:
         self._recomputes: Dict[int, int] = {}   # rid -> preempt count
         self._deadlines: Dict[int, float] = {}  # rid -> absolute deadline
         self._clock = time.monotonic            # injectable (tests/docs)
+        self._wall = _WALL      # perf timing (busy_s, decode gaps) only
         self._retry = scfg.launch_retry or DEFAULT_RETRY
         self._kdem0 = len(KERNEL_DEMOTIONS)
         self._replica_alive = [True] * scfg.replicas
@@ -418,13 +422,12 @@ class ServeEngine:
                 self._verify_paged if self.paged else self._verify_call,
                 options=CompileOptions(pipeline="jit", name="verify",
                                        cache=self.compile_cache))
-        self.stats: Dict[str, Any] = {k: 0 for k in STATS_KEYS}
-        self.stats["tokens_per_sec"] = 0.0
-        self.stats["max_decode_gap_s"] = 0.0
-        self.stats["kv_pool_occupancy"] = 0.0
-        self.stats["kv_peak_occupancy"] = 0.0
-        self.stats["per_replica"] = [dict(c) for c in self._rep_counters]
+        self.stats: Dict[str, Any] = self._zero_stats()
         self._refresh_stats()
+        obs_metrics.register_collector("serve", self._obs_stats,
+                                       name="engine")
+        obs_metrics.register_collector("health", self._obs_health,
+                                       name="engine")
 
     def _init_mesh(self, model: Model) -> None:
         """Shard params + KV cache onto the mesh per the profile: params
@@ -682,6 +685,11 @@ class ServeEngine:
             self._aseq += 1
             self.lens[i] = 0
             self._rep_counters[rep]["admitted"] += 1
+            if obs_trace.ACTIVE is not None:
+                obs_trace.ACTIVE.async_begin(
+                    "request", id=req.rid, replica=rep, slot=i,
+                    prompt_len=int(toks.shape[0]),
+                    resumed=bool(carried))
         self.queue = [r for r in self.queue if r.rid not in taken]
 
     # -------------------------------------------------------- fault plane --
@@ -698,6 +706,9 @@ class ServeEngine:
         self.failed[rid] = reason
         self.stats["failed_requests"] += 1
         self._forget(rid)
+        if obs_trace.ACTIVE is not None:
+            obs_trace.ACTIVE.async_end("request", id=rid, failed=True,
+                                       reason=reason)
 
     def _fail_slot(self, i: int, reason: str) -> None:
         """Fail the request occupying slot ``i`` and free the slot."""
@@ -714,23 +725,34 @@ class ServeEngine:
         capped exponential backoff; a permanent failure raises a
         classified :class:`~repro.errors.DiscError` for the caller to
         fail exactly the requests in the launch group."""
+        sp = (obs_trace.ACTIVE.begin(f"serve.{kind}", cat="serve")
+              if obs_trace.ACTIVE is not None else None)
         attempt = 0
-        while True:
-            try:
-                if faults.ACTIVE is not None:
-                    faults.ACTIVE.check("serve.launch", key=kind)
-                return fn(*args)
-            except CONTROL_EXCEPTIONS:
-                raise
-            except DiscError as e:   # already classified (e.g. a
-                err = e              # CompileError out of dispatch)
-            except Exception as e:  # noqa: BLE001 — classified below
-                err = wrap_launch_error(e, kind)
-            if not err.transient or attempt >= self._retry.max_retries:
-                raise err
-            self.stats["retries"] += 1
-            time.sleep(self._retry.delay(attempt))
-            attempt += 1
+        ok = False
+        try:
+            while True:
+                try:
+                    if faults.ACTIVE is not None:
+                        faults.ACTIVE.check("serve.launch", key=kind)
+                    out = fn(*args)
+                    ok = True
+                    return out
+                except CONTROL_EXCEPTIONS:
+                    raise
+                except DiscError as e:   # already classified (e.g. a
+                    err = e              # CompileError out of dispatch)
+                except Exception as e:  # noqa: BLE001 — classified below
+                    err = wrap_launch_error(e, kind)
+                if not err.transient or attempt >= self._retry.max_retries:
+                    raise err
+                self.stats["retries"] += 1
+                obs_metrics.record_event("serve.retry", kind=kind,
+                                         attempt=attempt + 1)
+                time.sleep(self._retry.delay(attempt))
+                attempt += 1
+        finally:
+            if sp is not None:
+                sp.end(attempts=attempt + 1, error=not ok)
 
     def heartbeat(self, replica: int, *, t: Optional[float] = None) -> None:
         """Record a liveness beat for ``replica`` (requires
@@ -755,11 +777,13 @@ class ServeEngine:
             if is_dead and self._replica_alive[r]:
                 self._replica_alive[r] = False
                 self.stats["replica_drains"] += 1
+                obs_metrics.record_event("replica.drain", replica=r)
                 for i in range(r * mb, (r + 1) * mb):
                     if self.slots[i] is not None:
                         self._preempt(i, drain=True)
             elif not is_dead and not self._replica_alive[r]:
                 self._replica_alive[r] = True   # restored on recovery
+                obs_metrics.record_event("replica.restore", replica=r)
 
     def _check_deadlines(self) -> None:
         """Fail queued and in-slot requests whose deadline passed."""
@@ -772,11 +796,13 @@ class ServeEngine:
         for i, s in enumerate(self.slots):
             if s is not None and s.rid in expired:
                 self.stats["deadline_expirations"] += 1
+                obs_metrics.record_event("deadline.expire", rid=s.rid)
                 self._fail_slot(i, f"DeadlineExceeded: deadline_s passed "
                                    f"after {len(s.generated)} tokens")
         still = [r for r in self.queue if r.rid in expired]
         for r in still:
             self.stats["deadline_expirations"] += 1
+            obs_metrics.record_event("deadline.expire", rid=r.rid)
             self._fail_request(r.rid, "DeadlineExceeded: deadline_s "
                                       "passed before completion")
         self.queue = [r for r in self.queue if r.rid not in expired]
@@ -811,6 +837,8 @@ class ServeEngine:
             if not drain:
                 self.stats["kv_preemptions"] += 1
                 self.stats["kv_evictions"] += freed
+        obs_metrics.record_event("preempt", rid=slot.rid, slot=i,
+                                 drain=drain)
         toks = slot.tokens
         if slot.generated:
             toks = np.concatenate(
@@ -968,7 +996,7 @@ class ServeEngine:
             self._decode_plain(active_idx)
 
     def _mark_decode_launch(self) -> None:
-        now = time.monotonic()
+        now = self._wall()
         if self._last_decode_t is not None:
             self.stats["max_decode_gap_s"] = max(
                 self.stats["max_decode_gap_s"], now - self._last_decode_t)
@@ -1121,6 +1149,9 @@ class ServeEngine:
             self.done[slot.rid] = slot.generated
             self.stats["requests_completed"] += 1
             self._forget(slot.rid)
+            if obs_trace.ACTIVE is not None:
+                obs_trace.ACTIVE.async_end("request", id=slot.rid,
+                                           tokens=len(slot.generated))
             self._rep_counters[self._replica_of(i)][
                 "requests_completed"] += 1
             if self.paged:
@@ -1133,7 +1164,7 @@ class ServeEngine:
         """One engine iteration: admit, then either a prefill launch or a
         decode step — the ``prefill_interleave`` budget decides which when
         both kinds of work are pending."""
-        t0 = time.monotonic()
+        t0 = self._wall()
         if self.monitor is not None:
             self._check_replicas()
         self._check_deadlines()
@@ -1151,7 +1182,7 @@ class ServeEngine:
         if not any(s is not None and s.state == "decode"
                    for s in self.slots):
             self._last_decode_t = None  # decode idle: gaps don't count
-        self._busy_s += time.monotonic() - t0
+        self._busy_s += self._wall() - t0
         self._refresh_stats()
 
     def run_until_done(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
@@ -1172,6 +1203,12 @@ class ServeEngine:
         with their reasons, the fault counters, compile-cache
         retry/escalation-failure totals, and any kernel/backend
         demotions journaled during this engine's run."""
+        return {"health": self._obs_health(), "stats": dict(self.stats),
+                "compiles": self.compile_counts()}
+
+    def _obs_health(self) -> Dict[str, Any]:
+        """The ``report()["health"]`` payload — also registered as the
+        pull collector behind ``disc.observe()["health"]["engine"]``."""
         now = self._clock()
         replicas = []
         for r, alive in enumerate(self._replica_alive):
@@ -1181,7 +1218,7 @@ class ServeEngine:
                 entry["last_beat_age_s"] = round(now - seen, 3)
             replicas.append(entry)
         cs = self.compile_cache.stats
-        health = {
+        return {
             "alive_replicas": int(sum(self._replica_alive)),
             "replicas": replicas,
             "failed": {rid: self.failed[rid]
@@ -1193,8 +1230,14 @@ class ServeEngine:
                         "escalation_failures": cs.escalation_failures},
             "kernel_demotions": list(KERNEL_DEMOTIONS[self._kdem0:]),
         }
-        return {"health": health, "stats": dict(self.stats),
-                "compiles": self.compile_counts()}
+
+    def _obs_stats(self) -> Dict[str, Any]:
+        """Pull collector behind ``disc.observe()["serve"]["engine"]`` —
+        the same counters as :attr:`stats`, refreshed at snapshot time."""
+        self._refresh_stats()
+        out = dict(self.stats)
+        out["per_replica"] = [dict(c) for c in self.stats["per_replica"]]
+        return out
 
     def compile_counts(self) -> Dict[str, Dict[str, int]]:
         """Per-artifact compile counts (``{"bucket", "exact", "total"}``
@@ -1213,16 +1256,29 @@ class ServeEngine:
             out["verify"] = counts(self._verify_fn)
         return out
 
+    def _zero_stats(self) -> Dict[str, Any]:
+        """A typed zero value for every :data:`STATS_KEYS` entry: plain
+        counters are ints, rate/occupancy keys are floats, and
+        ``per_replica`` is a fresh list of per-replica counter dicts —
+        never the scalar 0 a uniform ``= 0`` sweep would leave behind."""
+        z: Dict[str, Any] = {k: 0 for k in STATS_KEYS}
+        for k in ("tokens_per_sec", "max_decode_gap_s",
+                  "kv_pool_occupancy", "kv_peak_occupancy"):
+            z[k] = 0.0
+        z["per_replica"] = [
+            {"admitted": 0, "tokens_generated": 0,
+             "requests_completed": 0, "occupied_slots": 0}
+            for _ in range(self.scfg.replicas)]
+        return z
+
     def reset_stats(self) -> None:
-        """Zero the per-run counters (benchmark warmup boundary).
-        Artifact-lifetime counters — compiles, escalations, bucket pairs,
-        pool capacity/in-use — are re-derived and keep accumulating."""
-        for k in STATS_KEYS:
-            self.stats[k] = 0
-        self.stats["tokens_per_sec"] = 0.0
-        self.stats["max_decode_gap_s"] = 0.0
-        self.stats["kv_pool_occupancy"] = 0.0
-        self.stats["kv_peak_occupancy"] = 0.0
+        """Zero the per-run counters (benchmark warmup boundary), each to
+        its documented **type** via :meth:`_zero_stats` — the old uniform
+        ``= 0`` sweep clobbered ``per_replica``'s list-of-dicts to an
+        int.  Artifact-lifetime counters — compiles, escalations, bucket
+        pairs, pool capacity/in-use — are re-derived and keep
+        accumulating."""
+        self.stats.update(self._zero_stats())
         self._rep_counters = [
             {"admitted": 0, "tokens_generated": 0, "requests_completed": 0}
             for _ in range(self.scfg.replicas)]
